@@ -1,0 +1,54 @@
+"""Paper Figs 4 & 6 analogue: DPGMM / DPMNMM running time across (N, d, K).
+
+The paper sweeps N in 1e3..1e6, d in 2..128, K in 4..32 over 100 iters x 10
+repeats; a single CPU container gets a reduced-but-representative slice
+(full sweep via --full). Reports per-iteration time and final NMI/K so both
+the speed (Figs 4, 6) and accuracy (Figs 5, 7) tables come from one run.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Table
+from repro.configs import DPMMConfig
+from repro.core.sampler import DPMM
+from repro.data.synthetic import generate_gmm, generate_mnmm
+
+GAUSS_GRID = [            # (N, d, K)
+    (1_000, 2, 4), (10_000, 2, 8), (10_000, 16, 8),
+    (50_000, 2, 10), (50_000, 32, 8), (100_000, 8, 16),
+]
+MULT_GRID = [
+    (1_000, 8, 4), (10_000, 32, 8), (50_000, 64, 8),
+]
+FULL_GAUSS_GRID = [(n, d, k) for n in (10**3, 10**4, 10**5, 10**6)
+                   for d in (2, 8, 32, 128) for k in (4, 16)]
+
+
+def run(full: bool = False, iters: int = 40, out_dir: str = "experiments"):
+    t = Table("gibbs", ["component", "N", "d", "K_true", "iters",
+                        "ms_per_iter", "K_found", "nmi"])
+    grid = FULL_GAUSS_GRID if full else GAUSS_GRID
+    for n, d, k in grid:
+        x, gt = generate_gmm(n, d, k, seed=0, sep=8.0)
+        cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=64, burnout=5)
+        r = DPMM(cfg).fit(x)
+        ms = float(np.mean(r.iter_times_s[1:]) * 1e3)
+        t.add("gaussian", n, d, k, iters, f"{ms:.1f}", r.k,
+              f"{r.nmi(gt):.3f}")
+    for n, d, k in (MULT_GRID if not full else
+                    [(n, d, k) for n in (10**3, 10**4, 10**5)
+                     for d in (8, 32, 128) for k in (4, 16) if d >= k]):
+        x, gt = generate_mnmm(n, d, k, seed=0)
+        cfg = DPMMConfig(component="multinomial", alpha=10.0, iters=iters,
+                         k_max=64, burnout=5)
+        r = DPMM(cfg).fit(x)
+        ms = float(np.mean(r.iter_times_s[1:]) * 1e3)
+        t.add("multinomial", n, d, k, iters, f"{ms:.1f}", r.k,
+              f"{r.nmi(gt):.3f}")
+    t.emit_csv(f"{out_dir}/bench_gibbs.csv")
+    return t
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Aggregates the dry-run JSONs into the §Roofline table (per arch x shape
+x mesh: three terms, bottleneck, useful-compute ratio). Run AFTER
+``python -m repro.launch.dryrun --all [--multi-pod]``; exits gracefully
+when no artifacts exist yet.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import Table
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(out_dir: str = "experiments"):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    t = Table("roofline", ["arch", "shape", "mesh", "compute_ms",
+                           "memory_ms", "collective_ms", "bottleneck",
+                           "useful", "peak_GiB"])
+    if not files:
+        print("  (no dry-run artifacts found — run "
+              "`python -m repro.launch.dryrun --all` first)")
+        return t
+    for f in files:
+        with open(f) as fh:
+            r = json.load(fh)
+        t.add(r["arch"], r["shape"], r["mesh"],
+              f"{r['t_compute']*1e3:.2f}", f"{r['t_memory']*1e3:.2f}",
+              f"{r['t_collective']*1e3:.2f}", r["bottleneck"],
+              f"{r['useful_ratio']:.3f}",
+              f"{r.get('mem_peak', 0)/2**30:.2f}")
+    t.emit_csv(f"{out_dir}/bench_roofline.csv")
+    return t
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,59 @@
+"""Paper §4.4 complexity claim (C4): per-iteration time is O(N * K * T)
+with T = d^2 (Gaussian) — verified by scaling one variable at a time —
+and §4.5 memory O(d * N). Also the weak-scaling distribution claim: time
+per iteration vs device count at fixed work per device.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+from benchmarks.common import Table
+from repro.configs import DPMMConfig
+from repro.core.distributed import make_data_mesh
+from repro.core.sampler import DPMM
+from repro.data.synthetic import generate_gmm
+
+
+def _ms_per_iter(n, d, k_init, iters=12, mesh=None, k_max=32):
+    x, _ = generate_gmm(n, d, max(k_init, 2), seed=0, sep=8.0)
+    cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=k_max,
+                     burnout=iters + 1,              # pure Gibbs: isolate N*K*T
+                     init_clusters=k_init)
+    r = DPMM(cfg, mesh=mesh).fit(x)
+    return float(np.mean(r.iter_times_s[2:]) * 1e3), r
+
+
+def run(out_dir: str = "experiments"):
+    t = Table("scaling", ["axis", "value", "ms_per_iter", "ratio_vs_prev"])
+    prev = None
+    for n in (10_000, 20_000, 40_000, 80_000):        # expect ~linear
+        ms, _ = _ms_per_iter(n, 8, 8)
+        t.add("N", n, f"{ms:.2f}", f"{ms/prev:.2f}" if prev else "-")
+        prev = ms
+    prev = None
+    for d in (4, 8, 16, 32):                          # expect ~quadratic (T=d^2)
+        ms, _ = _ms_per_iter(20_000, d, 8)
+        t.add("d", d, f"{ms:.2f}", f"{ms/prev:.2f}" if prev else "-")
+        prev = ms
+    prev = None
+    for k in (4, 8, 16, 32):                          # expect ~linear
+        ms, _ = _ms_per_iter(20_000, 8, k, k_max=64)
+        t.add("K", k, f"{ms:.2f}", f"{ms/prev:.2f}" if prev else "-")
+        prev = ms
+    # weak scaling across devices (fixed per-device N)
+    n_dev = jax.device_count()
+    per_dev = 20_000
+    prev = None
+    for nd in sorted({1, max(n_dev // 2, 1), n_dev}):
+        ms, _ = _ms_per_iter(per_dev * nd, 8, 8, mesh=make_data_mesh(nd))
+        t.add(f"devices(weak,{per_dev}/dev)", nd, f"{ms:.2f}",
+              f"{ms/prev:.2f}" if prev else "-")
+        prev = ms
+    t.emit_csv(f"{out_dir}/bench_scaling.csv")
+    return t
+
+
+if __name__ == "__main__":
+    run()

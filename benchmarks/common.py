@@ -1,0 +1,43 @@
+"""Shared benchmark plumbing: timed fit wrappers + CSV emit."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall seconds of fn(*args) after warmup (results blocked on)."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+class Table:
+    """Collects rows, prints aligned + writes CSV."""
+
+    def __init__(self, name: str, columns: List[str]):
+        self.name = name
+        self.columns = columns
+        self.rows: List[List] = []
+
+    def add(self, *row):
+        assert len(row) == len(self.columns)
+        self.rows.append(list(row))
+        print("  " + "  ".join(f"{v}" for v in row), flush=True)
+
+    def emit_csv(self, path: str):
+        import os
+        os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(",".join(self.columns) + "\n")
+            for row in self.rows:
+                f.write(",".join(str(v) for v in row) + "\n")
+        print(f"[{self.name}] wrote {path}")

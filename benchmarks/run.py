@@ -1,0 +1,47 @@
+"""Benchmark entry point — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full]
+
+Sections:
+  gibbs      — Figs 4-7: DPGMM/DPMNMM time + NMI across (N, d, K)
+  scaling    — §4.4/§4.5: O(N K d^2) runtime scaling + weak scaling
+  kernels    — §4.2: two-kernel auto-selection crossover (C5)
+  real_data  — Figs 8-9: real-shaped datasets (structural analogue)
+  roofline   — §Roofline table from the dry-run artifacts
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sweeps (hours)")
+    ap.add_argument("--only", default="",
+                    help="comma list: gibbs,scaling,kernels,real_data,"
+                         "roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from benchmarks import (bench_gibbs, bench_kernels, bench_real_data,
+                            bench_roofline, bench_scaling)
+    sections = [
+        ("gibbs", lambda: bench_gibbs.run(full=args.full)),
+        ("scaling", bench_scaling.run),
+        ("kernels", bench_kernels.run),
+        ("real_data", lambda: bench_real_data.run(quick=not args.full)),
+        ("roofline", bench_roofline.run),
+    ]
+    for name, fn in sections:
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} " + "=" * (68 - len(name)))
+        t0 = time.time()
+        fn()
+        print(f"=== {name} done in {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

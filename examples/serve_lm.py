@@ -1,0 +1,50 @@
+"""Serving example: batched cached decoding through the serving engine —
+the decode-shape path the dry-run lowers at 32k/524k, at container scale.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import INPUT_SHAPES, smoke_config
+from repro.launch.mesh import make_host_mesh
+from repro.models import transformer
+from repro.serve.engine import Generator
+
+
+def main():
+    cfg = smoke_config("gemma2-9b")           # local+global pattern + caps
+    shape = dataclasses.replace(INPUT_SHAPES["decode_32k"], seq_len=256,
+                                global_batch=4)
+    mesh = make_host_mesh(data=1, model=1)
+    params = transformer.init_params(jax.random.key(0), cfg)
+    gen = Generator(mesh, cfg, shape, params, temperature=0.8)
+
+    prompts = jax.random.randint(jax.random.key(1), (4, 8), 0,
+                                 cfg.vocab_size)
+    print(f"{cfg.name}: batch={prompts.shape[0]} prompt_len=8, "
+          f"cache_len={shape.seq_len}")
+    t0 = time.time()
+    out = gen.generate(prompts, steps=48, seed=0)
+    dt = time.time() - t0
+    n_new = 4 * 48
+    print(f"generated {out.shape} in {dt:.1f}s "
+          f"({n_new/dt:.1f} tok/s batched)")
+    for b in range(2):
+        print(f"  seq {b}: {out[b, :20].tolist()} ...")
+    # greedy rerun determinism
+    gen0 = Generator(mesh, cfg, shape, params, temperature=0.0)
+    a = gen0.generate(prompts, steps=16)
+    b = gen0.generate(prompts, steps=16)
+    assert bool((a == b).all()), "greedy decode must be deterministic"
+    print("greedy decode deterministic ✓")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~100M-param granite-family model for a few
+hundred steps on the synthetic corpus and watch the loss drop — the
+'train a ~100M model' deliverable, runnable on this CPU container.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+import dataclasses
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import TrainConfig, get_config
+from repro.data.pipeline import lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import ShardingPolicy
+from repro.train import checkpoint, init_train_state, make_train_step
+
+
+def hundred_m_config():
+    """granite-8b family scaled to ~100M params (12 layers, d=768)."""
+    base = get_config("granite-8b")
+    return dataclasses.replace(
+        base, name="granite-100m", num_layers=12, d_model=768, num_heads=12,
+        num_kv_heads=4, head_dim=64, d_ff=2048, vocab_size=8192)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--save", default="")
+    args = ap.parse_args()
+
+    cfg = hundred_m_config()
+    tcfg = TrainConfig(lr=6e-4, warmup_steps=30, total_steps=args.steps,
+                       loss_chunk=128)
+    mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    policy = ShardingPolicy(
+        batch_sharded=args.batch % mesh.shape["data"] == 0,
+        seq_shard=False, mesh_axes=tuple(mesh.axis_names),
+        mesh_sizes=tuple(mesh.shape.items()))
+
+    state = init_train_state(jax.random.key(0), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"{cfg.name}: {n_params/1e6:.1f}M params, "
+          f"{len(jax.devices())} device(s), {args.steps} steps")
+
+    step_fn = make_train_step(mesh, cfg, tcfg, policy)
+    gen = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=0)
+    t0, losses = time.time(), []
+    for step in range(args.steps):
+        toks, tgts = next(gen)
+        state, m = step_fn(state, {"tokens": jnp.asarray(toks),
+                                   "targets": jnp.asarray(tgts)})
+        losses.append(float(m["loss"]))
+        if step % 20 == 0 or step == args.steps - 1:
+            tok_s = args.batch * args.seq * (step + 1) / (time.time() - t0)
+            print(f"step {step:4d} loss={losses[-1]:.4f} "
+                  f"acc={float(m['accuracy']):.3f} "
+                  f"lr={float(m['lr']):.2e} ({tok_s:,.0f} tok/s)")
+    print(f"\nloss: {np.mean(losses[:10]):.3f} -> {np.mean(losses[-10:]):.3f}"
+          f" over {args.steps} steps")
+    if args.save:
+        checkpoint.save(args.save, state.params)
+        print(f"saved {args.save}")
+
+
+if __name__ == "__main__":
+    main()

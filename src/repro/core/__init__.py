@@ -1,0 +1,4 @@
+# The paper's primary contribution: distributed sub-cluster split/merge
+# DPMM sampling. See DESIGN.md §2-§6 for the TPU adaptation.
+from repro.core.sampler import DPMM, FitResult, dpmm_step  # noqa: F401
+from repro.core.state import DPMMState  # noqa: F401

@@ -1,0 +1,58 @@
+"""Distribution plumbing for the DPMM sampler.
+
+Mirrors the paper's §4.3: points, labels, and sub-labels live on their
+owning shard ('the data never moves'); per-cluster parameters and
+sufficient statistics are replicated, with a single psum per suff-stat
+pass. Works on any mesh whose data axes partition N; the ``model`` axis
+(when present and ``shard_features`` is on) shards the feature dimension of
+the multinomial likelihood (DESIGN §2).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def make_data_mesh(num_devices: Optional[int] = None) -> Mesh:
+    """1-D mesh over all (or the first n) local devices, axis 'data'."""
+    devs = jax.devices()
+    if num_devices is not None:
+        devs = devs[:num_devices]
+    return Mesh(np.array(devs), axis_names=("data",))
+
+
+def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
+    """Axes that partition points: every axis except 'model'."""
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def pad_to_multiple(x: np.ndarray, multiple: int):
+    """Pad axis 0 to a multiple; returns (padded, valid_mask)."""
+    n = x.shape[0]
+    target = int(math.ceil(n / multiple) * multiple)
+    valid = np.zeros((target,), np.float32)
+    valid[:n] = 1.0
+    if target == n:
+        return x, valid
+    pad = np.zeros((target - n,) + x.shape[1:], x.dtype)
+    return np.concatenate([x, pad], axis=0), valid
+
+
+def shard_points(mesh: Mesh, x: np.ndarray, shard_features: bool = False):
+    """Place (N, d) points on the mesh; returns (x_sharded, valid_sharded)."""
+    axes = data_axes_of(mesh)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    x_p, valid = pad_to_multiple(np.asarray(x), n_shards)
+    feat = "model" if (shard_features and "model" in mesh.axis_names) else None
+    xs = jax.device_put(x_p, NamedSharding(mesh, P(axes, feat)))
+    vs = jax.device_put(valid, NamedSharding(mesh, P(axes)))
+    return xs, vs
+
+
+def replicated(mesh: Mesh, tree):
+    return jax.device_put(tree, NamedSharding(mesh, P()))

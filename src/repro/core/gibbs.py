@@ -1,0 +1,182 @@
+"""Restricted Gibbs sweep (paper §4.1 steps a-f), shard_map-ready.
+
+The sweep runs *inside* ``shard_map``: points/labels are local shards, all
+per-cluster quantities are replicated. The only cross-device communication
+is the ``psum`` of sufficient statistics at the end of the sweep — the
+paper's 'we never transfer data; only sufficient statistics and parameters'
+property (§4.3).
+
+Per-point randomness derives from ``fold_in(key, global_index)`` so chains
+are bitwise identical under any sharding (DESIGN §2, assumption 3).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.state import DPMMState
+
+NEG_INF = -1e30
+
+
+def psum_tree(tree: Any, axes: Tuple[str, ...]):
+    if not axes:
+        return tree
+    return jax.tree.map(lambda a: jax.lax.psum(a, axes), tree)
+
+
+def global_indices(n_local: int, axes: Tuple[str, ...]) -> jax.Array:
+    """Global point indices of this shard (0..N-1 ordering over the mesh)."""
+    base = jnp.arange(n_local, dtype=jnp.uint32)
+    if not axes:
+        return base
+    idx = jax.lax.axis_index(axes)  # linearized index over the given axes
+    size = jax.lax.axis_size(axes) if hasattr(jax.lax, "axis_size") else None
+    del size
+    return idx.astype(jnp.uint32) * jnp.uint32(n_local) + base
+
+
+def _per_point_gumbel(key: jax.Array, gidx: jax.Array, k: int) -> jax.Array:
+    """(N_local, k) Gumbel noise, keyed by *global* point index."""
+    def one(i):
+        return jax.random.gumbel(jax.random.fold_in(key, i), (k,))
+    return jax.vmap(one)(gidx)
+
+
+def _per_point_bit(key: jax.Array, gidx: jax.Array) -> jax.Array:
+    def one(i):
+        return jax.random.bernoulli(jax.random.fold_in(key, i))
+    return jax.vmap(one)(gidx).astype(jnp.int32)
+
+
+def sample_weights(key: jax.Array, active: jax.Array, nk: jax.Array,
+                   alpha: float) -> jax.Array:
+    """Step (a): (pi_1..pi_K, pi~) ~ Dir(N_1..N_K, alpha); returns log pi.
+
+    Inactive slots get -inf. The alpha-slot mass is sampled but unused by the
+    *restricted* sampler (it never assigns to a new cluster) — it only
+    rescales, and the assignment softmax renormalizes anyway; we keep it for
+    faithfulness to eq. (14).
+    """
+    k = active.shape[0]
+    conc = jnp.where(active, jnp.maximum(nk, 1e-2), 1.0)
+    g = jax.random.gamma(key, jnp.concatenate(
+        [conc, jnp.array([alpha], conc.dtype)]))
+    g = jnp.maximum(g, 1e-30)
+    total = jnp.sum(jnp.where(jnp.append(active, True), g, 0.0))
+    logpi = jnp.log(g[:k]) - jnp.log(total)
+    return jnp.where(active, logpi, NEG_INF)
+
+
+def sample_subweights(key: jax.Array, active: jax.Array, nkl: jax.Array,
+                      nkr: jax.Array, alpha: float) -> jax.Array:
+    """Step (b): (pi_kl, pi_kr) ~ Dir(N_kl + a/2, N_kr + a/2) per cluster."""
+    ga = jax.random.gamma(key, jnp.stack(
+        [nkl + alpha / 2.0, nkr + alpha / 2.0], axis=-1))
+    ga = jnp.maximum(ga, 1e-30)
+    logw = jnp.log(ga) - jnp.log(jnp.sum(ga, axis=-1, keepdims=True))
+    return jnp.where(active[:, None], logw, jnp.log(0.5))
+
+
+def compute_stats(comp, x: jax.Array, valid: jax.Array, labels: jax.Array,
+                  sublabels: jax.Array, k_max: int,
+                  axes: Tuple[str, ...], feat_axis=None):
+    """Suff-stats of clusters and sub-clusters from (sharded) labels + psum.
+
+    This is the paper's 3-step suff-stat update (§4.4): local accumulation
+    (the Pallas suffstats kernel on TPU; one-hot matmuls here), then a
+    cross-shard aggregation that moves only O(K * T) floats.
+
+    ``feat_axis``: the feature dim of x is additionally sharded over this
+    mesh axis (multinomial high-d mode, DESIGN §10): local count slices are
+    all-gathered along features after the data-axis psum — still O(K * d).
+    """
+    resp = jax.nn.one_hot(labels, k_max, dtype=x.dtype) * valid[:, None]
+    sub = jax.nn.one_hot(sublabels, 2, dtype=x.dtype)
+    subresp = resp[:, :, None] * sub[:, None, :]
+    stats = comp.stats_from_points(x, resp)
+    substats = comp.stats_from_points(x, subresp)
+    stats, substats = psum_tree((stats, substats), axes)
+    if feat_axis is not None:
+        assert not hasattr(stats, "sxx"), (
+            "feature sharding supports the feature-separable components "
+            "(multinomial, poisson) only: the Gaussian full-covariance "
+            "Mahalanobis is not feature-separable")
+        field = "counts" if hasattr(stats, "counts") else "sx"
+        gather = lambda c: jax.lax.all_gather(c, feat_axis, axis=c.ndim - 1,
+                                              tiled=True)
+        stats = stats._replace(**{field: gather(getattr(stats, field))})
+        substats = substats._replace(
+            **{field: gather(getattr(substats, field))})
+    return stats, substats
+
+
+def _loglik(comp, x, params, use_pallas: bool, feat_axis=None):
+    """The O(N K T) hot spot — Pallas kernel on TPU when enabled (§4.2).
+
+    With ``feat_axis`` the feature-separable likelihoods (multinomial
+    x @ log(theta)^T; Poisson x @ log(lambda)^T - sum exp) run on local
+    feature slices and psum the (N_local, K) partials — the paper's
+    d=20,000 20newsgroups regime without ever replicating x's features."""
+    if feat_axis is not None:
+        i = jax.lax.axis_index(feat_axis)
+        dl = x.shape[1]
+        full = getattr(params, "logtheta", None)
+        if full is None:
+            full = params.log_rate                 # poisson
+        sl = jax.lax.dynamic_slice_in_dim(full, i * dl, dl, axis=-1)
+        partial = comp.loglik(x, type(params)(sl))
+        return jax.lax.psum(partial, feat_axis)
+    if use_pallas and hasattr(params, "chol_prec") and params.mu.ndim == 2:
+        from repro.kernels import ops
+        return ops.gauss_loglik(x, params, True)
+    return comp.loglik(x, params)
+
+
+def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, comp,
+          alpha: float, axes: Tuple[str, ...],
+          use_pallas: bool = False, feat_axis=None) -> DPMMState:
+    """One restricted Gibbs sweep (steps a-f). Runs under shard_map."""
+    k_max = state.active.shape[0]
+    key = jax.random.fold_in(state.key, state.it)
+    k_w, k_sw, k_p, k_sp, k_z, k_zb = jax.random.split(key, 6)
+
+    # (a) cluster weights  (b) sub-cluster weights
+    logw = sample_weights(k_w, state.active, state.stats.n, alpha)
+    sublogw = sample_subweights(
+        k_sw, state.active, state.substats.n[:, 0], state.substats.n[:, 1],
+        alpha)
+
+    # (c) cluster params  (d) sub-cluster params  — replicated O(K d^3)
+    params = comp.sample_posterior(k_p, prior, state.stats)
+    subparams = comp.sample_posterior(k_sp, prior, state.substats)
+
+    # (e) cluster assignments: z_i ~ pi_k f(x_i; theta_k)  over *existing* k
+    gidx = global_indices(x.shape[0], axes)
+    ll = _loglik(comp, x, params, use_pallas, feat_axis)  # (N, K) hot spot
+    logits = ll + logw[None, :]
+    logits = jnp.where(state.active[None, :], logits, NEG_INF)
+    labels = jnp.argmax(
+        logits + _per_point_gumbel(k_z, gidx, k_max), axis=-1
+    ).astype(jnp.int32)
+
+    # (f) sub-cluster assignments under the point's own cluster
+    subll = _loglik(comp, x, subparams, False, feat_axis)  # (N, K, 2)
+    own = jnp.take_along_axis(
+        subll, labels[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]
+    sublogits = own + sublogw[labels]
+    sublabels = jnp.argmax(
+        sublogits + _per_point_gumbel(k_zb, gidx, 2), axis=-1
+    ).astype(jnp.int32)
+
+    # suff-stats + the one cross-shard reduction
+    stats, substats = compute_stats(
+        comp, x, valid, labels, sublabels, k_max, axes, feat_axis)
+
+    return state._replace(
+        logweights=logw, sub_logweights=sublogw, params=params,
+        subparams=subparams, stats=stats, substats=substats,
+        labels=labels, sublabels=sublabels)

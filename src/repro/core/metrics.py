@@ -1,0 +1,58 @@
+"""Clustering metrics: NMI (paper's accuracy metric), ARI, cluster counts."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _entropy(p: jax.Array) -> jax.Array:
+    p = jnp.where(p > 0, p, 1.0)
+    return -jnp.sum(p * jnp.log(p))
+
+
+def contingency(true: jax.Array, pred: jax.Array, n_true: int, n_pred: int,
+                weights=None) -> jax.Array:
+    w = jnp.ones_like(true, dtype=jnp.float32) if weights is None else weights
+    ot = jax.nn.one_hot(true, n_true, dtype=jnp.float32) * w[:, None]
+    op = jax.nn.one_hot(pred, n_pred, dtype=jnp.float32)
+    return ot.T @ op
+
+
+def nmi(true: jax.Array, pred: jax.Array, n_true: int, n_pred: int,
+        weights=None) -> jax.Array:
+    """Normalized mutual information (arithmetic normalization, as sklearn).
+
+    The paper reports NMI for every experiment (Figs 5, 7, 9).
+    """
+    c = contingency(true, pred, n_true, n_pred, weights)
+    n = jnp.sum(c)
+    pij = c / n
+    pi = jnp.sum(pij, axis=1)
+    pj = jnp.sum(pij, axis=0)
+    outer = pi[:, None] * pj[None, :]
+    mask = pij > 0
+    mi = jnp.sum(jnp.where(mask, pij * (jnp.log(jnp.where(mask, pij, 1.0))
+                                        - jnp.log(jnp.where(mask, outer, 1.0))),
+                           0.0))
+    hu = _entropy(pi)
+    hv = _entropy(pj)
+    denom = 0.5 * (hu + hv)
+    return jnp.where(denom > 0, mi / denom, 1.0)
+
+
+def ari(true: jax.Array, pred: jax.Array, n_true: int, n_pred: int,
+        weights=None) -> jax.Array:
+    """Adjusted Rand index (extra beyond the paper; useful cross-check)."""
+    c = contingency(true, pred, n_true, n_pred, weights)
+    n = jnp.sum(c)
+
+    def comb2(x):
+        return x * (x - 1.0) / 2.0
+
+    sum_ij = jnp.sum(comb2(c))
+    a = jnp.sum(comb2(jnp.sum(c, axis=1)))
+    b = jnp.sum(comb2(jnp.sum(c, axis=0)))
+    expected = a * b / comb2(n)
+    max_index = 0.5 * (a + b)
+    return jnp.where(max_index > expected,
+                     (sum_ij - expected) / (max_index - expected), 0.0)

@@ -1,0 +1,213 @@
+"""Normal-Inverse-Wishart conjugate component (Gaussian observations).
+
+Implements the per-cluster math of the sub-cluster sampler (paper §2.3, §4):
+sufficient statistics, posterior-parameter computation, posterior sampling
+(Bartlett decomposition), point log-likelihoods, and the log marginal
+likelihood used in the split/merge Hastings ratios (paper eqs. 12, 20, 21).
+
+All functions are written for a *batch of clusters*: stats carry an
+arbitrary leading shape ``B`` (``(K,)`` for clusters, ``(K, 2)`` for
+sub-clusters) so one code path serves both.
+
+Numerical conventions:
+ - we store the Cholesky factor of the *precision* ``chol_prec`` (lower),
+   so the likelihood is a whitening matmul (MXU-friendly: this is exactly
+   the paper's `dcolwise_dot_all` hot spot), and
+ - ``logdet_prec = log det Sigma^{-1} = 2 sum(log diag(chol_prec))``.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln, multigammaln
+
+LOG_2PI = 1.8378770664093453
+
+
+class NIWPrior(NamedTuple):
+    """Hyper-parameters (paper eq. 9): lambda = (m, Psi, kappa, nu)."""
+    m: jax.Array          # (d,)
+    psi: jax.Array        # (d, d) SPD scale matrix
+    kappa: jax.Array      # ()
+    nu: jax.Array         # ()
+
+
+class GaussStats(NamedTuple):
+    """Sufficient statistics of a point set: (n, sum x, sum x x^T)."""
+    n: jax.Array          # (*B,)
+    sx: jax.Array         # (*B, d)
+    sxx: jax.Array        # (*B, d, d)
+
+
+class GaussParams(NamedTuple):
+    mu: jax.Array         # (*B, d)
+    chol_prec: jax.Array  # (*B, d, d) lower Cholesky of Sigma^{-1}
+    logdet_prec: jax.Array  # (*B,)
+
+
+def default_prior(x_mean: jax.Array, psi_diag: jax.Array, kappa: float,
+                  nu: float) -> NIWPrior:
+    """Weak prior centered on the data mean (paper Example 3).
+
+    ``psi_diag`` sets the IW scale; the reference DPMMSubClusters examples
+    use Psi ~ I (cluster-scale, NOT data-scale — a data-covariance Psi
+    strongly favors few large clusters, see paper Example 3).
+    """
+    d = x_mean.shape[-1]
+    psi = jnp.eye(d, dtype=x_mean.dtype) * jnp.maximum(psi_diag, 1e-6)
+    return NIWPrior(m=x_mean, psi=psi, kappa=jnp.asarray(kappa, x_mean.dtype),
+                    nu=jnp.asarray(nu, x_mean.dtype))
+
+
+def empty_stats(batch_shape: tuple, d: int, dtype=jnp.float32) -> GaussStats:
+    return GaussStats(
+        n=jnp.zeros(batch_shape, dtype),
+        sx=jnp.zeros(batch_shape + (d,), dtype),
+        sxx=jnp.zeros(batch_shape + (d, d), dtype),
+    )
+
+
+def stats_from_points(x: jax.Array, resp: jax.Array) -> GaussStats:
+    """Stats under a (soft/hard) assignment matrix.
+
+    x: (N, d); resp: (N, *B) one-hot-ish weights. Returns stats with batch
+    shape B. These are the masked matmuls the Pallas suffstats kernel
+    implements on TPU (kernels/suffstats.py); this is the jnp path.
+    """
+    n = jnp.sum(resp, axis=0)
+    bshape = resp.shape[1:]
+    r2 = resp.reshape(resp.shape[0], -1)           # (N, prod(B))
+    sx = jnp.einsum("nb,nd->bd", r2, x)
+    sxx = jnp.einsum("nb,nd,ne->bde", r2, x, x)
+    d = x.shape[-1]
+    return GaussStats(n=n, sx=sx.reshape(bshape + (d,)),
+                      sxx=sxx.reshape(bshape + (d, d)))
+
+
+def add_stats(a: GaussStats, b: GaussStats) -> GaussStats:
+    return GaussStats(a.n + b.n, a.sx + b.sx, a.sxx + b.sxx)
+
+
+def posterior(prior: NIWPrior, stats: GaussStats):
+    """NIW posterior hyper-parameters given sufficient statistics."""
+    n = stats.n[..., None]
+    kappa_n = prior.kappa + stats.n
+    nu_n = prior.nu + stats.n
+    m_n = (prior.kappa * prior.m + stats.sx) / kappa_n[..., None]
+    # Psi_n = Psi + sum xx^T + kappa m m^T - kappa_n m_n m_n^T
+    psi_n = (prior.psi + stats.sxx
+             + prior.kappa * jnp.einsum("...d,...e->...de", prior.m, prior.m)
+             - kappa_n[..., None, None]
+             * jnp.einsum("...d,...e->...de", m_n, m_n))
+    # symmetrize for numerical safety
+    psi_n = 0.5 * (psi_n + jnp.swapaxes(psi_n, -1, -2))
+    del n
+    return m_n, psi_n, kappa_n, nu_n
+
+
+def _log_z(psi: jax.Array, kappa: jax.Array, nu: jax.Array, d: int):
+    """log of the NIW normalizer (terms that do not cancel in ratios)."""
+    sign, logdet = jnp.linalg.slogdet(psi)
+    del sign
+    return (-0.5 * nu * logdet - 0.5 * d * jnp.log(kappa)
+            + multigammaln(0.5 * nu, d) + 0.5 * nu * d * jnp.log(2.0))
+
+
+def log_marginal(prior: NIWPrior, stats: GaussStats) -> jax.Array:
+    """log f_x(C; lambda): marginal likelihood of the point set (paper eq. 13).
+
+    Murphy (2007) eq. 266:  pi^{-nd/2} * Z(post) / Z(prior).
+    """
+    d = prior.m.shape[-1]
+    m_n, psi_n, kappa_n, nu_n = posterior(prior, stats)
+    del m_n
+    prior_z = _log_z(prior.psi, prior.kappa, prior.nu, d)
+    post_z = _log_z(psi_n, kappa_n, nu_n, d)
+    # (2 pi)^{-nd/2} from the Gaussian likelihood; its 2^{-nd/2} cancels the
+    # IW normalizers' 2^{nu d/2} growth leaving Murphy's pi^{-nd/2} form.
+    # (Verified against quadrature + the student-t chain rule in
+    # tests/test_conjugates.py; the constant cancels inside every Hastings
+    # ratio, so it only matters for standalone marginals.)
+    return post_z - prior_z - 0.5 * stats.n * d * jnp.log(2.0 * jnp.pi)
+
+
+def sample_posterior(key: jax.Array, prior: NIWPrior,
+                     stats: GaussStats) -> GaussParams:
+    """Sample (mu, Sigma) ~ NIW posterior, batched over leading dims.
+
+    Uses the Bartlett decomposition of the Wishart for Sigma^{-1}:
+        Sigma^{-1} = (L A)(L A)^T,  L = chol(Psi_n^{-1}),
+    so the returned ``chol_prec`` feeds the whitening likelihood directly.
+    """
+    m_n, psi_n, kappa_n, nu_n = posterior(prior, stats)
+    d = prior.m.shape[-1]
+    bshape = stats.n.shape
+
+    k_a, k_b, k_mu = jax.random.split(key, 3)
+    # Bartlett factor A: diag sqrt(chi2(nu - i)), strict lower N(0,1)
+    i = jnp.arange(d, dtype=m_n.dtype)
+    df = jnp.maximum(nu_n[..., None] - i, 1e-3)             # (*B, d)
+    chi = 2.0 * jax.random.gamma(k_a, 0.5 * df)             # chi2(df)
+    a_diag = jnp.sqrt(chi)
+    normals = jax.random.normal(k_b, bshape + (d, d), dtype=m_n.dtype)
+    tril = jnp.tril(normals, k=-1)
+    a_mat = tril + jnp.einsum(
+        "...d,de->...de", a_diag, jnp.eye(d, dtype=m_n.dtype))
+    # L = chol(Psi_n^{-1}) computed via chol(Psi_n):  Psi_n = C C^T
+    #  => Psi_n^{-1} = C^{-T} C^{-1}; chol(Psi_n^{-1}) = C^{-T} (upper-tri
+    # transpose trick). We use solve_triangular against C^T.
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=m_n.dtype), psi_n.shape)
+    jitter = 1e-5 * jnp.trace(psi_n, axis1=-2, axis2=-1)[..., None, None] / d
+    c = jnp.linalg.cholesky(psi_n + jitter * eye)
+    # l_inv_t = C^{-T}: solve C^T X = I  (upper triangular system)
+    l = jax.scipy.linalg.solve_triangular(
+        jnp.swapaxes(c, -1, -2), eye, lower=False)          # = C^{-T}
+    chol_prec_full = l @ a_mat                              # (*B, d, d)
+    # chol_prec_full is lower-triangular only if l is; C^{-T} is upper... so
+    # (L A) is not triangular. We only need Sigma^{-1} = F F^T with any F, and
+    # logdet from the triangular pieces:
+    logdet_prec = (2.0 * jnp.sum(jnp.log(jnp.abs(a_diag)), axis=-1)
+                   - 2.0 * jnp.sum(
+                       jnp.log(jnp.diagonal(c, axis1=-2, axis2=-1)), axis=-1))
+    # mu | Sigma ~ N(m_n, Sigma / kappa_n):
+    #   mu = m_n + F^{-T} z / sqrt(kappa_n) with Sigma^{-1} = F F^T
+    z = jax.random.normal(k_mu, bshape + (d,), dtype=m_n.dtype)
+    # Solve F^T u = z  =>  u = F^{-T} z ; F is dense -> use linalg.solve on
+    # F^T (d small; batched). Cost O(K d^3), the paper's 'sample params' step.
+    u = jnp.linalg.solve(
+        jnp.swapaxes(chol_prec_full, -1, -2), z[..., None])[..., 0]
+    mu = m_n + u / jnp.sqrt(kappa_n)[..., None]
+    return GaussParams(mu=mu, chol_prec=chol_prec_full,
+                       logdet_prec=logdet_prec)
+
+
+def expected_params(prior: NIWPrior, stats: GaussStats) -> GaussParams:
+    """Posterior-mean parameters (deterministic; used for init/debug)."""
+    m_n, psi_n, kappa_n, nu_n = posterior(prior, stats)
+    d = prior.m.shape[-1]
+    sigma = psi_n / jnp.maximum(nu_n - d - 1.0, 1.0)[..., None, None]
+    eye = jnp.broadcast_to(jnp.eye(d, dtype=m_n.dtype), sigma.shape)
+    c = jnp.linalg.cholesky(sigma + 1e-6 * eye)
+    f = jax.scipy.linalg.solve_triangular(
+        jnp.swapaxes(c, -1, -2), eye, lower=False)
+    logdet_prec = -2.0 * jnp.sum(
+        jnp.log(jnp.diagonal(c, axis1=-2, axis2=-1)), axis=-1)
+    return GaussParams(mu=m_n, chol_prec=f, logdet_prec=logdet_prec)
+
+
+def loglik(x: jax.Array, params: GaussParams) -> jax.Array:
+    """log N(x; mu_b, Sigma_b) for all points x (N,d) and clusters b (*B,).
+
+    Returns (N, *B). This is the O(N K d^2) hot spot; the TPU path is
+    kernels/loglik.py, this jnp version is its oracle and the dry-run path.
+    """
+    # y = F^T (x - mu)  with Sigma^{-1} = F F^T
+    diff = x[:, None, :] - params.mu.reshape(1, -1, params.mu.shape[-1])
+    f = params.chol_prec.reshape(-1, *params.chol_prec.shape[-2:])
+    y = jnp.einsum("nbd,bde->nbe", diff, f)
+    maha = jnp.sum(y * y, axis=-1)
+    d = x.shape[-1]
+    out = 0.5 * (params.logdet_prec.reshape(1, -1) - maha) - 0.5 * d * LOG_2PI
+    return out.reshape((x.shape[0],) + params.mu.shape[:-1])

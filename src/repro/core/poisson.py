@@ -1,0 +1,92 @@
+"""Gamma-Poisson conjugate component — the paper's suggested extension
+('it can be easily adapted to other component distributions, e.g., Poisson,
+as long as they belong to an exponential family', §3.4.3).
+
+Points are count vectors x in N^d with independent Poisson(lambda_j) rates
+per feature; the conjugate prior is Gamma(a0, b0) per rate. Per-point
+log(x_ij!) terms are dropped everywhere: label-independent, they cancel in
+the assignment softmax and in every split/merge Hastings ratio (same
+argument as the multinomial coefficient, core/multinomial.py).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.scipy.special import gammaln
+
+
+class PoisPrior(NamedTuple):
+    a0: jax.Array         # () Gamma shape
+    b0: jax.Array         # () Gamma rate
+    d: int
+
+
+class PoisStats(NamedTuple):
+    n: jax.Array          # (*B,) number of points
+    sx: jax.Array         # (*B, d) summed counts
+
+
+class PoisParams(NamedTuple):
+    log_rate: jax.Array   # (*B, d)
+
+
+def default_prior(d: int, a0: float = 1.0, b0: float = 1.0,
+                  dtype=jnp.float32) -> PoisPrior:
+    return PoisPrior(a0=jnp.asarray(a0, dtype), b0=jnp.asarray(b0, dtype),
+                     d=d)
+
+
+def empty_stats(batch_shape: tuple, d: int, dtype=jnp.float32) -> PoisStats:
+    return PoisStats(n=jnp.zeros(batch_shape, dtype),
+                     sx=jnp.zeros(batch_shape + (d,), dtype))
+
+
+def stats_from_points(x: jax.Array, resp: jax.Array) -> PoisStats:
+    n = jnp.sum(resp, axis=0)
+    bshape = resp.shape[1:]
+    r2 = resp.reshape(resp.shape[0], -1)
+    sx = jnp.einsum("nb,nd->bd", r2, x)
+    return PoisStats(n=n, sx=sx.reshape(bshape + (x.shape[-1],)))
+
+
+def add_stats(a: PoisStats, b: PoisStats) -> PoisStats:
+    return PoisStats(a.n + b.n, a.sx + b.sx)
+
+
+def log_marginal(prior: PoisPrior, stats: PoisStats) -> jax.Array:
+    """Negative-binomial marginal (log x! terms dropped):
+
+    log m(C) = sum_j [ a0 log b0 - log G(a0)
+                       + log G(a0 + S_j) - (a0 + S_j) log(b0 + n) ]
+    """
+    a_n = prior.a0 + stats.sx                              # (*B, d)
+    b_n = prior.b0 + stats.n[..., None]
+    return jnp.sum(prior.a0 * jnp.log(prior.b0) - gammaln(prior.a0)
+                   + gammaln(a_n) - a_n * jnp.log(b_n), axis=-1)
+
+
+def sample_posterior(key: jax.Array, prior: PoisPrior,
+                     stats: PoisStats) -> PoisParams:
+    """lambda_j ~ Gamma(a0 + S_j, b0 + n), batched; returns log lambda."""
+    a_n = prior.a0 + stats.sx
+    b_n = prior.b0 + stats.n[..., None]
+    g = jnp.maximum(jax.random.gamma(key, a_n), 1e-30)
+    return PoisParams(log_rate=jnp.log(g) - jnp.log(b_n))
+
+
+def expected_params(prior: PoisPrior, stats: PoisStats) -> PoisParams:
+    a_n = prior.a0 + stats.sx
+    b_n = prior.b0 + stats.n[..., None]
+    return PoisParams(log_rate=jnp.log(a_n) - jnp.log(b_n))
+
+
+def loglik(x: jax.Array, params: PoisParams) -> jax.Array:
+    """sum_j [x_ij log lambda_bj - lambda_bj] -> (N, *B); log x! dropped.
+
+    The x @ log(lambda)^T term is the same matmul hot spot as the
+    multinomial component (kernels/matmul.py serves it on TPU)."""
+    lr = params.log_rate.reshape(-1, params.log_rate.shape[-1])
+    out = x @ lr.T - jnp.sum(jnp.exp(lr), axis=-1)[None, :]
+    return out.reshape((x.shape[0],) + params.log_rate.shape[:-1])

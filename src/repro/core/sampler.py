@@ -1,0 +1,249 @@
+"""Top-level distributed DPMM sampler — the paper's `fit` entry point.
+
+Composition per iteration (paper §4.1):
+    restricted Gibbs sweep  ->  splits  ->  merges  ->  stats consistency
+with splits/merges gated by ``burnout``. The whole iteration runs inside a
+single ``shard_map`` over the mesh's data axes; the only communication is
+the psum of sufficient statistics (paper §4.3).
+
+Example (paper §3.4.1 analogue):
+    >>> from repro.core.sampler import DPMM
+    >>> from repro.configs import DPMMConfig
+    >>> model = DPMM(DPMMConfig(alpha=10., iters=100))
+    >>> result = model.fit(x)          # x: (N, d) np.ndarray
+    >>> result.labels, result.k, result.nmi(gt)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import DPMMConfig
+from repro.core import gibbs, multinomial, niw, poisson, splitmerge
+from repro.core.distributed import data_axes_of, make_data_mesh, shard_points
+from repro.core.metrics import ari, nmi
+from repro.core.state import DPMMState
+
+
+def component_module(name: str):
+    if name == "gaussian":
+        return niw
+    if name == "multinomial":
+        return multinomial
+    if name == "poisson":
+        return poisson
+    raise ValueError(f"unknown component {name!r}")
+
+
+def _cluster_means(comp, stats):
+    first = stats.sx if hasattr(stats, "sx") else stats.counts
+    return first / jnp.maximum(stats.n[..., None], 1.0)
+
+
+def _init_local(key, x, valid, *, prior, comp, cfg, axes, k_max,
+                feat_axis=None):
+    """Initial state (runs under shard_map)."""
+    n_local = x.shape[0]
+    gidx = gibbs.global_indices(n_local, axes)
+    labels = (gidx % jnp.uint32(cfg.init_clusters)).astype(jnp.int32)
+    # first pass for cluster means, then hyperplane sub-label init
+    stats0, _ = gibbs.compute_stats(
+        comp, x, valid, labels, jnp.zeros_like(labels), k_max, axes,
+        feat_axis)
+    sublabels = splitmerge.hyperplane_bits(
+        jax.random.fold_in(key, 1), x, labels, _cluster_means(comp, stats0),
+        feat_axis)
+    stats, substats = gibbs.compute_stats(
+        comp, x, valid, labels, sublabels, k_max, axes, feat_axis)
+    active = jnp.arange(k_max) < cfg.init_clusters
+    params = comp.expected_params(prior, stats)
+    subparams = comp.expected_params(prior, substats)
+    logw = jnp.where(active, -jnp.log(float(cfg.init_clusters)), gibbs.NEG_INF)
+    sublogw = jnp.full((k_max, 2), jnp.log(0.5))
+    return DPMMState(
+        key=key, it=jnp.zeros((), jnp.int32), active=active,
+        logweights=logw, sub_logweights=sublogw,
+        stuck=jnp.zeros((k_max,), jnp.int32), params=params,
+        subparams=subparams, stats=stats, substats=substats,
+        labels=labels, sublabels=sublabels)
+
+
+def _split_merge(state: DPMMState, x, valid, *, prior, comp, cfg, axes,
+                 k_max, feat_axis=None) -> DPMMState:
+    key = jax.random.fold_in(state.key, -(state.it + 1))
+    k_s, k_m, k_b = jax.random.split(key, 3)
+
+    dec_s = splitmerge.propose_splits(k_s, state, prior, comp, cfg.alpha)
+    stats1 = splitmerge.apply_split_to_stats(
+        comp, state.stats, state.substats, dec_s)
+    # provisional relabel (moves r-halves to their new slots) ...
+    labels_mid = jnp.where(
+        dec_s.accept[state.labels] & (state.sublabels == 1),
+        dec_s.dest[state.labels], state.labels).astype(jnp.int32)
+    # ... then hyperplane sub-label init around the *post-split* means
+    bits = splitmerge.hyperplane_bits(
+        k_b, x, labels_mid, _cluster_means(comp, stats1), feat_axis)
+    labels1, sublabels1 = splitmerge.relabel_after_split(
+        state.labels, state.sublabels, dec_s, bits)
+
+    dec_m = splitmerge.propose_merges(
+        k_m, dec_s.new_active, stats1, prior, comp, comp.add_stats, cfg.alpha)
+    labels2, sublabels2 = splitmerge.relabel_after_merge(
+        labels1, sublabels1, dec_m)
+
+    # sub-cluster reset: clusters whose split keeps being rejected re-draw
+    # their sub-labels from a fresh hyperplane (escapes sub-Gibbs local
+    # modes; the reference DPMMSubClusters does the same). The MH target is
+    # untouched — sub-labels are auxiliary proposal state.
+    stuck = jnp.where(dec_s.accept | dec_m.merged | ~state.active,
+                      0, state.stuck + 1)
+    reset = stuck >= cfg.subreset_every
+    stuck = jnp.where(reset, 0, stuck).astype(jnp.int32)
+    stats2 = splitmerge.apply_merge_to_stats(stats1, dec_m)
+    bits2 = splitmerge.hyperplane_bits(
+        jax.random.fold_in(k_b, 1), x, labels2, _cluster_means(comp, stats2),
+        feat_axis)
+    sublabels2 = jnp.where(reset[labels2], bits2, sublabels2)
+
+    # consistency pass: recompute stats AND substats from the new labels
+    # (paper §4.4: 'processing accepted splits/merges requires updating the
+    # sufficient statistics', O(N/G) + one psum)
+    stats3, substats3 = gibbs.compute_stats(
+        comp, x, valid, labels2, sublabels2, k_max, axes, feat_axis)
+    return state._replace(
+        active=dec_m.new_active, stuck=stuck, stats=stats3,
+        substats=substats3, labels=labels2, sublabels=sublabels2)
+
+
+def dpmm_step(state: DPMMState, x, valid, *, prior, comp, cfg, axes,
+              k_max, feat_axis=None) -> DPMMState:
+    """One full iteration; designed to run under shard_map."""
+    state = gibbs.sweep(state, x, valid, prior, comp, cfg.alpha, axes,
+                        use_pallas=cfg.use_pallas, feat_axis=feat_axis)
+    state = jax.lax.cond(
+        state.it >= cfg.burnout,
+        lambda s: _split_merge(s, x, valid, prior=prior, comp=comp, cfg=cfg,
+                               axes=axes, k_max=k_max, feat_axis=feat_axis),
+        lambda s: s,
+        state)
+    return state._replace(it=state.it + 1)
+
+
+@dataclasses.dataclass
+class FitResult:
+    state: DPMMState
+    labels: np.ndarray           # (N,) cluster assignments (unpadded)
+    k: int
+    history: Dict[str, np.ndarray]
+    iter_times_s: List[float]
+
+    def nmi(self, true_labels: np.ndarray, n_true: Optional[int] = None):
+        n_true = n_true or int(true_labels.max()) + 1
+        k_max = int(self.state.active.shape[0])
+        return float(nmi(jnp.asarray(true_labels),
+                         jnp.asarray(self.labels), n_true, k_max))
+
+    def ari(self, true_labels: np.ndarray, n_true: Optional[int] = None):
+        n_true = n_true or int(true_labels.max()) + 1
+        k_max = int(self.state.active.shape[0])
+        return float(ari(jnp.asarray(true_labels),
+                         jnp.asarray(self.labels), n_true, k_max))
+
+
+class DPMM:
+    """Distributed DPMM with sub-cluster splits (paper [1] + this paper)."""
+
+    def __init__(self, cfg: DPMMConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.comp = component_module(cfg.component)
+
+    def _build_prior(self, x: np.ndarray):
+        cfg = self.cfg
+        if cfg.component == "gaussian":
+            mean = jnp.asarray(x.mean(axis=0), jnp.float32)
+            psi_diag = jnp.full((x.shape[1],), cfg.niw_psi, jnp.float32)
+            return niw.default_prior(
+                mean, psi_diag, cfg.niw_kappa, x.shape[1] + cfg.niw_nu_extra)
+        if cfg.component == "poisson":
+            return poisson.default_prior(x.shape[1], cfg.gamma_a0,
+                                         cfg.gamma_b0)
+        return multinomial.default_prior(x.shape[1], cfg.dir_alpha)
+
+    def fit(self, x: np.ndarray, iters: Optional[int] = None,
+            verbose: bool = False) -> FitResult:
+        cfg = self.cfg
+        iters = iters if iters is not None else cfg.iters
+        mesh = self.mesh if self.mesh is not None else make_data_mesh()
+        axes = data_axes_of(mesh)
+        prior = self._build_prior(x)
+        n = x.shape[0]
+        xs, valid = shard_points(mesh, np.asarray(x, np.float32),
+                                 cfg.shard_features)
+
+        feat_axis = ("model" if (cfg.shard_features
+                                 and "model" in mesh.axis_names
+                                 and cfg.component in ("multinomial",
+                                                       "poisson"))
+                     else None)
+        kwargs = dict(prior=prior, comp=self.comp, cfg=cfg, axes=axes,
+                      k_max=cfg.k_max, feat_axis=feat_axis)
+        shard_spec = P(axes)
+        x_in_spec = P(axes, feat_axis)
+        rep = P()
+        state_specs = DPMMState(
+            key=rep, it=rep, active=rep, logweights=rep, sub_logweights=rep,
+            stuck=rep,
+            params=jax.tree.map(lambda _: rep, _param_struct(self.comp)),
+            subparams=jax.tree.map(lambda _: rep, _param_struct(self.comp)),
+            stats=jax.tree.map(lambda _: rep, _stats_struct(self.comp)),
+            substats=jax.tree.map(lambda _: rep, _stats_struct(self.comp)),
+            labels=shard_spec, sublabels=shard_spec)
+
+        init = jax.jit(jax.shard_map(
+            functools.partial(_init_local, **kwargs), mesh=mesh,
+            in_specs=(rep, x_in_spec, shard_spec), out_specs=state_specs,
+            check_vma=False))
+        step = jax.jit(jax.shard_map(
+            functools.partial(dpmm_step, **kwargs), mesh=mesh,
+            in_specs=(state_specs, x_in_spec, shard_spec),
+            out_specs=state_specs, check_vma=False))
+
+        key = jax.random.key(cfg.seed)
+        state = init(key, xs, valid)
+        hist_k, times = [], []
+        for it in range(iters):
+            t0 = time.perf_counter()
+            state = step(state, xs, valid)
+            k_now = int(state.k_hat)  # blocks; also per-iter timing
+            times.append(time.perf_counter() - t0)
+            hist_k.append(k_now)
+            if verbose and (it % 10 == 0 or it == iters - 1):
+                print(f"iter {it:4d}  K={k_now}  {times[-1]*1e3:.1f} ms")
+        labels = np.asarray(jax.device_get(state.labels))[:n]
+        return FitResult(
+            state=state, labels=labels, k=int(state.k_hat),
+            history={"k": np.array(hist_k)}, iter_times_s=times)
+
+
+def _param_struct(comp):
+    if comp is niw:
+        return niw.GaussParams(mu=0, chol_prec=0, logdet_prec=0)
+    if comp is poisson:
+        return poisson.PoisParams(log_rate=0)
+    return multinomial.MultParams(logtheta=0)
+
+
+def _stats_struct(comp):
+    if comp is niw:
+        return niw.GaussStats(n=0, sx=0, sxx=0)
+    if comp is poisson:
+        return poisson.PoisStats(n=0, sx=0)
+    return multinomial.MultStats(n=0, counts=0)

@@ -1,0 +1,42 @@
+"""DPMM sampler state: a static-capacity pytree (DESIGN §6).
+
+Chang & Fisher III's chain has unbounded K; under XLA every per-cluster
+tensor is ``(K_max, ...)`` with an ``active`` mask. Sub-cluster quantities
+carry an extra axis of size 2 (l/r), mirroring the paper's augmented space
+(§2.3): every cluster k owns sub-clusters (k,l) and (k,r).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DPMMState(NamedTuple):
+    key: jax.Array            # PRNG key (replicated)
+    it: jax.Array             # iteration counter ()
+    active: jax.Array         # (K,) bool
+    logweights: jax.Array     # (K,) log pi_k (-inf when inactive)
+    sub_logweights: jax.Array  # (K, 2) log pi_bar_{k,{l,r}}
+    stuck: jax.Array          # (K,) int32 sweeps since last accepted split
+    params: Any               # component params, batch (K,)
+    subparams: Any            # component params, batch (K, 2)
+    stats: Any                # component suff-stats, batch (K,)
+    substats: Any             # component suff-stats, batch (K, 2)
+    labels: jax.Array         # (N_local,) int32  -- data-sharded
+    sublabels: jax.Array      # (N_local,) int32 in {0, 1} -- data-sharded
+
+    @property
+    def k_hat(self) -> jax.Array:
+        return jnp.sum(self.active.astype(jnp.int32))
+
+
+def summarize(state: DPMMState) -> dict:
+    """Replicated scalar diagnostics for logging / history scans."""
+    return {
+        "k": state.k_hat,
+        "max_cluster": jnp.max(jnp.where(state.active, state.stats.n, 0.0)),
+        "min_cluster": jnp.min(
+            jnp.where(state.active, state.stats.n, jnp.inf)),
+    }

@@ -1,0 +1,2 @@
+from repro.data.synthetic import generate_gmm, generate_mnmm  # noqa: F401
+from repro.data.pipeline import TokenPipeline, lm_batches  # noqa: F401

@@ -1,0 +1,54 @@
+"""Deterministic token pipeline for the LM training substrate.
+
+Offline environment: we synthesize a reproducible corpus (a mixture of
+Zipfian n-gram streams — enough structure that a small LM's loss visibly
+drops) and serve fixed-shape (tokens, targets) batches, sharded over the
+mesh's batch axes.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Optional, Tuple
+
+import numpy as np
+
+
+class TokenPipeline:
+    """Zipfian Markov-chain corpus with deterministic batching."""
+
+    def __init__(self, vocab_size: int, seed: int = 0, order_states: int = 64):
+        self.vocab = vocab_size
+        rng = np.random.default_rng(seed)
+        self.n_states = order_states
+        # sparse-ish transition structure: each state emits from a Zipf slice
+        ranks = np.arange(1, vocab_size + 1)
+        base = 1.0 / ranks ** 1.1
+        self.emit = np.empty((order_states, vocab_size))
+        for s in range(order_states):
+            perm = rng.permutation(vocab_size)
+            self.emit[s] = base[perm]
+            self.emit[s] /= self.emit[s].sum()
+        self.trans = rng.dirichlet(np.full(order_states, 0.3),
+                                   size=order_states)
+        self._rng = np.random.default_rng(seed + 1)
+        self._state = 0
+
+    def sample(self, n_tokens: int) -> np.ndarray:
+        out = np.empty(n_tokens, np.int32)
+        s = self._state
+        for i in range(n_tokens):
+            out[i] = self._rng.choice(self.vocab, p=self.emit[s])
+            s = self._rng.choice(self.n_states, p=self.trans[s])
+        self._state = s
+        return out
+
+
+def lm_batches(vocab_size: int, batch: int, seq: int, seed: int = 0,
+               steps: Optional[int] = None
+               ) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
+    """Yields (tokens, targets) of shape (batch, seq), targets shifted by 1."""
+    pipe = TokenPipeline(vocab_size, seed)
+    i = 0
+    while steps is None or i < steps:
+        flat = pipe.sample(batch * (seq + 1)).reshape(batch, seq + 1)
+        yield flat[:, :-1].copy(), flat[:, 1:].copy()
+        i += 1

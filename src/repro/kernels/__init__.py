@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the paper's compute hot spots (DESIGN §7):
+
+    loglik.py     — (N, K) Gaussian log-likelihood (`dcolwise_dot_all`)
+    suffstats.py  — per-cluster sufficient statistics (masked matmuls)
+    matmul.py     — blocked matmul ('Kernel #1'; ops.matmul_auto = the
+                    paper's d*N size-based auto-selection vs XLA dot)
+
+``ops`` holds the jit'd wrappers, ``ref`` the pure-jnp oracles that the
+kernel tests sweep against (interpret=True on CPU, Mosaic on TPU).
+"""
+from repro.kernels import ops, ref  # noqa: F401

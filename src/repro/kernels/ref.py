@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+These are also the *dry-run* path: Mosaic kernels cannot lower for the CPU
+backend and ``interpret=True`` HLO would poison the roofline terms, so
+``use_pallas=False`` (the off-TPU default) routes here (DESIGN §7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOG_2PI = 1.8378770664093453
+
+
+def matmul(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(M, K) @ (K, N) in f32 accumulation."""
+    return jnp.dot(a, b, preferred_element_type=jnp.float32)
+
+
+def loglik(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
+           logdet_prec: jax.Array) -> jax.Array:
+    """Gaussian log-likelihoods (N, K) from whitening factors.
+
+    x: (N, d); mu: (K, d); chol_prec F: (K, d, d) with Sigma^-1 = F F^T;
+    logdet_prec: (K,). The paper's `dcolwise_dot_all` hot spot.
+    """
+    diff = x[:, None, :] - mu[None, :, :]                  # (N, K, d)
+    y = jnp.einsum("nkd,kde->nke", diff, chol_prec,
+                   preferred_element_type=jnp.float32)
+    maha = jnp.sum(y * y, axis=-1)
+    d = x.shape[-1]
+    return (0.5 * (logdet_prec[None, :] - maha)
+            - 0.5 * d * LOG_2PI).astype(jnp.float32)
+
+
+def suffstats(x: jax.Array, resp: jax.Array):
+    """Per-cluster sufficient statistics from one-hot-ish responsibilities.
+
+    x: (N, d); resp: (N, K). Returns (n (K,), sx (K, d), sxx (K, d, d)) —
+    the paper's per-stream accumulation, as masked matmuls.
+    """
+    n = jnp.sum(resp, axis=0)
+    sx = jnp.einsum("nk,nd->kd", resp, x,
+                    preferred_element_type=jnp.float32)
+    sxx = jnp.einsum("nk,nd,ne->kde", resp, x, x,
+                     preferred_element_type=jnp.float32)
+    return n.astype(jnp.float32), sx, sxx

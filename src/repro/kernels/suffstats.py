@@ -1,0 +1,81 @@
+"""Pallas TPU kernel for per-cluster sufficient statistics — the paper's
+per-stream suff-stat accumulation (§4.4, 3-step update), as masked matmuls.
+
+Given points x (N, d) and responsibilities resp (N, K) (one-hot labels, or
+label x sub-label products for the sub-cluster stats):
+    n_k  = sum_i r_ik          (K,)
+    sx_k = sum_i r_ik x_i      (K, d)     = resp^T @ x        (MXU)
+    sxx_k = sum_i r_ik x_i x_i^T (K,d,d)  = batched (d,bn)@(bn,d) per k
+
+Tiling: grid (K/bk, N/bn) with the N axis innermost and *revisited*: the
+output tiles (bk,), (bk, d), (bk, d, d) stay resident in VMEM and
+accumulate across N steps — the TPU analogue of the paper's per-stream
+partial sums, with the cross-device psum happening outside the kernel.
+VMEM (bk=8, bn=128, d<=128): x 64k + resp 4k + sxx 512k + masked 512k f32.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _suffstats_kernel(x_ref, r_ref, n_ref, sx_ref, sxx_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        n_ref[...] = jnp.zeros_like(n_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+        sxx_ref[...] = jnp.zeros_like(sxx_ref)
+
+    x = x_ref[...]                                   # (bn, d)
+    r = r_ref[...]                                   # (bn, bk)
+    n_ref[...] += jnp.sum(r, axis=0)
+    sx_ref[...] += jnp.dot(r.T, x, preferred_element_type=jnp.float32)
+    # masked points per cluster: (bk, bn, d), then batched x^T x on the MXU
+    xw = r.T[:, :, None] * x[None, :, :]             # (bk, bn, d)
+    sxx_ref[...] += jax.lax.dot_general(
+        xw.transpose(0, 2, 1), jnp.broadcast_to(x, (r.shape[1],) + x.shape),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)          # (bk, d, d)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
+def suffstats(x: jax.Array, resp: jax.Array, *, bn: int = 128, bk: int = 8,
+              interpret: bool = False
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """x: (N, d); resp: (N, K) -> (n (K,), sx (K, d), sxx (K, d, d))."""
+    n_pts, d = x.shape
+    k = resp.shape[1]
+    bn = min(bn, n_pts) or 1
+    bk = min(bk, k) or 1
+    pn, pk = (-n_pts) % bn, (-k) % bk
+    if pn:
+        x = jnp.pad(x, ((0, pn), (0, 0)))
+        resp = jnp.pad(resp, ((0, pn), (0, 0)))
+    if pk:
+        resp = jnp.pad(resp, ((0, 0), (0, pk)))
+    gk, gn = resp.shape[1] // bk, x.shape[0] // bn
+
+    n_out, sx, sxx = pl.pallas_call(
+        _suffstats_kernel,
+        grid=(gk, gn),                       # N innermost: accumulation
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((bn, bk), lambda j, i: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk,), lambda j, i: (j,)),
+            pl.BlockSpec((bk, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bk, d, d), lambda j, i: (j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((resp.shape[1],), jnp.float32),
+            jax.ShapeDtypeStruct((resp.shape[1], d), jnp.float32),
+            jax.ShapeDtypeStruct((resp.shape[1], d, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, resp)
+    return n_out[:k], sx[:k], sxx[:k]

@@ -1,0 +1,147 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) and emit
+roofline terms. THE proof that the distribution config is coherent.
+
+Usage (PYTHONPATH=src):
+    python -m repro.launch.dryrun --arch granite-8b --shape train_4k
+    python -m repro.launch.dryrun --all                    # 16x16, 40 pairs
+    python -m repro.launch.dryrun --all --multi-pod        # 2x16x16
+    python -m repro.launch.dryrun --arch ... --moe-strategy expert
+
+Results land in experiments/dryrun/<arch>__<shape>__<mesh>.json and a
+summary table on stdout (EXPERIMENTS.md §Dry-run / §Roofline read these).
+"""
+# The 512 placeholder devices MUST be configured before ANY jax import —
+# jax locks the device count on first init. Do not move these lines.
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.launch.specs import step_spec
+from repro.roofline.analysis import HEADER, analyze, save_json
+from repro.roofline.model_flops import model_flops_per_device
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def skip_reason(arch: str, shape_name: str) -> str:
+    """DESIGN §5 skips: whisper has no 524k decode."""
+    if arch == "whisper-medium" and shape_name == "long_500k":
+        return ("decoder is specified for <=448 positions with a <=1500-"
+                "frame encoder; a 524k self-attn cache is architecturally "
+                "meaningless (DESIGN §5)")
+    return ""
+
+
+def run_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+            moe_strategy: str = "tensor", save: bool = True,
+            verbose: bool = True, out_dir: str = OUT_DIR):
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "x".join(str(mesh.shape[a]) for a in mesh.axis_names)
+    chips = mesh_chips(mesh)
+
+    t0 = time.time()
+    spec = step_spec(cfg, shape, mesh, moe_strategy=moe_strategy)
+    with mesh:
+        lowered = jax.jit(
+            spec.fn,
+            in_shardings=spec.in_shardings,
+            out_shardings=spec.out_shardings,
+            donate_argnums=spec.donate,
+        ).lower(*spec.args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    r = analyze(compiled, arch=arch, shape=shape_name, mesh_name=mesh_name,
+                chips=chips,
+                model_flops=model_flops_per_device(cfg, shape, chips))
+    if verbose:
+        mem = compiled.memory_analysis()
+        print(f"--- {arch} x {shape_name} on {mesh_name} "
+              f"({spec.meta['kind']}, compile {t1-t0:.1f}s)")
+        print(f"    memory_analysis: args={r.mem_args/2**30:.2f}GiB "
+              f"out={r.mem_output/2**30:.2f}GiB "
+              f"temp={r.mem_temp/2**30:.2f}GiB "
+              f"peak={r.mem_peak/2**30:.2f}GiB per device")
+        print(f"    cost_analysis: flops/dev={r.flops_per_device:.3e} "
+              f"bytes/dev={r.bytes_per_device:.3e}")
+        print(f"    collectives: " + ", ".join(
+            f"{k}={v/2**20:.1f}MiB" for k, v in r.coll_bytes.items() if v))
+        print(f"    roofline: compute={r.t_compute*1e3:.2f}ms "
+              f"memory={r.t_memory*1e3:.2f}ms "
+              f"collective={r.t_collective*1e3:.2f}ms "
+              f"-> {r.bottleneck}-bound, useful={r.useful_ratio:.3f}")
+    if save:
+        suffix = "" if moe_strategy == "tensor" else f"__{moe_strategy}"
+        save_json(r, os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_name}{suffix}.json"))
+    return r
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(INPUT_SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--moe-strategy", default="tensor",
+                    choices=("tensor", "expert"))
+    ap.add_argument("--no-save", action="store_true")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args(argv)
+
+    pairs = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                pairs.append((a, s))
+    elif args.arch and args.shape:
+        pairs.append((args.arch, args.shape))
+    elif args.arch:
+        pairs.extend((args.arch, s) for s in INPUT_SHAPES)
+    else:
+        ap.error("need --arch [--shape] or --all")
+
+    rows, failures, skips = [], [], []
+    for arch, shape_name in pairs:
+        reason = skip_reason(arch, shape_name)
+        if reason:
+            skips.append((arch, shape_name, reason))
+            print(f"--- SKIP {arch} x {shape_name}: {reason}")
+            continue
+        try:
+            r = run_one(arch, shape_name, multi_pod=args.multi_pod,
+                        moe_strategy=args.moe_strategy,
+                        save=not args.no_save, out_dir=args.out_dir)
+            rows.append(r)
+        except Exception as e:  # noqa: BLE001 — report all failures at end
+            traceback.print_exc()
+            failures.append((arch, shape_name, repr(e)))
+
+    print("\n" + HEADER)
+    for r in rows:
+        print(r.row())
+    if skips:
+        print(f"\n{len(skips)} documented skip(s).")
+    if failures:
+        print(f"\n{len(failures)} FAILURE(S):")
+        for a, s, e in failures:
+            print(f"  {a} x {s}: {e}")
+        sys.exit(1)
+    print(f"\nall {len(rows)} dry-runs compiled OK")
+
+
+if __name__ == "__main__":
+    main()

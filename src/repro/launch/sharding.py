@@ -1,0 +1,73 @@
+"""Mesh-aware sharding-spec fix-up, shared by the dry-run spec builders and
+the serving engine.
+
+``fix_specs`` makes *intended* PartitionSpec trees legal for a concrete
+mesh: axes absent from the mesh are dropped (e.g. ``pod`` on a single pod),
+entries whose dim is not divisible by their axes are replicated (e.g. 8 KV
+heads on a 16-way ``model`` axis), and — optionally — parameters gain a
+``data``-axis FSDP sharding on their largest free divisible dim.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _axes_of(entry) -> Tuple[str, ...]:
+    if entry is None:
+        return ()
+    return entry if isinstance(entry, tuple) else (entry,)
+
+
+def fix_specs(specs, structs, mesh: Mesh, *, fsdp: bool = False,
+              fsdp_axes: Tuple[str, ...] = ("data",)):
+    """Drop illegal entries; optionally add FSDP (DESIGN §4).
+
+    Embedding tables are excluded from FSDP: they are already model-sharded
+    and small per device, and FSDP on the vocab dim turns the token gather
+    into a full (B, S, d) all-gather (measured -1.6 GiB/step on granite
+    train_4k; EXPERIMENTS §Perf A4)."""
+    fs = tuple(a for a in fsdp_axes if a in mesh.axis_names)
+    fsize = 1
+    for a in fs:
+        fsize *= mesh.shape[a]
+
+    def keyed_fix(path, spec, struct):
+        if any(getattr(p, "key", None) == "embed" for p in path):
+            return fix(spec, struct, no_fsdp=True)
+        return fix(spec, struct)
+
+    def fix(spec, struct, no_fsdp: bool = False):
+        if not isinstance(spec, P):
+            return spec
+        shape = struct.shape
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for i, e in enumerate(entries):
+            axes = tuple(a for a in _axes_of(e) if a in mesh.axis_names)
+            entries[i] = (axes if len(axes) > 1 else
+                          (axes[0] if axes else None))
+            size = 1
+            for a in axes:
+                size *= mesh.shape[a]
+            if size > 1 and shape[i] % size:
+                entries[i] = None
+        if fsdp and not no_fsdp and fs and fsize > 1:
+            used = {a for e in entries for a in _axes_of(e)}
+            if not used & set(fs):
+                cands = [i for i, e in enumerate(entries)
+                         if e is None and shape[i] % fsize == 0
+                         and shape[i] >= 2 * fsize]
+                if cands:
+                    i = max(cands, key=lambda j: shape[j])
+                    entries[i] = fs if len(fs) > 1 else fs[0]
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(
+        keyed_fix, specs, structs, is_leaf=lambda s: isinstance(s, P))
+
+
+def to_shard(mesh: Mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,254 @@
+"""Abstract input/state specs (ShapeDtypeStruct) for lowering — the dry-run
+never allocates a real tensor.
+
+``step_spec(cfg, shape, mesh)`` returns everything needed to
+``jit(fn).lower(...)`` one (architecture x input shape) pair:
+the step callable, abstract args, and in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig, TrainConfig
+from repro.launch.sharding import fix_specs
+from repro.models import decode as decode_mod
+from repro.models import transformer
+from repro.models.common import BATCH_AXES, ShardingPolicy
+from repro.serve.engine import serve_policy, serve_step
+from repro.train import trainer
+from repro.train.loss import chunked_ce_loss
+
+
+def _mesh_batch_shards(mesh: Mesh) -> int:
+    n = 1
+    for a in BATCH_AXES:
+        if a in mesh.axis_names:
+            n *= mesh.shape[a]
+    return n
+
+
+def _abstract(tree, shardings):
+    """Attach shardings to ShapeDtypeStructs (lower() consumes these)."""
+    return jax.tree.map(
+        lambda x, s: jax.ShapeDtypeStruct(x.shape, x.dtype, sharding=s),
+        tree, shardings)
+
+
+def _to_shard(mesh, tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda s: isinstance(s, P))
+
+
+def _subset_structs(structs, specs):
+    """Project a struct tree onto the (possibly smaller) spec-tree shape."""
+    if isinstance(specs, dict):
+        return {k: _subset_structs(structs[k], v) for k, v in specs.items()}
+    return structs
+
+
+class StepSpec(NamedTuple):
+    fn: Any                  # the function to jit
+    args: Tuple              # abstract args (with shardings attached)
+    in_shardings: Any
+    out_shardings: Any
+    donate: Tuple[int, ...]
+    policy: ShardingPolicy
+    meta: Dict[str, Any]
+
+
+def train_policy(mesh: Mesh, shape: InputShape) -> ShardingPolicy:
+    return ShardingPolicy(
+        batch_sharded=shape.global_batch % _mesh_batch_shards(mesh) == 0,
+        seq_shard="model" in mesh.axis_names,
+        mesh_axes=tuple(mesh.axis_names),
+        mesh_sizes=tuple(mesh.shape.items()))
+
+
+def _batch_structs(cfg: ModelConfig, shape: InputShape, dtype,
+                   seq: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    b, s = shape.global_batch, seq or shape.seq_len
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32),
+             "targets": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder_seq, cfg.d_model), dtype)
+    if cfg.vision_tokens:
+        batch["memory"] = jax.ShapeDtypeStruct(
+            (b, cfg.vision_tokens, cfg.d_model), dtype)
+    return batch
+
+
+def train_spec(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+               tcfg: Optional[TrainConfig] = None, dtype=jnp.bfloat16,
+               moe_strategy: str = "tensor") -> StepSpec:
+    tcfg = tcfg or TrainConfig()
+    policy = train_policy(mesh, shape)
+    n_groups = _mesh_batch_shards(mesh) * mesh.shape.get("model", 1)
+    state_structs = jax.eval_shape(
+        lambda k: trainer.init_train_state(k, cfg, dtype),
+        jax.random.key(0))
+    batch = _batch_structs(cfg, shape, dtype)
+    raw_s = fix_specs(trainer.train_state_specs(cfg, moe_strategy),
+                      state_structs, mesh, fsdp=True)
+    raw_b = fix_specs(trainer.batch_sharding(mesh, cfg, policy), batch, mesh)
+    sspecs = _to_shard(mesh, raw_s)
+    bspecs = _to_shard(mesh, raw_b)
+    fn = functools.partial(trainer.train_step, cfg=cfg, tcfg=tcfg,
+                           policy=policy, n_groups=n_groups,
+                           moe_strategy=moe_strategy,
+                           grad_specs=sspecs.params)
+    return StepSpec(
+        fn=fn,
+        args=(_abstract(state_structs, sspecs), _abstract(batch, bspecs)),
+        in_shardings=(sspecs, bspecs),
+        out_shardings=(sspecs, NamedSharding(mesh, P())),
+        donate=(0,),
+        policy=policy,
+        meta={"kind": "train", "n_groups": n_groups})
+
+
+def prefill_step(params, batch, *, cfg, policy, tcfg, n_groups=1):
+    """Prefill: full-sequence forward -> last-position logits (B, V).
+
+    Serving-realistic: the (B, S, V) logits tensor is never materialized;
+    the chunked-CE helper scores the sequence (perplexity servers do this)
+    and the final position's logits come from one (B, d) unembed."""
+    memory = batch.get("memory")
+    if cfg.encoder_layers:
+        memory = transformer.encode(params, batch["frames"], cfg, policy,
+                                    remat=False)
+    hidden, _ = transformer.hidden_forward(
+        params, batch["tokens"], cfg, policy, memory=memory, remat=False,
+        n_groups=n_groups)
+    from repro.models import common as mcommon
+    last_logits = mcommon.unembed(hidden[:, -1], params["embed"],
+                                  cfg.final_softcap)
+    loss, _ = chunked_ce_loss(hidden, batch["targets"], params["embed"],
+                              cfg, tcfg.loss_chunk)
+    return last_logits, loss
+
+
+def prefill_spec(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                 dtype=jnp.bfloat16) -> StepSpec:
+    tcfg = TrainConfig()
+    policy = train_policy(mesh, shape)
+    n_groups = _mesh_batch_shards(mesh) * mesh.shape.get("model", 1)
+    param_structs = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, dtype), jax.random.key(0))
+    batch = _batch_structs(cfg, shape, dtype)
+    pspecs = _to_shard(mesh, fix_specs(transformer.param_specs(cfg),
+                                       param_structs, mesh, fsdp=True))
+    bspecs = _to_shard(mesh, fix_specs(
+        trainer.batch_sharding(mesh, cfg, policy), batch, mesh))
+    fn = functools.partial(prefill_step, cfg=cfg, policy=policy, tcfg=tcfg,
+                           n_groups=n_groups)
+    b = tuple(a for a in BATCH_AXES if a in mesh.axis_names) \
+        if policy.batch_sharded else None
+    v_ax = "model" if cfg.vocab_size % mesh.shape.get("model", 1) == 0 \
+        else None
+    return StepSpec(
+        fn=fn,
+        args=(_abstract(param_structs, pspecs), _abstract(batch, bspecs)),
+        in_shardings=(pspecs, bspecs),
+        out_shardings=(NamedSharding(mesh, P(b, v_ax)),
+                       NamedSharding(mesh, P())),
+        donate=(),
+        policy=policy,
+        meta={"kind": "prefill", "n_groups": n_groups})
+
+
+def decode_spec(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+                dtype=jnp.bfloat16) -> StepSpec:
+    policy = serve_policy(mesh, shape.global_batch)
+    window_override = (shape.seq_len > 32_768
+                       and cfg.long_context == "sliding_window")
+    b_count = shape.global_batch
+    param_structs = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, dtype), jax.random.key(0))
+    cache_structs = jax.eval_shape(
+        lambda: decode_mod.init_cache(cfg, b_count, shape.seq_len, dtype,
+                                      window_override=window_override))
+    if cfg.vision_tokens or cfg.encoder_layers:
+        mem_len = cfg.vision_tokens or cfg.encoder_seq
+        mem = jax.ShapeDtypeStruct((b_count, mem_len, cfg.d_model), dtype)
+        cache_structs = jax.eval_shape(
+            lambda p, c, m: decode_mod.prefill_cross(p, c, m, cfg),
+            param_structs, cache_structs, mem)
+    pspecs = _to_shard(mesh, fix_specs(transformer.param_specs(cfg),
+                                       param_structs, mesh, fsdp=True))
+    raw_c = decode_mod.cache_specs(cfg, policy)
+    cspecs = _to_shard(mesh, jax.tree.map(
+        lambda s_, st: fix_specs(s_, st, mesh),
+        raw_c, _subset_structs(cache_structs, raw_c),
+        is_leaf=lambda s_: isinstance(s_, P)))
+    # cross-cache entries ('xkv') were added by prefill_cross: extend specs
+    cspecs = _fill_missing_specs(mesh, cache_structs, cspecs, policy)
+    b = tuple(a for a in BATCH_AXES if a in mesh.axis_names) \
+        if policy.batch_sharded else None
+    tok = jax.ShapeDtypeStruct((b_count, 1), jnp.int32)
+    fn = functools.partial(
+        serve_step, cfg=cfg, policy=policy,
+        window_override=window_override, cache_len=shape.seq_len,
+        temperature=0.0)
+    tok_shard = NamedSharding(mesh, P(b, None))
+    rep = NamedSharding(mesh, P())
+    key_struct = jax.eval_shape(lambda: jax.random.key(0))
+    return StepSpec(
+        fn=fn,
+        args=(_abstract(param_structs, pspecs),
+              _abstract(cache_structs, cspecs),
+              jax.ShapeDtypeStruct(tok.shape, tok.dtype, sharding=tok_shard),
+              jax.ShapeDtypeStruct(key_struct.shape, key_struct.dtype,
+                                   sharding=rep)),
+        in_shardings=(pspecs, cspecs, tok_shard, rep),
+        out_shardings=(tok_shard, cspecs),
+        donate=(1,),
+        policy=policy,
+        meta={"kind": "decode", "window_override": window_override})
+
+
+def _fill_missing_specs(mesh: Mesh, structs, specs, policy: ShardingPolicy):
+    """Cache trees gain cross-KV ('xkv') entries after prefill_cross; give
+    those a (batch, mem_seq, heads->model, hd) sharding and keep the rest."""
+    b = policy.cache_batch_axes
+
+    def xkv_spec(struct):
+        # (B, S_mem, H, hd) or stacked (L, B, S_mem, H, hd)
+        stacked = len(struct.shape) == 5
+        base = [b, None, "model", None]
+        if stacked:
+            base = [None] + base
+        raw = P(*base)
+        return NamedSharding(mesh, fix_specs(raw, struct, mesh))
+
+    def walk(st, sp):
+        if isinstance(st, dict):
+            sp = sp if isinstance(sp, dict) else {}
+            out = {}
+            for k, v in st.items():
+                if k in sp:
+                    out[k] = walk(v, sp[k])
+                elif k == "xkv":
+                    out[k] = jax.tree.map(xkv_spec, v)
+                else:
+                    out[k] = jax.tree.map(
+                        lambda _: NamedSharding(mesh, P()), v)
+            return out
+        return sp
+
+    return walk(structs, specs)
+
+
+def step_spec(cfg: ModelConfig, shape: InputShape, mesh: Mesh,
+              dtype=jnp.bfloat16, moe_strategy: str = "tensor") -> StepSpec:
+    if shape.kind == "train":
+        return train_spec(cfg, shape, mesh, dtype=dtype,
+                          moe_strategy=moe_strategy)
+    if shape.kind == "prefill":
+        return prefill_spec(cfg, shape, mesh, dtype=dtype)
+    return decode_spec(cfg, shape, mesh, dtype=dtype)

@@ -1,0 +1,82 @@
+"""LM training driver (CPU-runnable at smoke scale; dry-run at full scale).
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-8b --smoke \
+        --steps 100 --batch 8 --seq 128
+
+``--smoke`` swaps in the reduced config (2 layers, d_model 256) so a real
+optimization run fits this container; without it the full config is
+expected to be launched on the production mesh (see dryrun.py for the
+lowering proof).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, TrainConfig, get_config, smoke_config
+from repro.data.pipeline import lm_batches
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import ShardingPolicy
+from repro.train import checkpoint, init_train_state, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="granite-8b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--save", type=str, default="")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    tcfg = TrainConfig(lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps, loss_chunk=min(args.seq, 512))
+    mesh = make_host_mesh(data=len(jax.devices()), model=1)
+    policy = ShardingPolicy(
+        batch_sharded=args.batch % mesh.shape["data"] == 0,
+        seq_shard=False, mesh_axes=tuple(mesh.axis_names),
+        mesh_sizes=tuple(mesh.shape.items()))
+
+    state = init_train_state(jax.random.key(args.seed), cfg)
+    n_params = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"arch={cfg.name} params={n_params/1e6:.1f}M "
+          f"devices={len(jax.devices())}")
+
+    step_fn = make_train_step(mesh, cfg, tcfg, policy, donate=True)
+    gen = lm_batches(cfg.vocab_size, args.batch, args.seq, seed=args.seed)
+
+    t0 = time.time()
+    for step in range(args.steps):
+        toks, tgts = next(gen)
+        batch = {"tokens": jnp.asarray(toks), "targets": jnp.asarray(tgts)}
+        if cfg.encoder_layers:
+            batch["frames"] = jnp.asarray(np.random.default_rng(step).normal(
+                0, 0.02, (args.batch, cfg.encoder_seq, cfg.d_model)),
+                jnp.float32)
+        if cfg.vision_tokens:
+            batch["memory"] = jnp.asarray(np.random.default_rng(step).normal(
+                0, 0.02, (args.batch, cfg.vision_tokens, cfg.d_model)),
+                jnp.float32)
+        state, metrics = step_fn(state, batch)
+        if step % args.log_every == 0 or step == args.steps - 1:
+            print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                  f"acc={float(metrics['accuracy']):.3f} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"({(time.time()-t0)/(step+1)*1e3:.0f} ms/step)")
+    if args.save:
+        checkpoint.save(args.save, state.params)
+        print(f"saved params to {args.save}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""Model zoo: pattern-driven transformer/SSM/hybrid stacks (DESIGN §3).
+
+Public surface:
+    transformer.init_params / param_specs / forward / encode
+    decode.init_cache / cache_specs / prefill_cross / decode_step
+"""
+from repro.models import (attention, common, decode, mla, moe, rglru, ssm,
+                          transformer)  # noqa: F401

@@ -1,0 +1,276 @@
+"""Attention blocks: GQA self-attention (RoPE, sliding window, soft-cap),
+cross-attention, and split-KV cached decoding.
+
+Memory discipline:
+ - prefill/train attention is *blockwise over KV chunks* (online softmax via
+   ``lax.scan``) so the (S, S) score matrix never materializes — the pure-JAX
+   analogue of flash attention, and the form that lowers/compiles for 32k
+   sequences on the production mesh;
+ - decode attends one query token against a cache whose *sequence dim is
+   sharded over the ``model`` axis* (flash-decoding / split-KV): the softmax
+   max/sum and the weighted-value contraction reduce over the sharded dim,
+   which GSPMD turns into the psum pair.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import (KeyGen, MODEL_AXIS, ShardingPolicy,
+                                 apply_rope, dense_init, softcap)
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+def init_attn(kg: KeyGen, cfg: ModelConfig, dtype,
+              kv_d_model: Optional[int] = None) -> Dict:
+    """GQA projection params. ``kv_d_model``: source dim for K/V (cross)."""
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, kv = cfg.num_heads, cfg.num_kv_heads
+    kvd = kv_d_model or d
+    p = {
+        "wq": dense_init(kg(), (d, h, hd), dtype, in_axis=0),
+        "wk": dense_init(kg(), (kvd, kv, hd), dtype, in_axis=0),
+        "wv": dense_init(kg(), (kvd, kv, hd), dtype, in_axis=0),
+        "wo": dense_init(kg(), (h, hd, d), dtype, in_axis=1),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.init_rmsnorm(hd, dtype)
+        p["k_norm"] = common.init_rmsnorm(hd, dtype)
+    return p
+
+
+def spec_attn(cfg: ModelConfig) -> Dict:
+    p = {
+        "wq": P(None, MODEL_AXIS, None),
+        "wk": P(None, MODEL_AXIS, None),
+        "wv": P(None, MODEL_AXIS, None),
+        "wo": P(MODEL_AXIS, None, None),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = common.spec_rmsnorm()
+        p["k_norm"] = common.spec_rmsnorm()
+    return p
+
+
+def _project_qkv(x: jax.Array, kv_src: jax.Array, p: Dict, cfg: ModelConfig
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("btd,dhk->bthk", kv_src, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("btd,dhk->bthk", kv_src, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.qk_norm:
+        q = common.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = common.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Blockwise (online-softmax) attention — the prefill/train path
+# ---------------------------------------------------------------------------
+def _blockwise_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+                    *, causal: bool, window: int, cap: float,
+                    q_offset: jax.Array | int = 0,
+                    kv_chunk: int = 1024,
+                    policy=None) -> jax.Array:
+    """q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd). Returns (B, Sq, H, hd).
+
+    Scans over KV chunks keeping (out_acc, row_max, row_sum) — the score
+    matrix lives only one (Sq, kv_chunk) block at a time.
+
+    Heads stay ONE flat axis throughout (K/V repeated to H inside the
+    step): a (kvh, group) split makes GSPMD factor the 16-way model axis
+    as {kvh x group} and flip-flop against the seq sharding — measured as
+    'involuntary full rematerialization' + ~4 GiB/layer of extra
+    all-gather/all-reduce on granite train_4k (EXPERIMENTS §Perf, A1).
+    """
+    b, sq, h, hd = q.shape
+    skv, kvh = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]                      # may differ from hd (MLA)
+    group = h // kvh
+    scale = hd ** -0.5
+    kv_chunk = min(kv_chunk, skv)
+    n_chunks = -(-skv // kv_chunk)
+    pad = n_chunks * kv_chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(b, n_chunks, kv_chunk, kvh, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, kvh, hdv).transpose(1, 0, 2, 3, 4)
+
+    q_pos = (jnp.arange(sq) + q_offset)[None, :, None, None]
+    inner = None
+    if policy is not None:
+        from jax.sharding import PartitionSpec as P
+        bspec = policy.batch_axes if policy.batch_sharded else None
+        inner = P(bspec, None, policy.model_axis, None)
+
+    def _c(x):
+        return policy.constrain(x, inner) if policy is not None else x
+
+    def step(carry, inp):
+        out, m, l = carry
+        ci, kb, vb = inp                       # kb/vb: (B, C, KV, hd)
+        if group > 1:                          # GQA: repeat KV to H heads
+            kb = jnp.repeat(kb, group, axis=2)
+            vb = jnp.repeat(vb, group, axis=2)
+        s = jnp.einsum("bqhk,bchk->bqhc", q, kb,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cap)
+        kv_pos = (ci * kv_chunk
+                  + jnp.arange(kv_chunk))[None, None, None, :]
+        mask = kv_pos < skv                    # padding
+        if causal:
+            mask &= kv_pos <= q_pos
+        if window:
+            mask &= kv_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+        m_new = _c(jnp.maximum(m, jnp.max(s, axis=-1)))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = _c(l * corr + jnp.sum(p, axis=-1))
+        pv = jnp.einsum("bqhc,bchk->bqhk", p.astype(vb.dtype), vb,
+                        preferred_element_type=jnp.float32)
+        out = _c(out * corr[..., None] + pv)
+        return (out, m_new, l_new), None
+
+    out0 = _c(jnp.zeros((b, sq, h, hdv), jnp.float32))
+    m0 = _c(jnp.full((b, sq, h), NEG_INF, jnp.float32))
+    l0 = _c(jnp.zeros((b, sq, h), jnp.float32))
+    (out, _, l), _ = jax.lax.scan(
+        step, (out0, m0, l0), (jnp.arange(n_chunks), kc, vc))
+    out = out / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype)
+
+
+def self_attention(x: jax.Array, p: Dict, cfg: ModelConfig,
+                   policy: ShardingPolicy, *, local: bool,
+                   causal: bool = True, positions=None) -> jax.Array:
+    """Full-sequence self-attention (train / prefill). x: (B, S, d)."""
+    q, k, v = _project_qkv(x, x, p, cfg)
+    pos = jnp.arange(x.shape[1]) if positions is None else positions
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+    q = policy.constrain(q, policy.inner())
+    k = policy.constrain(k, policy.inner())
+    v = policy.constrain(v, policy.inner())
+    window = cfg.sliding_window if local else 0
+    out = _blockwise_attn(q, k, v, causal=causal, window=window,
+                          cap=cfg.logit_softcap, policy=policy)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def cross_attention(x: jax.Array, memory: jax.Array, p: Dict,
+                    cfg: ModelConfig, policy: ShardingPolicy) -> jax.Array:
+    """x: (B, S, d) queries; memory: (B, S_mem, d_mem) keys/values."""
+    q, k, v = _project_qkv(x, memory, p, cfg)
+    q = policy.constrain(q, policy.inner())
+    out = _blockwise_attn(q, k, v, causal=False, window=0, cap=0.0,
+                          policy=policy)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cached decode — split-KV over the model axis
+# ---------------------------------------------------------------------------
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype
+                  ) -> Dict[str, jax.Array]:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+            "v": jnp.zeros((batch, cache_len, kv, hd), dtype)}
+
+
+def spec_kv_cache(policy: ShardingPolicy) -> Dict[str, P]:
+    b = policy.cache_batch_axes
+    # sequence dim sharded over model => flash-decoding split-KV
+    return {"k": P(b, MODEL_AXIS, None, None),
+            "v": P(b, MODEL_AXIS, None, None)}
+
+
+def decode_self_attention(x: jax.Array, cache: Dict, pos: jax.Array, p: Dict,
+                          cfg: ModelConfig, policy: ShardingPolicy, *,
+                          local: bool) -> Tuple[jax.Array, Dict]:
+    """One-token decode. x: (B, 1, d); cache k/v: (B, L, KV, hd); pos: ().
+
+    For ``local`` (sliding-window) layers the cache is a ring buffer of
+    length ``window`` — the 524k-context configs never materialize a 524k
+    cache for windowed layers.
+    """
+    b, _, d = x.shape
+    cache_len = cache["k"].shape[1]
+    q, k_new, v_new = _project_qkv(x, x, p, cfg)
+    q = apply_rope(q, pos[None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[None], cfg.rope_theta)
+
+    slot = jnp.mod(pos, cache_len)        # ring semantics (identity if full)
+    k = jax.lax.dynamic_update_slice(
+        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(
+        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    new_cache = {"k": k, "v": v}
+
+    kvh, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    h = cfg.num_heads
+    group = h // kvh
+    qg = q.reshape(b, kvh, group, hd)
+    s = jnp.einsum("bhgk,bthk->bhgt", qg, k,
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    s = softcap(s, cfg.logit_softcap)
+    # valid-position mask: prefix until the cache wraps, then every slot
+    # holds one of the last `cache_len` tokens (ring; local layers only —
+    # full-attention caches are sized so pos < cache_len always).
+    idx = jnp.arange(cache_len)[None, None, None, :]
+    valid = (idx <= pos) | (jnp.asarray(pos) >= cache_len)
+    s = jnp.where(valid, s, NEG_INF)
+    # softmax + value contraction reduce over the model-sharded t dim
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthk->bhgk", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, new_cache
+
+
+def init_cross_cache(cfg: ModelConfig, memory: jax.Array, p: Dict
+                     ) -> Dict[str, jax.Array]:
+    """Precompute cross-attention K/V once per request (decode)."""
+    k = jnp.einsum("btd,dhk->bthk", memory, p["wk"],
+                   preferred_element_type=jnp.float32).astype(memory.dtype)
+    v = jnp.einsum("btd,dhk->bthk", memory, p["wv"],
+                   preferred_element_type=jnp.float32).astype(memory.dtype)
+    if cfg.qk_norm:
+        k = common.rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return {"k": k, "v": v}
+
+
+def decode_cross_attention(x: jax.Array, cross_cache: Dict, p: Dict,
+                           cfg: ModelConfig) -> jax.Array:
+    b = x.shape[0]
+    kvh, hd, h = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.num_heads
+    group = h // kvh
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.qk_norm:
+        q = common.rmsnorm(q, p["q_norm"], cfg.norm_eps)
+    qg = q.reshape(b, kvh, group, hd)
+    s = jnp.einsum("bhgk,bthk->bhgt", qg, cross_cache["k"],
+                   preferred_element_type=jnp.float32) * hd ** -0.5
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgt,bthk->bhgk", w.astype(x.dtype), cross_cache["v"],
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h, hd).astype(x.dtype)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,281 @@
+"""Shared model-building blocks: norms, MLPs, RoPE, embeddings, sharding.
+
+Conventions used across the zoo:
+ - Parameters are nested dicts of jax.Arrays; every ``init_*`` function has a
+   matching ``spec_*`` function returning an *identically-shaped* pytree of
+   ``PartitionSpec`` leaves (asserted in tests/test_zoo_specs.py).
+ - Mesh axes: ``data`` (+ optional ``pod``) shard batch; ``model`` shards
+   heads / d_ff / vocab / experts (tensor parallelism). The residual stream
+   is sequence-sharded over ``model`` between blocks (Megatron-SP style) —
+   see ``seq_shard``.
+ - All matmuls accumulate in float32 (``preferred_element_type``); params and
+   activations are bf16 under the production configs, f32 in CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+# Mesh-axis vocabulary (see launch/mesh.py).
+BATCH_AXES = ("pod", "data")     # axes that shard batch (pod absent => data)
+MODEL_AXIS = "model"
+
+
+def batch_spec(shardable: bool = True):
+    """Partition entry for a batch dim; None when batch < axis size."""
+    return BATCH_AXES if shardable else None
+
+
+def constrain(x: jax.Array, spec: P) -> jax.Array:
+    """with_sharding_constraint that is a no-op outside jit/mesh contexts."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+def dense_init(key: jax.Array, shape: Tuple[int, ...], dtype,
+               in_axis: int = -2) -> jax.Array:
+    """LeCun-normal (fan-in) init — standard for transformer projections."""
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32)
+            * (1.0 / jnp.sqrt(fan_in))).astype(dtype)
+
+
+def embed_init(key: jax.Array, shape: Tuple[int, ...], dtype) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+class KeyGen:
+    """Deterministic named key stream (avoids manual split bookkeeping)."""
+
+    def __init__(self, key: jax.Array):
+        self._key = key
+        self._i = 0
+
+    def __call__(self) -> jax.Array:
+        self._i += 1
+        return jax.random.fold_in(self._key, self._i)
+
+
+# ---------------------------------------------------------------------------
+# Norms / activations
+# ---------------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype) -> Dict[str, jax.Array]:
+    return {"scale": jnp.zeros((d,), dtype)}     # gemma-style (1 + scale)
+
+
+def spec_rmsnorm() -> Dict[str, P]:
+    return {"scale": P(None)}
+
+
+def rmsnorm(x: jax.Array, p: Dict[str, jax.Array], eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + p["scale"].astype(jnp.float32))
+    return out.astype(dt)
+
+
+def init_layernorm(d: int, dtype) -> Dict[str, jax.Array]:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def spec_layernorm() -> Dict[str, P]:
+    return {"scale": P(None), "bias": P(None)}
+
+
+def layernorm(x: jax.Array, p: Dict[str, jax.Array], eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = ((xf - mu) * jax.lax.rsqrt(var + eps)
+           * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32))
+    return out.astype(dt)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """gemma2 logit soft-capping: cap * tanh(x / cap)."""
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# MLP (gated SwiGLU-style or plain 2-matrix)
+# ---------------------------------------------------------------------------
+def init_mlp(kg: KeyGen, d_model: int, d_ff: int, gated: bool, dtype):
+    p = {"up": dense_init(kg(), (d_model, d_ff), dtype),
+         "down": dense_init(kg(), (d_ff, d_model), dtype)}
+    if gated:
+        p["gate"] = dense_init(kg(), (d_model, d_ff), dtype)
+    return p
+
+
+def spec_mlp(gated: bool):
+    p = {"up": P(None, MODEL_AXIS), "down": P(MODEL_AXIS, None)}
+    if gated:
+        p["gate"] = P(None, MODEL_AXIS)
+    return p
+
+
+def mlp(x: jax.Array, p: Dict[str, jax.Array], act: str) -> jax.Array:
+    f = activation(act)
+    h = jnp.einsum("...d,df->...f", x, p["up"],
+                   preferred_element_type=jnp.float32)
+    if "gate" in p:
+        g = jnp.einsum("...d,df->...f", x, p["gate"],
+                       preferred_element_type=jnp.float32)
+        h = f(g) * h
+    else:
+        h = f(h)
+    h = h.astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, p["down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    i = jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+    return 1.0 / (theta ** (i / head_dim))          # (head_dim/2,)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) or (..., S, hd); positions: broadcastable (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                   # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    if x.ndim >= ang.ndim + 2:                      # head axis present
+        ang = ang[..., None, :]                     # (..., S, 1, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+def init_embed(kg: KeyGen, vocab: int, d_model: int, tie: bool, dtype):
+    p = {"tok": embed_init(kg(), (vocab, d_model), dtype)}
+    if not tie:
+        p["head"] = dense_init(kg(), (d_model, vocab), dtype)
+    return p
+
+
+def spec_embed(tie: bool):
+    # untied: shard the table on d_model — the token gather then reads local
+    # d-slices (no vocab all-gather; §Perf A3). Tied tables stay vocab-
+    # sharded so the unembed contraction keeps its d dim replicated.
+    if tie:
+        return {"tok": P(MODEL_AXIS, None)}
+    return {"tok": P(None, MODEL_AXIS), "head": P(None, MODEL_AXIS)}
+
+
+def embed(tokens: jax.Array, p: Dict[str, jax.Array]) -> jax.Array:
+    return jnp.take(p["tok"], tokens, axis=0)
+
+
+def unembed(x: jax.Array, p: Dict[str, jax.Array],
+            final_cap: float = 0.0) -> jax.Array:
+    w = p.get("head")
+    if w is None:
+        w = p["tok"].T
+    logits = jnp.einsum("...d,dv->...v", x, w,
+                        preferred_element_type=jnp.float32)
+    return softcap(logits, final_cap)
+
+
+# ---------------------------------------------------------------------------
+# Residual-stream sharding policy
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShardingPolicy:
+    """How activations are sharded for a given (mesh, input shape).
+
+    ``batch_sharded``: batch dim >= product of batch axes.
+    ``seq_shard``: sequence-shard the residual stream over ``model``
+    (Megatron-SP); turned off for decode single-token steps.
+    ``mesh_axes``: axis names present in the target mesh — entries naming
+    absent axes are dropped so constraints never silently no-op.
+    """
+    batch_sharded: bool = True
+    seq_shard: bool = True
+    mesh_axes: Tuple[str, ...] = ("data", "model")
+    # ((axis, size), ...) for divisibility-aware constraints; empty = skip
+    mesh_sizes: Tuple[Tuple[str, int], ...] = ()
+    # caches may stay batch-sharded even when activations are replicated
+    # (weight-stationary decode, §Perf C): None = follow batch_sharded
+    cache_batch_sharded: Optional[bool] = None
+    # decode residual: shard d_model over 'data' to MATCH the weights'
+    # FSDP dim — contractions become local partials + tiny activation
+    # psums instead of per-step weight all-gathers (§Perf C2)
+    residual_d_shard: bool = False
+
+    @property
+    def batch_axes(self) -> Optional[Tuple[str, ...]]:
+        axes = tuple(a for a in BATCH_AXES if a in self.mesh_axes)
+        return axes or None
+
+    @property
+    def cache_batch_axes(self) -> Optional[Tuple[str, ...]]:
+        sharded = (self.batch_sharded if self.cache_batch_sharded is None
+                   else self.cache_batch_sharded)
+        return self.batch_axes if sharded else None
+
+    @property
+    def model_axis(self) -> Optional[str]:
+        return MODEL_AXIS if MODEL_AXIS in self.mesh_axes else None
+
+    def residual(self) -> P:
+        b = self.batch_axes if self.batch_sharded else None
+        s = self.model_axis if self.seq_shard else None
+        d = ("data" if self.residual_d_shard and "data" in self.mesh_axes
+             else None)
+        return P(b, s, d)
+
+    def inner(self) -> P:
+        """Within attention/MLP: batch on data, heads/ff on model."""
+        b = self.batch_axes if self.batch_sharded else None
+        return P(b, None, self.model_axis)
+
+    def fit(self, spec: P, shape: Tuple[int, ...]) -> P:
+        """Drop spec entries whose dim is not divisible on this mesh."""
+        if not self.mesh_sizes:
+            return spec
+        sizes = dict(self.mesh_sizes)
+        entries = list(spec) + [None] * (len(shape) - len(spec))
+        for i, e in enumerate(entries):
+            axes = (e,) if isinstance(e, str) else (e or ())
+            n = 1
+            for a in axes:
+                n *= sizes.get(a, 1)
+            if n > 1 and shape[i] % n:
+                entries[i] = None
+        return P(*entries)
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        return constrain(x, self.fit(spec, x.shape))
+
+
+FULL_POLICY = ShardingPolicy()

@@ -1,0 +1,274 @@
+"""Cached one-token decode across heterogeneous layer stacks.
+
+Cache layout mirrors the param layout (first / blocks / rem): scanned
+pattern positions carry a ``(repeats, ...)`` stacked cache so the decode
+step is a single ``lax.scan`` zipping (params, cache) -> (params, new cache).
+
+Cache sizing policy (DESIGN §5):
+ - full-attention layers get a ``cache_len``-token KV cache, sequence dim
+   sharded over ``model`` (split-KV / flash-decoding);
+ - sliding-window layers get a ``min(window, cache_len)`` ring buffer;
+ - ``window_override=True`` (the long_500k serving variant) forces EVERY
+   attention layer onto the ring buffer — the documented sub-quadratic path
+   for dense archs at 524k context;
+ - SSM / RG-LRU layers carry O(1) recurrent state;
+ - MLA layers cache the compressed (c, k_r) latent;
+ - cross-attention K/V (VLM vision tokens, whisper encoder output) is
+   precomputed once per request by ``prefill_cross``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ATTN, CROSS, LOCAL_ATTN, RGLRU, SSM,
+                                ModelConfig)
+from repro.models import attention, common, mla, rglru, ssm
+from repro.models.common import MODEL_AXIS, ShardingPolicy
+from repro.models.transformer import (ENCDEC, _norms, apply_block, layout)
+
+
+def _attn_cache_len(kind: str, cfg: ModelConfig, cache_len: int,
+                    window_override: bool) -> int:
+    if kind == LOCAL_ATTN or window_override:
+        return min(cfg.sliding_window, cache_len)
+    return cache_len
+
+
+def _is_local(kind: str, cfg: ModelConfig, cache_len: int,
+              window_override: bool) -> bool:
+    return _attn_cache_len(kind, cfg, cache_len, window_override) < cache_len
+
+
+# ---------------------------------------------------------------------------
+# Cache init / specs
+# ---------------------------------------------------------------------------
+def init_block_cache(kind: str, cfg: ModelConfig, batch: int, cache_len: int,
+                     dtype, window_override: bool) -> Dict:
+    if kind in (ATTN, LOCAL_ATTN, ENCDEC):
+        if cfg.mla is not None:
+            return {"kv": mla.init_mla_cache(cfg, batch, cache_len, dtype)}
+        ln = _attn_cache_len(kind, cfg, cache_len, window_override)
+        return {"kv": attention.init_kv_cache(cfg, batch, ln, dtype)}
+    if kind == CROSS:
+        return {}                      # filled by prefill_cross
+    if kind == SSM:
+        return {"ssm": ssm.init_ssm_cache(cfg, batch, dtype)}
+    if kind == RGLRU:
+        return {"rec": rglru.init_rglru_cache(cfg, batch, dtype)}
+    raise ValueError(kind)
+
+
+def spec_block_cache(kind: str, cfg: ModelConfig, policy: ShardingPolicy
+                     ) -> Dict:
+    if kind in (ATTN, LOCAL_ATTN, ENCDEC):
+        if cfg.mla is not None:
+            return {"kv": mla.spec_mla_cache(policy)}
+        return {"kv": attention.spec_kv_cache(policy)}
+    if kind == CROSS:
+        return {}       # xkv is added by prefill_cross (specs follow suit)
+    if kind == SSM:
+        return {"ssm": ssm.spec_ssm_cache(policy)}
+    if kind == RGLRU:
+        return {"rec": rglru.spec_rglru_cache(policy)}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype,
+               window_override: bool = False) -> Dict:
+    lay = layout(cfg)
+
+    def stack(n, make):
+        leaves = [make(i) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    cache: Dict[str, Any] = {"pos": jnp.zeros((), jnp.int32)}
+    if lay.first:
+        cache["first"] = {
+            f"{i}_{k}": init_block_cache(k, cfg, batch, cache_len, dtype,
+                                         window_override)
+            for i, k in enumerate(lay.first)}
+    cache["blocks"] = {
+        f"{i}_{k}": stack(lay.repeats,
+                          lambda _i: init_block_cache(
+                              k, cfg, batch, cache_len, dtype,
+                              window_override))
+        for i, k in enumerate(lay.period)}
+    if lay.remainder:
+        cache["rem"] = {
+            f"{i}_{k}": init_block_cache(k, cfg, batch, cache_len, dtype,
+                                         window_override)
+            for i, k in enumerate(lay.remainder)}
+    return cache
+
+
+def cache_specs(cfg: ModelConfig, policy: ShardingPolicy) -> Dict:
+    lay = layout(cfg)
+
+    def stacked(tree):
+        return jax.tree.map(lambda s: P(None, *s), tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    specs: Dict[str, Any] = {"pos": P()}
+    if lay.first:
+        specs["first"] = {
+            f"{i}_{k}": spec_block_cache(k, cfg, policy)
+            for i, k in enumerate(lay.first)}
+    specs["blocks"] = {
+        f"{i}_{k}": stacked(spec_block_cache(k, cfg, policy))
+        for i, k in enumerate(lay.period)}
+    if lay.remainder:
+        specs["rem"] = {
+            f"{i}_{k}": spec_block_cache(k, cfg, policy)
+            for i, k in enumerate(lay.remainder)}
+    return specs
+
+
+def prefill_cross(params: Dict, cache: Dict, memory: jax.Array,
+                  cfg: ModelConfig) -> Dict:
+    """Precompute cross-attention K/V from (B, S_mem, d) memory."""
+    lay = layout(cfg)
+    cache = dict(cache)
+
+    def fill(block_params, kind):
+        if kind == CROSS or kind == ENCDEC:
+            return {"xkv": attention.init_cross_cache(
+                cfg, memory, block_params["xattn"])}
+        return None
+
+    blocks = dict(cache["blocks"])
+    for i, k in enumerate(lay.period):
+        key = f"{i}_{k}"
+        if k in (CROSS, ENCDEC):
+            bp = params["blocks"][key]
+            xkv = jax.vmap(
+                lambda p: attention.init_cross_cache(cfg, memory,
+                                                     p["xattn"]))(bp)
+            merged = dict(jax.tree.map(lambda x: x, blocks[key])) \
+                if blocks[key] else {}
+            merged["xkv"] = xkv
+            blocks[key] = merged
+    cache["blocks"] = blocks
+    for sect, kinds in (("first", lay.first), ("rem", lay.remainder)):
+        if not kinds or sect not in cache:
+            continue
+        d = dict(cache[sect])
+        for i, k in enumerate(kinds):
+            if k in (CROSS, ENCDEC):
+                merged = dict(d[f"{i}_{k}"])
+                merged["xkv"] = attention.init_cross_cache(
+                    cfg, memory, params[sect][f"{i}_{k}"]["xattn"])
+                d[f"{i}_{k}"] = merged
+        cache[sect] = d
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# Decode step
+# ---------------------------------------------------------------------------
+def decode_block(x: jax.Array, bcache: Dict, p: Dict, kind: str,
+                 cfg: ModelConfig, policy: ShardingPolicy, pos: jax.Array,
+                 window_override: bool, cache_len: int
+                 ) -> Tuple[jax.Array, Dict]:
+    _, _, norm = _norms(cfg)
+    new_cache: Dict[str, Any] = dict(bcache)
+    h = norm(x, p["ln1"], cfg.norm_eps)
+    if kind in (ATTN, LOCAL_ATTN, ENCDEC):
+        if cfg.mla is not None:
+            y, kv = mla.decode_mla_attention(h, bcache["kv"], pos, p["attn"],
+                                             cfg, policy)
+        else:
+            y, kv = attention.decode_self_attention(
+                h, bcache["kv"], pos, p["attn"], cfg, policy,
+                local=_is_local(kind, cfg, cache_len, window_override))
+        new_cache["kv"] = kv
+        x = x + y
+    elif kind == CROSS:
+        y = attention.decode_cross_attention(h, bcache["xkv"], p["xattn"],
+                                             cfg)
+        x = x + jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype) * y
+    elif kind == SSM:
+        y, st = ssm.decode_ssm_block(h, bcache["ssm"], p["ssm"], cfg, policy)
+        new_cache["ssm"] = st
+        return policy.constrain(x + y, policy.residual()), new_cache
+    elif kind == RGLRU:
+        y, st = rglru.decode_rglru_block(h, bcache["rec"], p["rec"], cfg,
+                                         policy)
+        new_cache["rec"] = st
+        x = x + y
+    if kind == ENCDEC:
+        h = norm(x, p["lnx"], cfg.norm_eps)
+        x = x + attention.decode_cross_attention(h, bcache["xkv"],
+                                                 p["xattn"], cfg)
+    x = policy.constrain(x, policy.residual())
+    h = norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        from repro.models import moe as moe_mod
+        y, _ = moe_mod.moe_ffn(h, p["moe"], cfg)
+    else:
+        y = common.mlp(h, p["mlp"], cfg.act)
+    return policy.constrain(x + y, policy.residual()), new_cache
+
+
+def decode_step(params: Dict, cache: Dict, tokens: jax.Array,
+                cfg: ModelConfig, policy: ShardingPolicy,
+                window_override: bool = False, cache_len: int = 0
+                ) -> Tuple[jax.Array, Dict]:
+    """tokens: (B, 1) -> (logits (B, 1, V), new cache). pos from cache."""
+    _, _, norm = _norms(cfg)
+    lay = layout(cfg)
+    pos = cache["pos"]
+    x = common.embed(tokens, params["embed"])
+    if cfg.arch_type == "audio":
+        d = cfg.d_model
+        i = jnp.arange(0, d, 2, dtype=jnp.float32)
+        ang = pos.astype(jnp.float32) / (10000.0 ** (i / d))
+        pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None]
+        x = x + pe.astype(x.dtype)
+    x = policy.constrain(x, policy.residual())
+    new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+    if lay.first:
+        sec = {}
+        for i, kind in enumerate(lay.first):
+            key = f"{i}_{kind}"
+            x, bc = decode_block(x, cache["first"][key],
+                                 params["first"][key], kind, cfg, policy,
+                                 pos, window_override, cache_len)
+            sec[key] = bc
+        new_cache["first"] = sec
+
+    period_keys = [f"{i}_{k}" for i, k in enumerate(lay.period)]
+
+    def body(carry, inp):
+        h = carry
+        lp, lc = inp
+        out_c = {}
+        for pk in period_keys:
+            kind = pk.split("_", 1)[1]
+            h, bc = decode_block(h, lc[pk], lp[pk], kind, cfg, policy, pos,
+                                 window_override, cache_len)
+            out_c[pk] = bc
+        return h, out_c
+
+    x, blocks_cache = jax.lax.scan(
+        body, x, (params["blocks"],
+                  {k: cache["blocks"][k] for k in period_keys}))
+    new_cache["blocks"] = blocks_cache
+
+    if lay.remainder:
+        sec = {}
+        for i, kind in enumerate(lay.remainder):
+            key = f"{i}_{kind}"
+            x, bc = decode_block(x, cache["rem"][key], params["rem"][key],
+                                 kind, cfg, policy, pos, window_override,
+                                 cache_len)
+            sec[key] = bc
+        new_cache["rem"] = sec
+
+    x = norm(x, params["final_norm"], cfg.norm_eps)
+    logits = common.unembed(x, params["embed"], cfg.final_softcap)
+    return logits, new_cache

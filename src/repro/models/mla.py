@@ -1,0 +1,151 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+K/V are generated from a low-rank latent ``c = x @ W_dkv`` of width
+``kv_lora_rank`` plus a single shared RoPE key ``k_r``; the decode cache
+stores only ``(c, k_r)`` — (512 + 64) floats/token instead of
+``2 * H * head_dim`` — an ~8x cache compression.
+
+Decode uses the *absorbed* form: ``q_nope @ W_uk`` is folded into the query
+so attention scores contract directly against the latent cache; the
+per-head K matrix is never materialized at serving time.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import (KeyGen, MODEL_AXIS, ShardingPolicy,
+                                 apply_rope, dense_init)
+from repro.models.attention import NEG_INF, _blockwise_attn
+
+
+def init_mla(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.mla
+    d, h = cfg.d_model, cfg.num_heads
+    qk_dim = m.nope_head_dim + m.rope_head_dim
+    p = {
+        "wq": dense_init(kg(), (d, h, qk_dim), dtype, in_axis=0),
+        "w_dkv": dense_init(kg(), (d, m.kv_lora_rank), dtype, in_axis=0),
+        "w_kr": dense_init(kg(), (d, m.rope_head_dim), dtype, in_axis=0),
+        "kv_norm": common.init_rmsnorm(m.kv_lora_rank, dtype),
+        "w_uk": dense_init(
+            kg(), (m.kv_lora_rank, h, m.nope_head_dim), dtype, in_axis=0),
+        "w_uv": dense_init(
+            kg(), (m.kv_lora_rank, h, m.v_head_dim), dtype, in_axis=0),
+        "wo": dense_init(kg(), (h, m.v_head_dim, d), dtype, in_axis=1),
+    }
+    return p
+
+
+def spec_mla(cfg: ModelConfig) -> Dict:
+    return {
+        "wq": P(None, MODEL_AXIS, None),
+        "w_dkv": P(None, None),
+        "w_kr": P(None, None),
+        "kv_norm": common.spec_rmsnorm(),
+        "w_uk": P(None, MODEL_AXIS, None),
+        "w_uv": P(None, MODEL_AXIS, None),
+        "wo": P(MODEL_AXIS, None, None),
+    }
+
+
+def _latent(x: jax.Array, p: Dict, cfg: ModelConfig, positions: jax.Array
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Compressed KV latent c: (B, S, r) and shared RoPE key (B, S, rd)."""
+    c = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    c = common.rmsnorm(c, p["kv_norm"], cfg.norm_eps)
+    k_r = jnp.einsum("bsd,dr->bsr", x, p["w_kr"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    k_r = apply_rope(k_r, positions, cfg.rope_theta)
+    return c, k_r
+
+
+def mla_attention(x: jax.Array, p: Dict, cfg: ModelConfig,
+                  policy: ShardingPolicy) -> jax.Array:
+    """Full-sequence MLA (train / prefill). Materializes per-head K/V, which
+    is the faithful (and prefill-optimal) form; decode uses absorption."""
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.num_heads
+    pos = jnp.arange(s)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q_nope, q_rope = jnp.split(q, [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    c, k_r = _latent(x, p, cfg, pos)
+    k_nope = jnp.einsum("bsr,rhk->bshk", c, p["w_uk"],
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsr,rhk->bshk", c, p["w_uv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k_rope = jnp.broadcast_to(k_r[:, :, None, :], (b, s, h, m.rope_head_dim))
+
+    qq = jnp.concatenate([q_nope, q_rope], axis=-1)
+    kk = jnp.concatenate([k_nope, k_rope], axis=-1)
+    qq = policy.constrain(qq, policy.inner())
+    kk = policy.constrain(kk, policy.inner())
+    # MLA scales by the *full* qk dim (nope + rope)
+    out = _blockwise_attn(qq, kk, v, causal=True, window=0, cap=0.0,
+                          policy=policy)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype
+                   ) -> Dict[str, jax.Array]:
+    m = cfg.mla
+    return {"c": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+            "k_r": jnp.zeros((batch, cache_len, m.rope_head_dim), dtype)}
+
+
+def spec_mla_cache(policy: ShardingPolicy) -> Dict[str, P]:
+    b = policy.cache_batch_axes
+    return {"c": P(b, MODEL_AXIS, None), "k_r": P(b, MODEL_AXIS, None)}
+
+
+def decode_mla_attention(x: jax.Array, cache: Dict, pos: jax.Array, p: Dict,
+                         cfg: ModelConfig, policy: ShardingPolicy
+                         ) -> Tuple[jax.Array, Dict]:
+    """Absorbed-form one-token decode. x: (B, 1, d)."""
+    m = cfg.mla
+    b = x.shape[0]
+    h = cfg.num_heads
+    cache_len = cache["c"].shape[1]
+
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q_nope, q_rope = jnp.split(q[:, 0], [m.nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope[:, None], pos[None], cfg.rope_theta)[:, 0]
+
+    c_new, kr_new = _latent(x, p, cfg, pos[None])
+    c = jax.lax.dynamic_update_slice(
+        cache["c"], c_new.astype(cache["c"].dtype), (0, pos, 0))
+    k_r = jax.lax.dynamic_update_slice(
+        cache["k_r"], kr_new.astype(cache["k_r"].dtype), (0, pos, 0))
+    new_cache = {"c": c, "k_r": k_r}
+
+    # absorption: q_nope (B,H,nk) x W_uk (r,H,nk) -> q_lat (B,H,r)
+    q_lat = jnp.einsum("bhk,rhk->bhr", q_nope, p["w_uk"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    scale = (m.nope_head_dim + m.rope_head_dim) ** -0.5
+    s = (jnp.einsum("bhr,btr->bht", q_lat, c,
+                    preferred_element_type=jnp.float32)
+         + jnp.einsum("bhr,btr->bht", q_rope, k_r,
+                      preferred_element_type=jnp.float32)) * scale
+    idx = jnp.arange(cache_len)[None, None, :]
+    s = jnp.where(idx <= pos, s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    # weighted latent, then decompress through W_uv (absorbed on the out side)
+    lat = jnp.einsum("bht,btr->bhr", w.astype(c.dtype), c,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = jnp.einsum("bhr,rhk->bhk", lat, p["w_uv"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y[:, None, :], new_cache

@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN: shared experts + routed top-k with capacity.
+
+GShard/Switch-style dispatch: tokens are viewed as (G, T_g, d) groups, each
+group routes independently with a static per-group capacity
+``C = ceil(T_g * top_k / E * capacity_factor)`` (overflow drops, standard).
+Dispatch/combine are one-hot einsums — MXU-friendly, and the same masked
+matmul pattern as the paper's suff-stats kernel.
+
+Two sharding strategies (the hillclimb lever, DESIGN §2):
+ - ``tensor``: expert weights sharded over ``model`` on d_ff; every device
+   holds a slice of EVERY expert; communication = the TP psum.
+ - ``expert``: experts sharded over ``model``; tokens move to their experts;
+   communication = GSPMD-inserted all-to-alls on the (G, E, C, d) tensors.
+
+Experts are padded to a multiple of the model-axis size; padding experts are
+masked out of the router softmax so they never receive tokens.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import KeyGen, MODEL_AXIS, dense_init
+
+
+def padded_experts(cfg: ModelConfig, pad_to: int = 16) -> int:
+    e = cfg.moe.num_experts
+    return int(math.ceil(e / pad_to) * pad_to)
+
+
+def init_moe(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    m = cfg.moe
+    d = cfg.d_model
+    e = padded_experts(cfg)
+    p = {
+        "router": dense_init(kg(), (d, e), dtype, in_axis=0),
+        "w_up": dense_init(kg(), (e, d, m.d_expert), dtype, in_axis=1),
+        "w_gate": dense_init(kg(), (e, d, m.d_expert), dtype, in_axis=1),
+        "w_down": dense_init(kg(), (e, m.d_expert, d), dtype, in_axis=1),
+    }
+    if m.num_shared_experts:
+        p["shared"] = common.init_mlp(kg, d, m.d_shared, True, dtype)
+    return p
+
+
+def spec_moe(cfg: ModelConfig, strategy: str = "tensor") -> Dict:
+    if strategy == "tensor":
+        w = {"w_up": P(None, None, MODEL_AXIS),
+             "w_gate": P(None, None, MODEL_AXIS),
+             "w_down": P(None, MODEL_AXIS, None)}
+    elif strategy == "expert":
+        w = {"w_up": P(MODEL_AXIS, None, None),
+             "w_gate": P(MODEL_AXIS, None, None),
+             "w_down": P(MODEL_AXIS, None, None)}
+    else:
+        raise ValueError(strategy)
+    p = {"router": P(None, None), **w}
+    if cfg.moe.num_shared_experts:
+        p["shared"] = common.spec_mlp(True)
+    return p
+
+
+def _capacity(tokens_per_group: int, e: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(tokens_per_group * m.top_k / e * m.capacity_factor))
+    return max(c, m.top_k)
+
+
+def route(x2d: jax.Array, p: Dict, cfg: ModelConfig
+          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Router for (T, d) tokens -> (weights (T, k), experts (T, k), aux)."""
+    m = cfg.moe
+    e = p["router"].shape[1]
+    logits = jnp.einsum("td,de->te", x2d, p["router"],
+                        preferred_element_type=jnp.float32)
+    # mask padding experts out of the softmax
+    mask = jnp.arange(e) < m.num_experts
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, m.top_k)            # (T, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balance aux loss
+    density = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    density_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * density_prob) * (m.num_experts ** 2) / m.top_k
+    return w.astype(x2d.dtype), idx, aux
+
+
+def moe_ffn(x: jax.Array, p: Dict, cfg: ModelConfig, *, n_groups: int = 1,
+            strategy: str = "tensor") -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (out, aux_loss). Shared + routed experts."""
+    m = cfg.moe
+    b, s, d = x.shape
+    e = padded_experts(cfg)
+    t = b * s
+    g = n_groups
+    while t % g:
+        g -= 1                                         # largest divisor <= g
+    tg = t // g
+    cap = _capacity(tg, m.num_experts, cfg)
+
+    xf = x.reshape(t, d)
+    weights, idx, aux = route(xf, p, cfg)
+
+    xg = xf.reshape(g, tg, d)
+    idx_g = idx.reshape(g, tg, m.top_k)
+    w_g = weights.reshape(g, tg, m.top_k)
+
+    # position of each (token, k) among the tokens routed to the same expert
+    onehot = jax.nn.one_hot(idx_g, e, dtype=jnp.int32)      # (g, tg, k, E)
+    flat = onehot.reshape(g, tg * m.top_k, e)
+    pos = jnp.cumsum(flat, axis=1) - 1                      # (g, tg*k, E)
+    pos = jnp.sum(pos * flat, axis=-1).reshape(g, tg, m.top_k)
+    keep = pos < cap
+    w_kept = jnp.where(keep, w_g, 0.0)
+
+    # dispatch: (g, tg, k) one-hots -> (g, tg, E, C) combine/dispatch masks
+    pos_oh = jax.nn.one_hot(jnp.where(keep, pos, cap), cap,
+                            dtype=x.dtype)                  # (g, tg, k, C)
+    exp_oh = onehot.astype(x.dtype)                         # (g, tg, k, E)
+    combine = jnp.einsum("gtke,gtkc,gtk->gtec", exp_oh, pos_oh,
+                         w_kept.astype(x.dtype))
+    dispatch = (combine > 0).astype(x.dtype)
+
+    buf = jnp.einsum("gtec,gtd->gecd", dispatch, xg,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    if strategy == "expert":
+        # tokens move to their experts: GSPMD lowers this resharding of the
+        # (g, E, C, d) buffer onto the expert-sharded axis as an all-to-all
+        buf = common.constrain(buf, P(None, MODEL_AXIS, None, None))
+    up = jnp.einsum("gecd,edf->gecf", buf, p["w_up"],
+                    preferred_element_type=jnp.float32)
+    gate = jnp.einsum("gecd,edf->gecf", buf, p["w_gate"],
+                      preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(gate) * up).astype(x.dtype)
+    out_buf = jnp.einsum("gecf,efd->gecd", h, p["w_down"],
+                         preferred_element_type=jnp.float32).astype(x.dtype)
+    routed = jnp.einsum("gtec,gecd->gtd", combine, out_buf,
+                        preferred_element_type=jnp.float32).astype(x.dtype)
+    out = routed.reshape(b, s, d)
+
+    if m.num_shared_experts:
+        out = out + common.mlp(x, p["shared"], cfg.act)
+    return out, aux.astype(jnp.float32)

@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+Griffin's recurrent block: two input linears (recurrent branch + GeLU gate
+branch); the recurrent branch passes a short causal conv then the Real-Gated
+LRU:
+    r_t = sigmoid(W_a x_t + b_a)          (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)          (input gate)
+    a_t = exp(-c * softplus(L) * r_t)     (per-channel decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+Linear in h => associative scan for train/prefill, O(1) state for decode.
+Channel dim sharded over ``model``; the scan is channelwise (no comms).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import KeyGen, MODEL_AXIS, dense_init
+
+RGLRU_C = 8.0
+
+
+def width(cfg: ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    w = width(cfg)
+    k = cfg.rglru.conv_kernel
+    # Lambda init so the decay a^c spreads over [0.9, 0.999]
+    u = jax.random.uniform(kg(), (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * RGLRU_C)))
+    return {
+        "in_x": dense_init(kg(), (d, w), dtype, in_axis=0),
+        "in_gate": dense_init(kg(), (d, w), dtype, in_axis=0),
+        "conv_w": (jax.random.normal(kg(), (k, w), jnp.float32)
+                   * (1.0 / math.sqrt(k))).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": dense_init(kg(), (w, w), dtype, in_axis=0),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": dense_init(kg(), (w, w), dtype, in_axis=0),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out_proj": dense_init(kg(), (w, d), dtype, in_axis=0),
+    }
+
+
+def spec_rglru(cfg: ModelConfig) -> Dict:
+    return {
+        "in_x": P(None, MODEL_AXIS),
+        "in_gate": P(None, MODEL_AXIS),
+        "conv_w": P(None, MODEL_AXIS),
+        "conv_b": P(MODEL_AXIS),
+        "w_a": P(None, MODEL_AXIS),
+        "b_a": P(MODEL_AXIS),
+        "w_i": P(None, MODEL_AXIS),
+        "b_i": P(MODEL_AXIS),
+        "lam": P(MODEL_AXIS),
+        "out_proj": P(MODEL_AXIS, None),
+    }
+
+
+def _gates(xb: jax.Array, p: Dict):
+    """Decay a_t and gated input for the LRU. xb: (B, S, w)."""
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xb, p["w_a"],
+                   preferred_element_type=jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsw,wv->bsv", xb, p["w_i"],
+                   preferred_element_type=jnp.float32) + p["b_i"])
+    log_a = -RGLRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    drive = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * xb.astype(jnp.float32))
+    return a, drive
+
+
+def _conv(x: jax.Array, p: Dict, state: jax.Array | None, k: int):
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = sum(x_pad[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(k))
+    tail = x_pad[:, x_pad.shape[1] - (k - 1):]
+    return out + p["conv_b"], tail
+
+
+def rglru_block(x: jax.Array, p: Dict, cfg: ModelConfig, policy) -> jax.Array:
+    """Full-sequence Griffin recurrent block. x: (B, S, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"],
+                      preferred_element_type=jnp.float32)
+    xb = policy.constrain(xb, policy.inner())
+    xb, _ = _conv(xb, p, None, cfg.rglru.conv_kernel)
+    a, drive = _gates(xb, p)
+
+    def combine(u, v):
+        (au, hu), (av, hv) = u, v
+        return au * av, hv + av * hu
+
+    _, h = jax.lax.associative_scan(combine, (a, drive), axis=1)
+    y = (h * jax.nn.gelu(gate, approximate=True)).astype(x.dtype)
+    return jnp.einsum("bsw,wd->bsd", y, p["out_proj"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    w = width(cfg)
+    k = cfg.rglru.conv_kernel
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, w), dtype)}
+
+
+def spec_rglru_cache(policy) -> Dict:
+    b = policy.cache_batch_axes
+    return {"h": P(b, MODEL_AXIS), "conv": P(b, None, MODEL_AXIS)}
+
+
+def decode_rglru_block(x: jax.Array, cache: Dict, p: Dict, cfg: ModelConfig,
+                       policy) -> Tuple[jax.Array, Dict]:
+    """One-token step. x: (B, 1, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["in_x"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    gate = jnp.einsum("bsd,dw->bsw", x, p["in_gate"],
+                      preferred_element_type=jnp.float32)
+    xb, tail = _conv(xb, p, cache["conv"], cfg.rglru.conv_kernel)
+    a, drive = _gates(xb, p)
+    h = a[:, 0] * cache["h"] + drive[:, 0]
+    y = (h[:, None] * jax.nn.gelu(gate, approximate=True)).astype(x.dtype)
+    out = jnp.einsum("bsw,wd->bsd", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out, {"h": h, "conv": tail.astype(cache["conv"].dtype)}

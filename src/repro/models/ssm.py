@@ -1,0 +1,150 @@
+"""Mamba-1 selective SSM block (falcon-mamba, arXiv:2410.05355 / 2312.00752).
+
+The selective scan is a *linear* recurrence in h:
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t * x_t,   y_t = C_t . h_t + D x_t
+so training/prefill uses ``jax.lax.associative_scan`` over the sequence
+(log-depth, TPU-friendly) and decode carries an O(1) (B, d_inner, n) state —
+this is what makes ``long_500k`` native for this arch (DESIGN §5).
+
+The channel dimension ``d_inner`` is sharded over ``model``; the recurrence
+is elementwise in channels so the scan needs NO cross-device communication —
+the paper's 'ship statistics, not data' discipline applied to channels.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import common
+from repro.models.common import KeyGen, MODEL_AXIS, dense_init
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return d_inner, dt_rank, s.state_dim
+
+
+def init_ssm(kg: KeyGen, cfg: ModelConfig, dtype) -> Dict:
+    d = cfg.d_model
+    d_inner, dt_rank, n = dims(cfg)
+    conv_k = cfg.ssm.conv_kernel
+    # S4D-real initialization for A
+    a_init = jnp.broadcast_to(jnp.arange(1, n + 1, dtype=jnp.float32),
+                              (d_inner, n))
+    dt = jnp.exp(jax.random.uniform(kg(), (d_inner,), jnp.float32)
+                 * (math.log(0.1) - math.log(1e-3)) + math.log(1e-3))
+    inv_softplus = dt + jnp.log(-jnp.expm1(-dt))
+    return {
+        "in_proj": dense_init(kg(), (d, 2 * d_inner), dtype, in_axis=0),
+        "conv_w": (jax.random.normal(kg(), (conv_k, d_inner), jnp.float32)
+                   * (1.0 / math.sqrt(conv_k))).astype(dtype),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(kg(), (d_inner, dt_rank + 2 * n), dtype,
+                             in_axis=0),
+        "dt_proj": dense_init(kg(), (dt_rank, d_inner), dtype, in_axis=0),
+        "dt_bias": inv_softplus.astype(jnp.float32),
+        "a_log": jnp.log(a_init),                     # f32 master copy
+        "d_skip": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(kg(), (d_inner, d), dtype, in_axis=0),
+    }
+
+
+def spec_ssm(cfg: ModelConfig) -> Dict:
+    return {
+        "in_proj": P(None, MODEL_AXIS),
+        "conv_w": P(None, MODEL_AXIS),
+        "conv_b": P(MODEL_AXIS),
+        "x_proj": P(MODEL_AXIS, None),
+        "dt_proj": P(None, MODEL_AXIS),
+        "dt_bias": P(MODEL_AXIS),
+        "a_log": P(MODEL_AXIS, None),
+        "d_skip": P(MODEL_AXIS),
+        "out_proj": P(MODEL_AXIS, None),
+    }
+
+
+def _ssm_inner(xz: jax.Array, p: Dict, cfg: ModelConfig,
+               conv_state: jax.Array | None = None):
+    """Everything after in_proj. xz: (B, S, 2*d_inner)."""
+    d_inner, dt_rank, n = dims(cfg)
+    x, z = jnp.split(xz, 2, axis=-1)                  # (B, S, di)
+
+    # causal depthwise conv over seq
+    k = cfg.ssm.conv_kernel
+    if conv_state is None:
+        x_pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([conv_state.astype(x.dtype), x], axis=1)
+    x_conv = sum(x_pad[:, i:i + x.shape[1]] * p["conv_w"][i]
+                 for i in range(k))
+    x_conv = jax.nn.silu(x_conv + p["conv_b"])
+
+    proj = jnp.einsum("bsd,dr->bsr", x_conv, p["x_proj"],
+                      preferred_element_type=jnp.float32)
+    dt_low, b_mat, c_mat = jnp.split(proj, [dt_rank, dt_rank + n], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt_low.astype(x.dtype), p["dt_proj"],
+                   preferred_element_type=jnp.float32) + p["dt_bias"])
+    a = -jnp.exp(p["a_log"])                          # (di, n)
+    decay = jnp.exp(dt[..., None] * a)                # (B, S, di, n)
+    drive = (dt * x_conv.astype(jnp.float32))[..., None] * b_mat[:, :, None, :]
+    new_tail = x_pad[:, x_pad.shape[1] - (k - 1):]    # next conv state
+    return x_conv, z, decay, drive, c_mat, new_tail
+
+
+def ssm_block(x: jax.Array, p: Dict, cfg: ModelConfig,
+              policy) -> jax.Array:
+    """Full-sequence selective scan. x: (B, S, d) -> (B, S, d)."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    xz = policy.constrain(xz, policy.inner())
+    x_conv, z, decay, drive, c_mat, _ = _ssm_inner(xz, p, cfg)
+
+    # h_t = decay_t * h_{t-1} + drive_t  — associative over S
+    def combine(a, b):
+        (da, ha), (db, hb) = a, b
+        return da * db, hb + db * ha
+
+    _, h = jax.lax.associative_scan(combine, (decay, drive), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", h, c_mat,
+                   preferred_element_type=jnp.float32)
+    y = y + p["d_skip"] * x_conv.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> Dict:
+    d_inner, _, n = dims(cfg)
+    k = cfg.ssm.conv_kernel
+    return {"h": jnp.zeros((batch, d_inner, n), jnp.float32),
+            "conv": jnp.zeros((batch, k - 1, d_inner), dtype)}
+
+
+def spec_ssm_cache(policy) -> Dict:
+    b = policy.cache_batch_axes
+    return {"h": P(b, MODEL_AXIS, None), "conv": P(b, None, MODEL_AXIS)}
+
+
+def decode_ssm_block(x: jax.Array, cache: Dict, p: Dict, cfg: ModelConfig,
+                     policy) -> Tuple[jax.Array, Dict]:
+    """One-token step. x: (B, 1, d); cache: {'h': (B, di, n), 'conv': ...}."""
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    x_conv, z, decay, drive, c_mat, tail = _ssm_inner(
+        xz, p, cfg, conv_state=cache["conv"])
+    h = decay[:, 0] * cache["h"] + drive[:, 0]        # (B, di, n)
+    y = jnp.einsum("bdn,bn->bd", h, c_mat[:, 0],
+                   preferred_element_type=jnp.float32)
+    y = y + p["d_skip"] * x_conv[:, 0].astype(jnp.float32)
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    return out[:, None], {"h": h, "conv": tail.astype(cache["conv"].dtype)}

@@ -1,0 +1,379 @@
+"""Model assembly: pattern-driven layer stacks for all 10 architectures.
+
+A config's ``pattern`` (e.g. gemma2's ``(local, attn)``, Griffin's
+``(rglru, rglru, local)``, the VLM's ``(attn x3, cross, attn)``) is scanned
+``repeats`` times with *stacked* parameters — one ``lax.scan`` over the
+period keeps compile time and HLO size flat in depth. ``remainder`` layers
+(and MoE models' leading dense-FFN layers) run unscanned.
+
+Three entry points:
+  ``forward``      — full-sequence (train / prefill) -> logits (+ MoE aux)
+  ``encode``       — whisper encoder over stubbed frame embeddings
+  ``decode_step``  — one-token cached decode across heterogeneous caches
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import (ATTN, CROSS, LOCAL_ATTN, RGLRU, SSM,
+                                ModelConfig)
+from repro.configs import first_k_dense
+from repro.models import attention, common, mla, moe, rglru, ssm
+from repro.models.common import KeyGen, MODEL_AXIS, ShardingPolicy
+
+ENCDEC = "encdec"          # whisper decoder layer: self-attn + cross-attn
+
+
+# ---------------------------------------------------------------------------
+# Layout: (first, period, repeats, remainder)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class Layout:
+    first: Tuple[str, ...]       # unscanned leading layers (dense FFN)
+    period: Tuple[str, ...]      # scanned pattern
+    repeats: int
+    remainder: Tuple[str, ...]   # unscanned trailing layers
+
+
+def layout(cfg: ModelConfig) -> Layout:
+    if cfg.encoder_layers:
+        kinds: Tuple[str, ...] = (ENCDEC,) * cfg.num_layers
+    else:
+        kinds = cfg.layer_kinds
+    fk = first_k_dense(cfg)
+    first = kinds[:fk]
+    rest = kinds[fk:]
+    if cfg.pattern and not cfg.encoder_layers:
+        period = cfg.pattern
+        remainder = cfg.remainder
+    else:
+        period = (rest[0],)
+        remainder = ()
+    repeats = (len(rest) - len(remainder)) // len(period)
+    assert repeats * len(period) + len(remainder) + fk == cfg.num_layers
+    return Layout(first, period, repeats, remainder)
+
+
+def _norms(cfg: ModelConfig):
+    """(init, spec, apply) — whisper uses LayerNorm, the rest RMSNorm."""
+    if cfg.arch_type == "audio":
+        return (common.init_layernorm, common.spec_layernorm,
+                common.layernorm)
+    return (lambda d, dt: common.init_rmsnorm(d, dt),
+            common.spec_rmsnorm, common.rmsnorm)
+
+
+def _uses_mla(cfg: ModelConfig) -> bool:
+    return cfg.mla is not None
+
+
+def _layer_is_moe(cfg: ModelConfig, dense_ffn: bool) -> bool:
+    return cfg.moe is not None and not dense_ffn
+
+
+# ---------------------------------------------------------------------------
+# One block: params / specs / apply / decode
+# ---------------------------------------------------------------------------
+def init_block(kg: KeyGen, kind: str, cfg: ModelConfig, dtype,
+               dense_ffn: bool = False) -> Dict:
+    ninit, _, _ = _norms(cfg)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": ninit(d, dtype)}
+    if kind in (ATTN, LOCAL_ATTN, ENCDEC):
+        p["attn"] = (mla.init_mla(kg, cfg, dtype) if _uses_mla(cfg)
+                     else attention.init_attn(kg, cfg, dtype))
+    elif kind == CROSS:
+        p["xattn"] = attention.init_attn(kg, cfg, dtype)
+        p["xgate"] = jnp.zeros((), dtype)     # llama3.2-style tanh gate
+    elif kind == SSM:
+        p["ssm"] = ssm.init_ssm(kg, cfg, dtype)
+        return p                              # mamba block subsumes the FFN
+    elif kind == RGLRU:
+        p["rec"] = rglru.init_rglru(kg, cfg, dtype)
+    else:
+        raise ValueError(kind)
+    if kind == ENCDEC:
+        p["lnx"] = ninit(d, dtype)
+        p["xattn"] = attention.init_attn(kg, cfg, dtype)
+    p["ln2"] = ninit(d, dtype)
+    if _layer_is_moe(cfg, dense_ffn):
+        p["moe"] = moe.init_moe(kg, cfg, dtype)
+    else:
+        p["mlp"] = common.init_mlp(kg, d, cfg.d_ff, cfg.gated_mlp, dtype)
+    return p
+
+
+def spec_block(kind: str, cfg: ModelConfig, dense_ffn: bool = False,
+               moe_strategy: str = "tensor") -> Dict:
+    _, nspec, _ = _norms(cfg)
+    p: Dict[str, Any] = {"ln1": nspec()}
+    if kind in (ATTN, LOCAL_ATTN, ENCDEC):
+        p["attn"] = (mla.spec_mla(cfg) if _uses_mla(cfg)
+                     else attention.spec_attn(cfg))
+    elif kind == CROSS:
+        p["xattn"] = attention.spec_attn(cfg)
+        p["xgate"] = P()
+    elif kind == SSM:
+        p["ssm"] = ssm.spec_ssm(cfg)
+        return p
+    elif kind == RGLRU:
+        p["rec"] = rglru.spec_rglru(cfg)
+    if kind == ENCDEC:
+        p["lnx"] = nspec()
+        p["xattn"] = attention.spec_attn(cfg)
+    p["ln2"] = nspec()
+    if _layer_is_moe(cfg, dense_ffn):
+        p["moe"] = moe.spec_moe(cfg, moe_strategy)
+    else:
+        p["mlp"] = common.spec_mlp(cfg.gated_mlp)
+    return p
+
+
+def apply_block(x: jax.Array, p: Dict, kind: str, cfg: ModelConfig,
+                policy: ShardingPolicy, memory: Optional[jax.Array],
+                *, causal: bool = True, n_groups: int = 1,
+                moe_strategy: str = "tensor") -> Tuple[jax.Array, jax.Array]:
+    """Pre-norm residual block. Returns (x, moe_aux)."""
+    _, _, norm = _norms(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(x, p["ln1"], cfg.norm_eps)
+    if kind in (ATTN, LOCAL_ATTN, ENCDEC):
+        if _uses_mla(cfg):
+            y = mla.mla_attention(h, p["attn"], cfg, policy)
+        else:
+            y = attention.self_attention(
+                h, p["attn"], cfg, policy, local=(kind == LOCAL_ATTN),
+                causal=causal)
+        # constrain the row-parallel output BEFORE the residual add: the
+        # TP contraction then lowers as reduce-scatter onto the seq-sharded
+        # residual, not a full (B, S, d) all-reduce (EXPERIMENTS §Perf, A2)
+        y = policy.constrain(y, policy.residual())
+        x = x + y
+    elif kind == CROSS:
+        y = attention.cross_attention(h, memory, p["xattn"], cfg, policy)
+        x = x + jnp.tanh(p["xgate"].astype(jnp.float32)).astype(x.dtype) * y
+    elif kind == SSM:
+        return x + ssm.ssm_block(h, p["ssm"], cfg, policy), aux
+    elif kind == RGLRU:
+        x = x + rglru.rglru_block(h, p["rec"], cfg, policy)
+    if kind == ENCDEC:
+        h = norm(x, p["lnx"], cfg.norm_eps)
+        x = x + attention.cross_attention(h, memory, p["xattn"], cfg, policy)
+    x = policy.constrain(x, policy.residual())
+    h = norm(x, p["ln2"], cfg.norm_eps)
+    if "moe" in p:
+        y, aux = moe.moe_ffn(h, p["moe"], cfg, n_groups=n_groups,
+                             strategy=moe_strategy)
+    else:
+        y = common.mlp(h, p["mlp"], cfg.act)
+    y = policy.constrain(y, policy.residual())    # RS, not AR (§Perf A2)
+    x = x + y
+    return policy.constrain(x, policy.residual()), aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model params / specs
+# ---------------------------------------------------------------------------
+def init_params(key: jax.Array, cfg: ModelConfig,
+                dtype=jnp.float32) -> Dict:
+    kg = KeyGen(key)
+    lay = layout(cfg)
+    ninit, _, _ = _norms(cfg)
+    d = cfg.d_model
+
+    def stack(n: int, make):
+        leaves = [make(i) for i in range(n)]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *leaves)
+
+    params: Dict[str, Any] = {
+        "embed": common.init_embed(kg, cfg.vocab_size, d,
+                                   cfg.tie_embeddings, dtype),
+        "final_norm": ninit(d, dtype),
+    }
+    if lay.first:
+        params["first"] = {
+            f"{i}_{k}": init_block(kg, k, cfg, dtype, dense_ffn=True)
+            for i, k in enumerate(lay.first)}
+    params["blocks"] = {
+        f"{i}_{k}": stack(lay.repeats,
+                          lambda _i: init_block(kg, k, cfg, dtype))
+        for i, k in enumerate(lay.period)}
+    if lay.remainder:
+        params["rem"] = {
+            f"{i}_{k}": init_block(kg, k, cfg, dtype)
+            for i, k in enumerate(lay.remainder)}
+    if cfg.encoder_layers:
+        params["encoder"] = {
+            "blocks": stack(cfg.encoder_layers,
+                            lambda _i: init_block(kg, ATTN, cfg, dtype,
+                                                  dense_ffn=True)),
+            "final_norm": ninit(d, dtype),
+        }
+    return params
+
+
+def param_specs(cfg: ModelConfig, moe_strategy: str = "tensor") -> Dict:
+    lay = layout(cfg)
+    _, nspec, _ = _norms(cfg)
+
+    def stacked(spec_tree):
+        return jax.tree.map(
+            lambda s: P(None, *s), spec_tree,
+            is_leaf=lambda s: isinstance(s, P))
+
+    specs: Dict[str, Any] = {
+        "embed": common.spec_embed(cfg.tie_embeddings),
+        "final_norm": nspec(),
+    }
+    if lay.first:
+        specs["first"] = {
+            f"{i}_{k}": spec_block(k, cfg, dense_ffn=True,
+                                   moe_strategy=moe_strategy)
+            for i, k in enumerate(lay.first)}
+    specs["blocks"] = {
+        f"{i}_{k}": stacked(spec_block(k, cfg, moe_strategy=moe_strategy))
+        for i, k in enumerate(lay.period)}
+    if lay.remainder:
+        specs["rem"] = {
+            f"{i}_{k}": spec_block(k, cfg, moe_strategy=moe_strategy)
+            for i, k in enumerate(lay.remainder)}
+    if cfg.encoder_layers:
+        specs["encoder"] = {
+            "blocks": stacked(spec_block(ATTN, cfg, dense_ffn=True)),
+            "final_norm": nspec(),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+def _sin_positions(seq: int, d: int, dtype) -> jax.Array:
+    """Sinusoidal absolute positions (whisper encoder/decoder stub)."""
+    pos = jnp.arange(seq, dtype=jnp.float32)[:, None]
+    i = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (i / d))
+    pe = jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+    return pe.astype(dtype)
+
+
+def encode(params: Dict, frames: jax.Array, cfg: ModelConfig,
+           policy: ShardingPolicy, remat: bool = True) -> jax.Array:
+    """Whisper encoder over stubbed (B, S_enc, d) frame embeddings."""
+    _, _, norm = _norms(cfg)
+    x = frames + _sin_positions(frames.shape[1], cfg.d_model, frames.dtype)
+    x = policy.constrain(x, policy.residual())
+
+    def body(carry, lp):
+        h, _ = apply_block(carry, lp, ATTN, cfg, policy, None, causal=False)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["encoder"]["blocks"])
+    return norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _remat(body, remat, remat_policy: str = "full"):
+    """Wrap a scan body in jax.checkpoint with the configured policy.
+
+    'dots' saves matmul outputs (no recompute of projections in the
+    backward pass — trades activation memory for the remat re-gather +
+    recompute; §Perf A5)."""
+    if not remat:
+        return body
+    if remat_policy == "dots":
+        return jax.checkpoint(
+            body,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(body)
+
+
+def forward(params: Dict, tokens: jax.Array, cfg: ModelConfig,
+            policy: ShardingPolicy, memory: Optional[jax.Array] = None,
+            remat: bool = True, n_groups: int = 1,
+            moe_strategy: str = "tensor",
+            remat_policy: str = "full") -> Tuple[jax.Array, jax.Array]:
+    """tokens: (B, S) -> (logits (B, S, V) f32, moe_aux ())."""
+    _, _, norm = _norms(cfg)
+    lay = layout(cfg)
+    x = common.embed(tokens, params["embed"])
+    if cfg.arch_type == "audio":
+        x = x + _sin_positions(x.shape[1], cfg.d_model, x.dtype)
+    x = policy.constrain(x, policy.residual())
+    aux = jnp.zeros((), jnp.float32)
+    kw = dict(n_groups=n_groups, moe_strategy=moe_strategy)
+
+    for i, kind in enumerate(lay.first):
+        x, a = apply_block(x, params["first"][f"{i}_{kind}"], kind, cfg,
+                           policy, memory, **kw)
+        aux = aux + a
+
+    period_keys = [f"{i}_{k}" for i, k in enumerate(lay.period)]
+
+    def body(carry, layer_params):
+        h, acc = carry
+        for pk in period_keys:
+            kind = pk.split("_", 1)[1]
+            h, a = apply_block(h, layer_params[pk], kind, cfg, policy,
+                               memory, **kw)
+            acc = acc + a
+        return (h, acc), None
+
+    body = _remat(body, remat, remat_policy)
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+
+    for i, kind in enumerate(lay.remainder):
+        x, a = apply_block(x, params["rem"][f"{i}_{kind}"], kind, cfg,
+                           policy, memory, **kw)
+        aux = aux + a
+
+    x = norm(x, params["final_norm"], cfg.norm_eps)
+    logits = common.unembed(x, params["embed"], cfg.final_softcap)
+    return logits, aux
+
+
+def hidden_forward(params: Dict, tokens: jax.Array, cfg: ModelConfig,
+                   policy: ShardingPolicy,
+                   memory: Optional[jax.Array] = None,
+                   remat: bool = True, n_groups: int = 1,
+                   moe_strategy: str = "tensor",
+                   remat_policy: str = "full"
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Final hidden states (B, S, d) + MoE aux — the train-step forward
+    (logits stay chunked in the loss) and the DPMM embedding example."""
+    _, _, norm = _norms(cfg)
+    lay = layout(cfg)
+    x = common.embed(tokens, params["embed"])
+    if cfg.arch_type == "audio":
+        x = x + _sin_positions(x.shape[1], cfg.d_model, x.dtype)
+    x = policy.constrain(x, policy.residual())
+    aux = jnp.zeros((), jnp.float32)
+    kw = dict(n_groups=n_groups, moe_strategy=moe_strategy)
+    period_keys = [f"{i}_{k}" for i, k in enumerate(lay.period)]
+
+    def body(carry, layer_params):
+        h, acc = carry
+        for pk in period_keys:
+            kind = pk.split("_", 1)[1]
+            h, a = apply_block(h, layer_params[pk], kind, cfg, policy,
+                               memory, **kw)
+            acc = acc + a
+        return (h, acc), None
+
+    body = _remat(body, remat, remat_policy)
+    for i, kind in enumerate(lay.first):
+        x, a = apply_block(x, params["first"][f"{i}_{kind}"], kind, cfg,
+                           policy, memory, **kw)
+        aux = aux + a
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["blocks"])
+    for i, kind in enumerate(lay.remainder):
+        x, a = apply_block(x, params["rem"][f"{i}_{kind}"], kind, cfg,
+                           policy, memory, **kw)
+        aux = aux + a
+    return norm(x, params["final_norm"], cfg.norm_eps), aux

@@ -1,0 +1,173 @@
+"""Three-term roofline from a compiled (SPMD-partitioned) XLA module.
+
+    compute    = FLOPs_per_device / PEAK_FLOPS
+    memory     = bytes_per_device / HBM_BW
+    collective = collective_bytes_per_device / ICI_BW
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device, since the
+compiled module is post-partitioning). collective_bytes is NOT in
+cost_analysis: we parse ``compiled.as_text()`` and sum the *result* sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute (async ``-start`` forms counted once).
+
+MODEL_FLOPS = 6·N·D (dense; N = active params excluding embeddings) gives
+the useful-compute ratio that catches remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Any, Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# one shaped buffer: f32[128,256]{1,0} — captures (dtype, dims)
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+# an HLO instruction line: %name = <result-shape(s)> opcode(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-buffer bytes per collective opcode over the module."""
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        result_shape, opcode = m.groups()
+        base = opcode
+        if base.endswith("-start"):
+            base = base[:-6]
+        elif base.endswith("-done"):
+            continue                      # counted at -start
+        if base in _COLLECTIVES:
+            out[base] += _shape_bytes(result_shape)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_device: float
+    bytes_per_device: float
+    coll_bytes: Dict[str, int]
+    model_flops: float               # 6*N_active*D (per device share)
+    # memory_analysis fields (per device)
+    mem_args: int = 0
+    mem_output: int = 0
+    mem_temp: int = 0
+    mem_peak: int = 0
+
+    @property
+    def collective_total(self) -> int:
+        return sum(self.coll_bytes.values())
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS_BF16
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_total / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_ratio(self) -> float:
+        if self.flops_per_device <= 0:
+            return 0.0
+        return self.model_flops / self.flops_per_device
+
+    @property
+    def step_time_bound(self) -> float:
+        """Lower bound on step time: max of the three terms (no overlap)."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d.update(t_compute=self.t_compute, t_memory=self.t_memory,
+                 t_collective=self.t_collective, bottleneck=self.bottleneck,
+                 useful_ratio=self.useful_ratio,
+                 collective_total=self.collective_total,
+                 step_time_bound=self.step_time_bound)
+        return d
+
+    def row(self) -> str:
+        return (f"{self.arch:>22s} {self.shape:>12s} {self.mesh:>9s} "
+                f"{self.t_compute*1e3:10.2f} {self.t_memory*1e3:10.2f} "
+                f"{self.t_collective*1e3:10.2f} {self.bottleneck:>10s} "
+                f"{self.useful_ratio:8.3f}")
+
+
+HEADER = (f"{'arch':>22s} {'shape':>12s} {'mesh':>9s} "
+          f"{'compute_ms':>10s} {'memory_ms':>10s} {'coll_ms':>10s} "
+          f"{'bottleneck':>10s} {'useful':>8s}")
+
+
+def analyze(compiled, *, arch: str, shape: str, mesh_name: str, chips: int,
+            model_flops: float) -> Roofline:
+    """Roofline terms from the compiled module.
+
+    FLOPs / bytes / collectives come from the trip-count-aware HLO walk
+    (``hlo_costs``) — ``compiled.cost_analysis()`` counts while bodies once
+    and is kept only as a cross-check field."""
+    from repro.roofline.hlo_costs import analyze_hlo
+    hlo = compiled.as_text()
+    mc = analyze_hlo(hlo)
+    flops = mc.flops
+    byts = mc.bytes
+    coll = {k: int(v) for k, v in mc.coll.items() if v}
+    mem = compiled.memory_analysis()
+    r = Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_device=flops, bytes_per_device=byts,
+        coll_bytes=coll, model_flops=model_flops,
+        mem_args=getattr(mem, "argument_size_in_bytes", 0),
+        mem_output=getattr(mem, "output_size_in_bytes", 0),
+        mem_temp=getattr(mem, "temp_size_in_bytes", 0),
+        mem_peak=getattr(mem, "peak_memory_in_bytes",
+                         getattr(mem, "temp_size_in_bytes", 0)),
+    )
+    return r
+
+
+def save_json(r: Roofline, path: str) -> None:
+    import os
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(r.to_dict(), f, indent=1)

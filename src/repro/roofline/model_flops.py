@@ -1,0 +1,69 @@
+"""MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = *active* params.
+
+N counts non-embedding parameters; MoE routed-expert weights are scaled by
+``top_k / num_experts`` (only the routed-to experts do work per token).
+Attention score/value FLOPs are excluded — the standard MFU convention —
+which is exactly why ``useful_ratio`` drops for the 32k-context shapes
+(the compiled HLO *does* pay the attention quadratic).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+
+
+def _tree_size(tree: Any) -> int:
+    return sum(int(jnp.size(x)) if hasattr(x, "size") else 0
+               for x in jax.tree.leaves(tree))
+
+
+def active_params(cfg: ModelConfig) -> int:
+    """Active non-embedding parameter count (analytic, from eval_shape)."""
+    structs = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, jnp.bfloat16),
+        jax.random.key(0))
+    total = 0
+    moe_scale = 1.0
+    if cfg.moe is not None:
+        moe_scale = cfg.moe.top_k / cfg.moe.num_experts
+
+    def walk(tree):
+        """Routed expert weights (moe/w_*) scale by top_k/E; routers and
+        shared experts are always-on; embeddings are excluded."""
+        nonlocal total
+        if not isinstance(tree, dict):
+            total += int(tree.size)
+            return
+        for k, v in tree.items():
+            if k == "embed":
+                continue
+            if k == "moe":
+                for kk, vv in v.items():
+                    scale = moe_scale if kk.startswith("w_") else 1.0
+                    for leaf in jax.tree.leaves(vv):
+                        total += int(leaf.size * scale)
+            else:
+                walk(v)
+
+    walk(structs)
+    return total
+
+
+def model_flops_per_device(cfg: ModelConfig, shape: InputShape,
+                           chips: int) -> float:
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        per_tok = 6.0                          # fwd 2 + bwd 4
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        per_tok = 2.0
+    else:                                      # decode: one token per seq
+        tokens = shape.global_batch * 1
+        per_tok = 2.0
+    return per_tok * n * tokens / chips

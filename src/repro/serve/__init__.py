@@ -1,0 +1,1 @@
+from repro.serve.engine import Generator, make_serve_step, serve_step  # noqa: F401

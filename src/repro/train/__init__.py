@@ -1,0 +1,4 @@
+from repro.train.trainer import (TrainState, init_train_state,  # noqa: F401
+                                 make_train_step, train_state_specs,
+                                 train_step)
+from repro.train import checkpoint, loss, optimizer  # noqa: F401

@@ -1,0 +1,58 @@
+"""Flat-npz pytree checkpointing (offline container: no orbax).
+
+Pytrees are flattened to ``path/sep/joined/key -> array`` entries in a
+single compressed ``.npz``; restore rebuilds into the *structure* of a
+reference pytree (so restored arrays land on whatever sharding the caller's
+reference tree prescribes via ``device_put``).
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SEP = "//"
+
+
+def _flatten(tree: Any) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    if hasattr(p, "name"):
+        return str(p.name)
+    return str(p)
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez_compressed(path, **_flatten(tree))
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure (and dtypes) of ``like``."""
+    with np.load(path if path.endswith(".npz") else path + ".npz") as data:
+        flat = {k: data[k] for k in data.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(like)
+    leaves = []
+    for path_k, ref in paths:
+        key = SEP.join(_path_str(p) for p in path_k)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key!r}")
+        arr = jnp.asarray(flat[key], dtype=ref.dtype)
+        if arr.shape != ref.shape:
+            raise ValueError(
+                f"{key}: checkpoint shape {arr.shape} != {ref.shape}")
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

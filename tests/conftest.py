@@ -1,0 +1,9 @@
+"""Test env: 4 virtual CPU devices (NOT 512 — that is dry-run-only; see
+launch/dryrun.py) so the distributed DPMM tests exercise real cross-device
+psums while smoke tests stay fast."""
+import os
+
+os.environ.setdefault(
+    "XLA_FLAGS",
+    (os.environ.get("XLA_FLAGS", "")
+     + " --xla_force_host_platform_device_count=4").strip())

@@ -1,0 +1,101 @@
+"""The trip-count-aware HLO analyzer (roofline source) against ground truth:
+scanned programs must report the same flops as their unrolled forms."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.roofline.hlo_costs import analyze_hlo
+
+
+def _costs(fn, *args):
+    return analyze_hlo(jax.jit(fn).lower(*args).compile().as_text())
+
+
+def test_scan_flops_match_unrolled():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+
+    def scanned(x, w):
+        y, _ = jax.lax.scan(lambda c, wi: (c @ wi, None), x, w)
+        return y
+
+    def unrolled(x, w):
+        for i in range(12):
+            x = x @ w[i]
+        return x
+
+    f_scan = _costs(scanned, x, w).flops
+    f_unr = _costs(unrolled, x, w).flops
+    expected = 2 * 12 * 256 ** 3
+    assert f_scan == pytest.approx(expected, rel=0.01)
+    assert f_unr == pytest.approx(expected, rel=0.01)
+
+
+def test_nested_scan_multiplies():
+    x = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((128, 128), jnp.float32)
+
+    def nested(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            c, _ = jax.lax.scan(inner, c, None, length=4)
+            return c, None
+        y, _ = jax.lax.scan(outer, x, None, length=5)
+        return y
+
+    got = _costs(nested, x, w).flops
+    assert got == pytest.approx(2 * 20 * 128 ** 3, rel=0.01)
+
+
+def test_batched_dot_flops():
+    a = jax.ShapeDtypeStruct((8, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((8, 32, 16), jnp.float32)
+
+    def f(a, b):
+        return jnp.einsum("bij,bjk->bik", a, b)
+
+    got = _costs(f, a, b).flops
+    assert got == pytest.approx(2 * 8 * 64 * 32 * 16, rel=0.01)
+
+
+def test_grad_flops_about_triple():
+    """Backward of y = sum(x@w) costs ~2 extra matmuls."""
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+
+    def fwd(x, w):
+        return jnp.sum(x @ w)
+
+    f_fwd = _costs(fwd, x, w).flops
+    f_grad = _costs(jax.grad(fwd, argnums=(0, 1)), x, w).flops
+    assert 1.8 * f_fwd < f_grad < 3.2 * f_fwd
+
+
+def test_collective_bytes_counted():
+    import os
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device")
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    import numpy as np_
+    mesh = Mesh(np_.array(jax.devices()[:2]), ("d",))
+    x = jax.ShapeDtypeStruct(
+        (128, 128), jnp.float32,
+        sharding=NamedSharding(mesh, P("d", None)))
+
+    def f(x):
+        return jnp.sum(x) * jnp.ones_like(x)     # all-reduce of partials
+
+    hlo = jax.jit(
+        f, in_shardings=NamedSharding(mesh, P("d", None)),
+        out_shardings=NamedSharding(mesh, P("d", None))).lower(x) \
+        .compile().as_text()
+    mc = analyze_hlo(hlo)
+    assert sum(mc.coll.values()) > 0
+
+
+def test_transcendentals_counted():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    mc = _costs(lambda x: jnp.tanh(x), x)
+    assert mc.transcendentals >= 64 * 64

@@ -1,0 +1,132 @@
+"""Per-kernel allclose vs the pure-jnp oracles (ref.py), with shape/dtype
+sweeps + hypothesis property tests. Kernels run interpret=True on CPU."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+# ---------------------------------------------------------------------------
+# matmul ('Kernel #1')
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (7, 3, 5), (37, 65, 129), (128, 128, 128),
+    (256, 64, 512), (130, 200, 50), (128, 1, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_shapes(m, k, n, dtype):
+    a = jnp.asarray(RNG.normal(size=(m, k)), dtype)
+    b = jnp.asarray(RNG.normal(size=(k, n)), dtype)
+    got = ops.matmul_pallas(a, b)
+    want = ref.matmul(a, b)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=st.integers(1, 200), k=st.integers(1, 200), n=st.integers(1, 200),
+       bm=st.sampled_from([32, 128]), bn=st.sampled_from([32, 128]),
+       bk=st.sampled_from([32, 128]))
+def test_matmul_property(m, k, n, bm, bn, bk):
+    """Any (shape, block) combination matches XLA dot."""
+    rng = np.random.default_rng(m * 7919 + k * 31 + n)
+    a = jnp.asarray(rng.normal(size=(m, k)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(k, n)), jnp.float32)
+    got = ops.matmul_pallas(a, b, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, ref.matmul(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_auto_dispatch():
+    """Below/above the crossover both dispatch paths agree (the paper's
+    auto-selection is a pure performance choice, never a numerics one)."""
+    a_small = jnp.asarray(RNG.normal(size=(100, 100)), jnp.float32)
+    b_small = jnp.asarray(RNG.normal(size=(100, 100)), jnp.float32)
+    a_big = jnp.asarray(RNG.normal(size=(1000, 1000)), jnp.float32)
+    b_big = jnp.asarray(RNG.normal(size=(1000, 1000)), jnp.float32)
+    np.testing.assert_allclose(ops.matmul_auto(a_small, b_small),
+                               ref.matmul(a_small, b_small), rtol=1e-5)
+    np.testing.assert_allclose(ops.matmul_auto(a_big, b_big),
+                               ref.matmul(a_big, b_big), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# loglik (`dcolwise_dot_all`)
+# ---------------------------------------------------------------------------
+def _gauss_inputs(n, k, d, rng):
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    mu = jnp.asarray(rng.normal(size=(k, d)), jnp.float32)
+    f = jnp.asarray(rng.normal(size=(k, d, d)) * 0.3
+                    + np.eye(d), jnp.float32)
+    ld = jnp.asarray(rng.normal(size=(k,)), jnp.float32)
+    return x, mu, f, ld
+
+
+@pytest.mark.parametrize("n,k,d", [
+    (1, 1, 1), (100, 7, 3), (256, 16, 32), (33, 5, 64),
+    (128, 64, 2), (500, 3, 128),
+])
+def test_loglik_shapes(n, k, d):
+    x, mu, f, ld = _gauss_inputs(n, k, d, np.random.default_rng(n + k + d))
+    got = ops.loglik_pallas(x, mu, f, ld)
+    want = ref.loglik(x, mu, f, ld)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 300), k=st.integers(1, 40), d=st.integers(1, 48))
+def test_loglik_property(n, k, d):
+    x, mu, f, ld = _gauss_inputs(n, k, d, np.random.default_rng(n * k + d))
+    got = ops.loglik_pallas(x, mu, f, ld)
+    want = ref.loglik(x, mu, f, ld)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_loglik_matches_niw_module():
+    """Kernel oracle == the sampler's own likelihood (core/niw.py)."""
+    from repro.core import niw
+    rng = np.random.default_rng(3)
+    x, mu, f, ld = _gauss_inputs(64, 8, 4, rng)
+    params = niw.GaussParams(mu=mu, chol_prec=f, logdet_prec=ld)
+    np.testing.assert_allclose(ref.loglik(x, mu, f, ld),
+                               niw.loglik(x, params), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# suffstats
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,k,d", [
+    (1, 1, 1), (100, 7, 3), (300, 16, 32), (257, 9, 17), (128, 33, 64),
+])
+def test_suffstats_shapes(n, k, d):
+    rng = np.random.default_rng(n + 13 * k + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    labels = rng.integers(0, k, n)
+    resp = jnp.asarray(np.eye(k)[labels], jnp.float32)
+    got = ops.suffstats_pallas(x, resp)
+    want = ref.suffstats(x, resp)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(g, w, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 300), k=st.integers(1, 32), d=st.integers(1, 32))
+def test_suffstats_property_conservation(n, k, d):
+    """Invariants: sum_k n_k == N; sum_k sx_k == sum_i x_i; sxx PSD-ish."""
+    rng = np.random.default_rng(n * 31 + k * 7 + d)
+    x = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+    labels = rng.integers(0, k, n)
+    resp = jnp.asarray(np.eye(k)[labels], jnp.float32)
+    n_k, sx, sxx = ops.suffstats_pallas(x, resp)
+    assert np.isclose(float(jnp.sum(n_k)), n, rtol=1e-6)
+    np.testing.assert_allclose(jnp.sum(sx, axis=0), jnp.sum(x, axis=0),
+                               rtol=1e-3, atol=1e-3)
+    # each sxx_k is symmetric PSD (sum of outer products)
+    sym_err = float(jnp.max(jnp.abs(sxx - jnp.swapaxes(sxx, -1, -2))))
+    assert sym_err < 1e-3
+    eigs = np.linalg.eigvalsh(np.asarray(sxx) + 1e-4 * np.eye(d))
+    assert eigs.min() > -1e-2

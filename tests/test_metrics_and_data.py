@@ -1,0 +1,86 @@
+"""Metrics (NMI/ARI vs brute force) + synthetic generators + token pipeline."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.metrics import ari, nmi
+from repro.data.pipeline import TokenPipeline, lm_batches
+from repro.data.synthetic import generate_gmm, generate_mnmm
+
+
+def test_nmi_perfect_and_independent():
+    t = jnp.asarray(np.repeat([0, 1, 2], 50))
+    assert float(nmi(t, t, 3, 3)) == pytest.approx(1.0, abs=1e-5)
+    # a permutation relabel is still perfect
+    p = (t + 1) % 3
+    assert float(nmi(t, p, 3, 3)) == pytest.approx(1.0, abs=1e-5)
+    # constant prediction carries zero information
+    c = jnp.zeros_like(t)
+    assert float(nmi(t, c, 3, 3)) == pytest.approx(0.0, abs=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(10, 200), kt=st.integers(2, 5), kp=st.integers(2, 5),
+       seed=st.integers(0, 99))
+def test_nmi_ari_bounds_and_symmetry(n, kt, kp, seed):
+    rng = np.random.default_rng(seed)
+    t = jnp.asarray(rng.integers(0, kt, n))
+    p = jnp.asarray(rng.integers(0, kp, n))
+    v = float(nmi(t, p, kt, kp))
+    assert -1e-6 <= v <= 1.0 + 1e-6
+    assert v == pytest.approx(float(nmi(p, t, kp, kt)), abs=1e-5)
+    a = float(ari(t, p, kt, kp))
+    assert -0.5 - 1e-6 <= a <= 1.0 + 1e-6
+    assert float(ari(t, t, kt, kt)) == pytest.approx(1.0, abs=1e-5)
+
+
+def test_ari_matches_bruteforce_pairs():
+    rng = np.random.default_rng(0)
+    n = 60
+    t = rng.integers(0, 3, n)
+    p = rng.integers(0, 4, n)
+    got = float(ari(jnp.asarray(t), jnp.asarray(p), 3, 4))
+    # brute-force pair counting
+    same_t = t[:, None] == t[None, :]
+    same_p = p[:, None] == p[None, :]
+    iu = np.triu_indices(n, 1)
+    a = np.sum(same_t[iu] & same_p[iu])
+    b = np.sum(same_t[iu])
+    c = np.sum(same_p[iu])
+    tot = len(iu[0])
+    expected_idx = b * c / tot
+    want = (a - expected_idx) / (0.5 * (b + c) - expected_idx)
+    assert got == pytest.approx(want, rel=1e-4)
+
+
+def test_generate_gmm_structure():
+    x, labels = generate_gmm(1000, 3, 4, seed=0)
+    assert x.shape == (1000, 3) and labels.shape == (1000,)
+    assert x.dtype == np.float32
+    assert set(np.unique(labels)) <= set(range(4))
+    # same seed => identical data (determinism)
+    x2, l2 = generate_gmm(1000, 3, 4, seed=0)
+    np.testing.assert_array_equal(x, x2)
+
+
+def test_generate_mnmm_counts():
+    x, labels = generate_mnmm(500, 8, 3, seed=1, trials=30)
+    assert x.shape == (500, 8)
+    np.testing.assert_array_equal(x.sum(axis=1), np.full(500, 30.0))
+    assert (x >= 0).all()
+
+
+def test_token_pipeline_deterministic_and_in_vocab():
+    a = TokenPipeline(100, seed=3).sample(500)
+    b = TokenPipeline(100, seed=3).sample(500)
+    np.testing.assert_array_equal(a, b)
+    assert a.min() >= 0 and a.max() < 100
+
+
+def test_lm_batches_shapes_and_shift():
+    gen = lm_batches(50, batch=4, seq=32, seed=0)
+    toks, tgts = next(gen)
+    assert toks.shape == (4, 32) and tgts.shape == (4, 32)
+    # targets are the next-token shift of a common stream
+    np.testing.assert_array_equal(toks[:, 1:], tgts[:, :-1])

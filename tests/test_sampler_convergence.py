@@ -1,0 +1,75 @@
+"""End-to-end sampler behaviour — the paper's Figs 1-2 claims (C1, C2):
+correct K recovery and high NMI on synthetic DPGMM/DPMNMM data, same
+hyperparameters across datasets."""
+import numpy as np
+import pytest
+
+from repro.configs import DPMMConfig
+from repro.core.sampler import DPMM
+from repro.data.synthetic import generate_gmm, generate_mnmm
+
+CFG = DPMMConfig(alpha=10.0, iters=80, k_max=32, burnout=5)
+
+
+def test_gmm_recovers_k_and_nmi():
+    """Fig 2 analogue: 6 well-separated Gaussians, K and NMI recovered."""
+    x, gt = generate_gmm(5000, 2, 6, seed=1, sep=12.0)
+    r = DPMM(CFG).fit(x)
+    assert r.nmi(gt) > 0.9, (r.k, r.nmi(gt))
+    assert 4 <= r.k <= 10, r.k
+
+
+def test_gmm_20_clusters_same_hyperparams():
+    """Fig 1 analogue: 20 clusters detected with the SAME hyperparameters."""
+    x, gt = generate_gmm(8000, 2, 20, seed=0, sep=25.0)
+    r = DPMM(CFG).fit(x, iters=120)
+    assert r.nmi(gt) > 0.9, (r.k, r.nmi(gt))
+    assert 14 <= r.k <= 28, r.k
+
+
+def test_gmm_higher_dim():
+    x, gt = generate_gmm(4000, 16, 5, seed=2, sep=4.0)
+    r = DPMM(CFG).fit(x)
+    assert r.nmi(gt) > 0.9, (r.k, r.nmi(gt))
+
+
+def test_mnmm_recovers_structure():
+    """DPMNMM (paper §5.2): multinomial components."""
+    x, gt = generate_mnmm(4000, 32, 8, seed=0)
+    cfg = DPMMConfig(component="multinomial", alpha=10.0, iters=80,
+                     k_max=32, burnout=5)
+    r = DPMM(cfg).fit(x)
+    assert r.nmi(gt) > 0.9, (r.k, r.nmi(gt))
+    assert 6 <= r.k <= 12, r.k
+
+
+def test_k_max_ceiling_is_respected():
+    """Splits that would exceed K_max are rejected (DESIGN §6), the chain
+    keeps running and labels stay within capacity."""
+    x, gt = generate_gmm(2000, 2, 12, seed=3, sep=20.0)
+    cfg = DPMMConfig(alpha=10.0, iters=40, k_max=8, burnout=3)
+    r = DPMM(cfg).fit(x)
+    assert r.k <= 8
+    assert r.labels.max() < 8
+    assert np.isfinite(r.nmi(gt))
+
+
+def test_pallas_path_identical_chain():
+    """C5 support: the Pallas loglik kernel swaps in without changing the
+    chain (bitwise-identical labels)."""
+    x, gt = generate_gmm(1500, 4, 4, seed=0, sep=10.0)
+    cfg = DPMMConfig(alpha=10.0, iters=25, k_max=16, burnout=5)
+    r1 = DPMM(cfg).fit(x)
+    r2 = DPMM(
+        DPMMConfig(alpha=10.0, iters=25, k_max=16, burnout=5,
+                   use_pallas=True)).fit(x)
+    assert np.array_equal(r1.labels, r2.labels)
+
+
+def test_history_monotone_burnin():
+    """No splits/merges before burnout: K stays at init_clusters."""
+    x, _ = generate_gmm(1000, 2, 4, seed=4, sep=10.0)
+    cfg = DPMMConfig(alpha=10.0, iters=10, k_max=16, burnout=10,
+                     init_clusters=2)
+    r = DPMM(cfg).fit(x)
+    assert (r.history["k"] == 2).all()

@@ -1,0 +1,79 @@
+"""Param-tree / spec-tree congruence for every architecture: param_specs
+must mirror init_params' structure exactly, and cache_specs the cache's —
+the invariant the 512-chip lowering relies on."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import decode, transformer
+from repro.models.common import ShardingPolicy
+
+POLICY = ShardingPolicy(batch_sharded=True, seq_shard=False)
+
+
+def _strip(tree):
+    return jax.tree.structure(
+        jax.tree.map(lambda _: 0, tree,
+                     is_leaf=lambda s: isinstance(s, P)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_match_structure_smoke(arch):
+    cfg = smoke_config(arch)
+    params = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, jnp.bfloat16),
+        jax.random.key(0))
+    specs = transformer.param_specs(cfg)
+    assert _strip(params) == _strip(specs)
+    # every spec's rank <= its param's rank
+    flat_p = jax.tree.leaves(params)
+    flat_s = jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P))
+    assert len(flat_p) == len(flat_s)
+    for p, s in zip(flat_p, flat_s):
+        assert len(s) <= len(p.shape), (p.shape, s)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_match_structure_full(arch):
+    """The FULL configs too (pure eval_shape — no allocation)."""
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, jnp.bfloat16),
+        jax.random.key(0))
+    specs = transformer.param_specs(cfg)
+    assert _strip(params) == _strip(specs)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_match_structure(arch):
+    cfg = smoke_config(arch)
+    cache = jax.eval_shape(
+        lambda: decode.init_cache(cfg, 4, 64, jnp.bfloat16))
+    specs = decode.cache_specs(cfg, POLICY)
+    assert _strip(cache) == _strip(specs)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_param_counts(arch):
+    """Full-config parameter totals are in the advertised ballpark."""
+    import numpy as np
+    cfg = get_config(arch)
+    params = jax.eval_shape(
+        lambda k: transformer.init_params(k, cfg, jnp.bfloat16),
+        jax.random.key(0))
+    total = sum(int(np.prod(x.shape)) for x in jax.tree.leaves(params))
+    expected = {
+        "granite-8b": (7e9, 10e9),
+        "starcoder2-7b": (6e9, 9e9),
+        "falcon-mamba-7b": (6e9, 9e9),
+        "llama-3.2-vision-11b": (8e9, 12e9),   # backbone (no ViT stub)
+        "qwen2-moe-a2.7b": (12e9, 17e9),       # total (A2.7b = active)
+        "recurrentgemma-2b": (2e9, 3.5e9),
+        "mistral-large-123b": (110e9, 130e9),
+        "whisper-medium": (0.5e9, 1.2e9),
+        "gemma2-9b": (8e9, 11e9),
+        "deepseek-v2-lite-16b": (13e9, 18e9),
+    }[arch]
+    assert expected[0] < total < expected[1], f"{arch}: {total/1e9:.2f}B"
