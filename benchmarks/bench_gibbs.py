@@ -4,8 +4,14 @@ The paper sweeps N in 1e3..1e6, d in 2..128, K in 4..32 over 100 iters x 10
 repeats; a single CPU container gets a reduced-but-representative slice
 (full sweep via --full). Reports per-iteration time and final NMI/K so both
 the speed (Figs 4, 6) and accuracy (Figs 5, 7) tables come from one run.
+`--smoke` runs a seconds-scale slice for CI: it reports ms/iter for the
+chunked scan driver at the default `log_every` AND at `log_every=1`
+(per-iteration host sync — the pre-scan-driver behaviour), so driver perf
+regressions and host-sync overhead are both visible in the log.
 """
 from __future__ import annotations
+
+import argparse
 
 import numpy as np
 
@@ -50,5 +56,42 @@ def run(full: bool = False, iters: int = 40, out_dir: str = "experiments"):
     return t
 
 
+def run_smoke(iters: int = 30) -> float:
+    """CI canary: one small DPGMM fit, chunked vs per-iteration host sync."""
+    n, d, k = 20_000, 2, 8
+    x, gt = generate_gmm(n, d, k, seed=0, sep=8.0)
+
+    def ms_per_iter(log_every: int) -> float:
+        cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=32, burnout=5,
+                         log_every=log_every)
+        r = DPMM(cfg).fit(x)
+        # fit() compiles chunks ahead-of-time, outside the timed region, so
+        # dropping the usual warm-up iteration is enough
+        return float(np.mean(r.iter_times_s[1:]) * 1e3)
+
+    ms_per_iter(10)   # process warm-up (allocator/thread pools), discarded
+    ms_chunked = ms_per_iter(10)
+    ms_synced = ms_per_iter(1)
+    print(f"smoke N={n} d={d} K={k} iters={iters}: "
+          f"{ms_chunked:.1f} ms/iter (log_every=10, scan driver)  vs  "
+          f"{ms_synced:.1f} ms/iter (log_every=1, per-iter host sync; "
+          f"overhead {ms_synced - ms_chunked:+.1f} ms/iter)")
+    return ms_chunked
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale CI slice instead of the paper grid")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--iters", type=int, default=None)
+    ap.add_argument("--out-dir", default="experiments")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        run_smoke(args.iters or 30)
+    else:
+        run(full=args.full, iters=args.iters or 40, out_dir=args.out_dir)
+
+
 if __name__ == "__main__":
-    run()
+    main()

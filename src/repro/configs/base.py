@@ -151,13 +151,24 @@ INPUT_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K
 
 @dataclasses.dataclass(frozen=True)
 class DPMMConfig:
-    """Hyper-parameters for the paper's DPMM sampler."""
-    component: str = "gaussian"       # gaussian|multinomial|poisson
+    """Hyper-parameters for the paper's DPMM sampler.
+
+    ``component`` names a ``ComponentFamily`` in the registry
+    (``repro.core.family``): gaussian | diag_gaussian | multinomial |
+    poisson out of the box; user families registered via
+    ``register_family`` are addressable by name the same way.
+    """
+    component: str = "gaussian"       # core.family registry lookup key
     alpha: float = 10.0               # DP concentration
     k_max: int = 64                   # static capacity (see DESIGN §6)
     init_clusters: int = 1
     iters: int = 100
     burnout: int = 15                 # no splits/merges before this iter
+    log_every: int = 10               # scan-chunk size: iterations per
+    #                                   jitted device call; the host syncs
+    #                                   (history pull + timing) once per
+    #                                   chunk, i.e. ceil(iters/log_every)
+    #                                   times per fit() instead of per iter
     subreset_every: int = 10          # re-init sub-labels after this many
     #                                   consecutive rejected splits (escapes
     #                                   sub-cluster local modes; mirrors the
@@ -171,6 +182,11 @@ class DPMMConfig:
     # Gamma prior (poisson — the paper's suggested extra family, §3.4.3)
     gamma_a0: float = 1.0
     gamma_b0: float = 1.0
+    # NIG prior (diag_gaussian); m is the data mean. Defaults mirror the
+    # NIW prior at d=1 (a = nu/2, b = psi/2 with psi=1, nu=1+nu_extra)
+    nig_kappa: float = 1.0
+    nig_a0: float = 2.0
+    nig_b0: float = 0.5
     # distribution
     shard_features: bool = False      # shard d over the model axis (high-d)
     use_pallas: bool = False          # swap in Pallas kernels (TPU)

@@ -1,4 +1,6 @@
 # The paper's primary contribution: distributed sub-cluster split/merge
 # DPMM sampling. See DESIGN.md §2-§6 for the TPU adaptation.
+from repro.core.family import (ComponentFamily, available_families,  # noqa: F401
+                               get_family, register_family)
 from repro.core.sampler import DPMM, FitResult, dpmm_step  # noqa: F401
 from repro.core.state import DPMMState  # noqa: F401

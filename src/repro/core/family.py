@@ -1,0 +1,219 @@
+"""ComponentFamily: the one dispatch layer for all likelihood families.
+
+The sampler skeleton (restricted Gibbs + sub-cluster splits/merges) is
+observation-model-agnostic — the paper's central modularity claim: 'it can
+be easily adapted to other component distributions ... as long as they
+belong to an exponential family' (§3.4.3). A ``ComponentFamily`` bundles
+everything the skeleton needs from an observation model:
+
+ - conjugate math: ``stats_from_points`` / ``add_stats`` / ``log_marginal``
+   / ``sample_posterior`` / ``expected_params`` / ``loglik``,
+ - pytree *templates* (``param_struct`` / ``stats_struct``) used to build
+   replicated PartitionSpecs without knowing field names,
+ - an optional Pallas/accelerated ``loglik_fast`` path (paper §4.2),
+ - the feature-sharding contract (DESIGN §10): ``feature_shardable``
+   families declare which stats fields carry a feature axis
+   (``feature_stat_fields``, all-gathered after the data-axis psum) and how
+   to slice their params to a local feature block (``slice_params``), and
+ - ``build_prior(cfg, x)``: config + data -> prior hyper-parameters.
+
+``core/gibbs.py``, ``core/sampler.py`` and ``core/splitmerge.py`` dispatch
+*only* through this interface — no ``hasattr``/``getattr`` probing of
+param/stat pytrees anywhere in the sampler.
+
+Registering a new family::
+
+    from repro.core.family import ComponentFamily, register_family
+    register_family(ComponentFamily(name="my_family", ...))
+    # then DPMMConfig(component="my_family") just works.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import diag_gaussian, multinomial, niw, poisson
+from repro.core.state import DPMMState
+
+
+@dataclasses.dataclass(frozen=True)
+class ComponentFamily:
+    """One observation model behind the fixed sampler interface."""
+    name: str
+    # pytree templates (placeholder leaves) for building PartitionSpecs
+    param_struct: Callable[[], Any]
+    stats_struct: Callable[[], Any]
+    # conjugate math (see core/niw.py for the reference semantics)
+    build_prior: Callable[[Any, Any], Any]          # (cfg, x) -> prior
+    empty_stats: Callable[..., Any]                 # (batch_shape, d) -> stats
+    stats_from_points: Callable[[jax.Array, jax.Array], Any]
+    add_stats: Callable[[Any, Any], Any]
+    log_marginal: Callable[[Any, Any], jax.Array]   # (prior, stats) -> (*B,)
+    sample_posterior: Callable[[jax.Array, Any, Any], Any]
+    expected_params: Callable[[Any, Any], Any]
+    loglik_ref: Callable[[jax.Array, Any], jax.Array]  # (x, params) -> (N,*B)
+    # optional accelerated loglik (Pallas on TPU; paper §4.2 'Kernel #1/#2')
+    loglik_fast: Optional[Callable[[jax.Array, Any], jax.Array]] = None
+    # feature-sharding contract (DESIGN §10); shardable families' loglik and
+    # stats must be sums over features so local slices psum/gather correctly
+    feature_shardable: bool = False
+    feature_stat_fields: Tuple[str, ...] = ()
+    slice_params: Optional[Callable[[Any, Any, int], Any]] = None
+    # stats field holding the first moment (sum x) — cluster means read it
+    mean_field: str = "sx"
+
+    def loglik(self, x: jax.Array, params: Any,
+               use_pallas: bool = False) -> jax.Array:
+        """(N, *B) point log-likelihoods; Pallas fast path when available."""
+        if use_pallas and self.loglik_fast is not None:
+            return self.loglik_fast(x, params)
+        return self.loglik_ref(x, params)
+
+    def loglik_sharded(self, x: jax.Array, params: Any,
+                       feat_axis: str) -> jax.Array:
+        """Feature-sharded loglik: local params slice + psum over features.
+
+        ``x`` holds this shard's feature block (paper's d=20,000 regime —
+        the feature dim never replicates); params are full-d replicated.
+        """
+        self._require_shardable()
+        i = jax.lax.axis_index(feat_axis)
+        dl = x.shape[1]
+        partial = self.loglik_ref(x, self.slice_params(params, i * dl, dl))
+        return jax.lax.psum(partial, feat_axis)
+
+    def gather_feature_stats(self, stats: Any, feat_axis: str) -> Any:
+        """All-gather feature-sliced stats fields to full d (still O(K d))."""
+        self._require_shardable()
+        gather = lambda c: jax.lax.all_gather(c, feat_axis, axis=c.ndim - 1,
+                                              tiled=True)
+        return stats._replace(**{f: gather(getattr(stats, f))
+                                 for f in self.feature_stat_fields})
+
+    def cluster_means(self, stats: Any) -> jax.Array:
+        """(*B, d) empirical cluster means from the first-moment field."""
+        first = getattr(stats, self.mean_field)
+        return first / jnp.maximum(stats.n[..., None], 1.0)
+
+    def _require_shardable(self) -> None:
+        if not self.feature_shardable:
+            raise ValueError(
+                f"component family {self.name!r} is not feature-separable: "
+                "its likelihood/stats are not sums over independent "
+                "features (e.g. the full-covariance Gaussian Mahalanobis), "
+                "so shard_features is unsupported — use a shardable family "
+                f"({', '.join(shardable_families())}) for the high-d path")
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+_REGISTRY: Dict[str, ComponentFamily] = {}
+
+
+def register_family(family: ComponentFamily) -> ComponentFamily:
+    if family.name in _REGISTRY:
+        raise ValueError(f"component family {family.name!r} already "
+                         "registered")
+    if family.feature_shardable and (not family.feature_stat_fields
+                                     or family.slice_params is None):
+        raise ValueError(f"{family.name!r}: feature_shardable families must "
+                         "set feature_stat_fields and slice_params")
+    _REGISTRY[family.name] = family
+    return family
+
+
+def get_family(name: str) -> ComponentFamily:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown component family {name!r}; registered: "
+                         f"{', '.join(available_families())}") from None
+
+
+def available_families() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def shardable_families() -> Tuple[str, ...]:
+    return tuple(n for n in available_families()
+                 if _REGISTRY[n].feature_shardable)
+
+
+def state_partition_specs(family: ComponentFamily,
+                          shard_spec: P) -> DPMMState:
+    """shard_map specs for a DPMMState: labels on the data axes, everything
+    per-cluster replicated (paper §4.3: only stats/params are global)."""
+    rep = P()
+    rep_tree = lambda struct: jax.tree.map(lambda _: rep, struct)
+    return DPMMState(
+        key=rep, it=rep, active=rep, logweights=rep, sub_logweights=rep,
+        stuck=rep,
+        params=rep_tree(family.param_struct()),
+        subparams=rep_tree(family.param_struct()),
+        stats=rep_tree(family.stats_struct()),
+        substats=rep_tree(family.stats_struct()),
+        labels=shard_spec, sublabels=shard_spec)
+
+
+# ---------------------------------------------------------------------------
+# Built-in families
+# ---------------------------------------------------------------------------
+def _module_family(mod, **kw) -> ComponentFamily:
+    return ComponentFamily(
+        param_struct=mod.param_struct, stats_struct=mod.stats_struct,
+        build_prior=mod.build_prior, empty_stats=mod.empty_stats,
+        stats_from_points=mod.stats_from_points, add_stats=mod.add_stats,
+        log_marginal=mod.log_marginal, sample_posterior=mod.sample_posterior,
+        expected_params=mod.expected_params, loglik_ref=mod.loglik, **kw)
+
+
+def _slice_last(arr: jax.Array, start, size: int) -> jax.Array:
+    return jax.lax.dynamic_slice_in_dim(arr, start, size, axis=-1)
+
+
+def _gauss_loglik_fast(x: jax.Array, params) -> jax.Array:
+    # Pallas whitening-matmul kernel; sub-cluster params (K, 2, ...) fall
+    # back to the jnp path (the kernel grid is 2-D over clusters)
+    if params.mu.ndim != 2:
+        return niw.loglik(x, params)
+    from repro.kernels import ops
+    return ops.gauss_loglik(x, params, True)
+
+
+def _diag_gauss_loglik_fast(x: jax.Array, params) -> jax.Array:
+    if params.mu.ndim != 2:
+        return diag_gaussian.loglik(x, params)
+    from repro.kernels import ops
+    return ops.diag_gauss_loglik(x, params, True)
+
+
+GAUSSIAN = register_family(_module_family(
+    niw, name="gaussian", loglik_fast=_gauss_loglik_fast,
+    feature_shardable=False, mean_field="sx"))
+
+MULTINOMIAL = register_family(_module_family(
+    multinomial, name="multinomial",
+    feature_shardable=True, feature_stat_fields=("counts",),
+    slice_params=lambda p, s, n: multinomial.MultParams(
+        logtheta=_slice_last(p.logtheta, s, n)),
+    mean_field="counts"))
+
+POISSON = register_family(_module_family(
+    poisson, name="poisson",
+    feature_shardable=True, feature_stat_fields=("sx",),
+    slice_params=lambda p, s, n: poisson.PoisParams(
+        log_rate=_slice_last(p.log_rate, s, n)),
+    mean_field="sx"))
+
+DIAG_GAUSSIAN = register_family(_module_family(
+    diag_gaussian, name="diag_gaussian",
+    loglik_fast=_diag_gauss_loglik_fast,
+    feature_shardable=True, feature_stat_fields=("sx", "sxx"),
+    slice_params=lambda p, s, n: diag_gaussian.DiagParams(
+        mu=_slice_last(p.mu, s, n), log_prec=_slice_last(p.log_prec, s, n)),
+    mean_field="sx"))

@@ -11,7 +11,6 @@ are bitwise identical under any sharding (DESIGN §2, assumption 3).
 """
 from __future__ import annotations
 
-import functools
 from typing import Any, Tuple
 
 import jax
@@ -29,13 +28,17 @@ def psum_tree(tree: Any, axes: Tuple[str, ...]):
 
 
 def global_indices(n_local: int, axes: Tuple[str, ...]) -> jax.Array:
-    """Global point indices of this shard (0..N-1 ordering over the mesh)."""
+    """Global point indices of this shard (0..N-1 ordering over the mesh).
+
+    Assumes every data shard holds exactly ``n_local`` points —
+    ``distributed.shard_points`` guarantees it by padding N up to a multiple
+    of the data-shard count — so this shard's offset is simply
+    ``axis_index(axes) * n_local``.
+    """
     base = jnp.arange(n_local, dtype=jnp.uint32)
     if not axes:
         return base
     idx = jax.lax.axis_index(axes)  # linearized index over the given axes
-    size = jax.lax.axis_size(axes) if hasattr(jax.lax, "axis_size") else None
-    del size
     return idx.astype(jnp.uint32) * jnp.uint32(n_local) + base
 
 
@@ -81,7 +84,7 @@ def sample_subweights(key: jax.Array, active: jax.Array, nkl: jax.Array,
     return jnp.where(active[:, None], logw, jnp.log(0.5))
 
 
-def compute_stats(comp, x: jax.Array, valid: jax.Array, labels: jax.Array,
+def compute_stats(family, x: jax.Array, valid: jax.Array, labels: jax.Array,
                   sublabels: jax.Array, k_max: int,
                   axes: Tuple[str, ...], feat_axis=None):
     """Suff-stats of clusters and sub-clusters from (sharded) labels + psum.
@@ -91,52 +94,35 @@ def compute_stats(comp, x: jax.Array, valid: jax.Array, labels: jax.Array,
     cross-shard aggregation that moves only O(K * T) floats.
 
     ``feat_axis``: the feature dim of x is additionally sharded over this
-    mesh axis (multinomial high-d mode, DESIGN §10): local count slices are
-    all-gathered along features after the data-axis psum — still O(K * d).
+    mesh axis (high-d mode, DESIGN §10): the family's feature-sliced stats
+    fields are all-gathered along features after the data-axis psum — still
+    O(K * d). Only ``family.feature_shardable`` families support this.
     """
     resp = jax.nn.one_hot(labels, k_max, dtype=x.dtype) * valid[:, None]
     sub = jax.nn.one_hot(sublabels, 2, dtype=x.dtype)
     subresp = resp[:, :, None] * sub[:, None, :]
-    stats = comp.stats_from_points(x, resp)
-    substats = comp.stats_from_points(x, subresp)
+    stats = family.stats_from_points(x, resp)
+    substats = family.stats_from_points(x, subresp)
     stats, substats = psum_tree((stats, substats), axes)
     if feat_axis is not None:
-        assert not hasattr(stats, "sxx"), (
-            "feature sharding supports the feature-separable components "
-            "(multinomial, poisson) only: the Gaussian full-covariance "
-            "Mahalanobis is not feature-separable")
-        field = "counts" if hasattr(stats, "counts") else "sx"
-        gather = lambda c: jax.lax.all_gather(c, feat_axis, axis=c.ndim - 1,
-                                              tiled=True)
-        stats = stats._replace(**{field: gather(getattr(stats, field))})
-        substats = substats._replace(
-            **{field: gather(getattr(substats, field))})
+        stats = family.gather_feature_stats(stats, feat_axis)
+        substats = family.gather_feature_stats(substats, feat_axis)
     return stats, substats
 
 
-def _loglik(comp, x, params, use_pallas: bool, feat_axis=None):
+def _loglik(family, x, params, use_pallas: bool, feat_axis=None):
     """The O(N K T) hot spot — Pallas kernel on TPU when enabled (§4.2).
 
-    With ``feat_axis`` the feature-separable likelihoods (multinomial
-    x @ log(theta)^T; Poisson x @ log(lambda)^T - sum exp) run on local
-    feature slices and psum the (N_local, K) partials — the paper's
-    d=20,000 20newsgroups regime without ever replicating x's features."""
+    With ``feat_axis`` the feature-separable likelihoods (multinomial,
+    Poisson, diag-Gaussian) run on local feature slices and psum the
+    (N_local, K) partials — the paper's d=20,000 20newsgroups regime
+    without ever replicating x's features."""
     if feat_axis is not None:
-        i = jax.lax.axis_index(feat_axis)
-        dl = x.shape[1]
-        full = getattr(params, "logtheta", None)
-        if full is None:
-            full = params.log_rate                 # poisson
-        sl = jax.lax.dynamic_slice_in_dim(full, i * dl, dl, axis=-1)
-        partial = comp.loglik(x, type(params)(sl))
-        return jax.lax.psum(partial, feat_axis)
-    if use_pallas and hasattr(params, "chol_prec") and params.mu.ndim == 2:
-        from repro.kernels import ops
-        return ops.gauss_loglik(x, params, True)
-    return comp.loglik(x, params)
+        return family.loglik_sharded(x, params, feat_axis)
+    return family.loglik(x, params, use_pallas=use_pallas)
 
 
-def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, comp,
+def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, family,
           alpha: float, axes: Tuple[str, ...],
           use_pallas: bool = False, feat_axis=None) -> DPMMState:
     """One restricted Gibbs sweep (steps a-f). Runs under shard_map."""
@@ -151,12 +137,12 @@ def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, comp,
         alpha)
 
     # (c) cluster params  (d) sub-cluster params  — replicated O(K d^3)
-    params = comp.sample_posterior(k_p, prior, state.stats)
-    subparams = comp.sample_posterior(k_sp, prior, state.substats)
+    params = family.sample_posterior(k_p, prior, state.stats)
+    subparams = family.sample_posterior(k_sp, prior, state.substats)
 
     # (e) cluster assignments: z_i ~ pi_k f(x_i; theta_k)  over *existing* k
     gidx = global_indices(x.shape[0], axes)
-    ll = _loglik(comp, x, params, use_pallas, feat_axis)  # (N, K) hot spot
+    ll = _loglik(family, x, params, use_pallas, feat_axis)  # (N, K) hot spot
     logits = ll + logw[None, :]
     logits = jnp.where(state.active[None, :], logits, NEG_INF)
     labels = jnp.argmax(
@@ -164,7 +150,7 @@ def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, comp,
     ).astype(jnp.int32)
 
     # (f) sub-cluster assignments under the point's own cluster
-    subll = _loglik(comp, x, subparams, False, feat_axis)  # (N, K, 2)
+    subll = _loglik(family, x, subparams, False, feat_axis)  # (N, K, 2)
     own = jnp.take_along_axis(
         subll, labels[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]
     sublogits = own + sublogw[labels]
@@ -174,7 +160,7 @@ def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, comp,
 
     # suff-stats + the one cross-shard reduction
     stats, substats = compute_stats(
-        comp, x, valid, labels, sublabels, k_max, axes, feat_axis)
+        family, x, valid, labels, sublabels, k_max, axes, feat_axis)
 
     return state._replace(
         logweights=logw, sub_logweights=sublogw, params=params,

@@ -37,6 +37,20 @@ def default_prior(d: int, alpha0: float, dtype=jnp.float32) -> MultPrior:
     return MultPrior(alpha0=jnp.asarray(alpha0, dtype), d=d)
 
 
+def build_prior(cfg, x) -> MultPrior:
+    """Family hook (core/family.py): prior from config + data."""
+    return default_prior(x.shape[1], cfg.dir_alpha)
+
+
+def param_struct() -> MultParams:
+    """Pytree template (leaves are placeholders) for spec-mapping."""
+    return MultParams(logtheta=0)
+
+
+def stats_struct() -> MultStats:
+    return MultStats(n=0, counts=0)
+
+
 def empty_stats(batch_shape: tuple, d: int, dtype=jnp.float32) -> MultStats:
     return MultStats(n=jnp.zeros(batch_shape, dtype),
                      counts=jnp.zeros(batch_shape + (d,), dtype))

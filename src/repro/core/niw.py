@@ -61,6 +61,23 @@ def default_prior(x_mean: jax.Array, psi_diag: jax.Array, kappa: float,
                     nu=jnp.asarray(nu, x_mean.dtype))
 
 
+def build_prior(cfg, x) -> NIWPrior:
+    """Family hook (core/family.py): prior from config + data."""
+    mean = jnp.asarray(x.mean(axis=0), jnp.float32)
+    psi_diag = jnp.full((x.shape[1],), cfg.niw_psi, jnp.float32)
+    return default_prior(mean, psi_diag, cfg.niw_kappa,
+                         x.shape[1] + cfg.niw_nu_extra)
+
+
+def param_struct() -> GaussParams:
+    """Pytree template (leaves are placeholders) for spec-mapping."""
+    return GaussParams(mu=0, chol_prec=0, logdet_prec=0)
+
+
+def stats_struct() -> GaussStats:
+    return GaussStats(n=0, sx=0, sxx=0)
+
+
 def empty_stats(batch_shape: tuple, d: int, dtype=jnp.float32) -> GaussStats:
     return GaussStats(
         n=jnp.zeros(batch_shape, dtype),

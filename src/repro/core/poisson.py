@@ -38,6 +38,20 @@ def default_prior(d: int, a0: float = 1.0, b0: float = 1.0,
                      d=d)
 
 
+def build_prior(cfg, x) -> PoisPrior:
+    """Family hook (core/family.py): prior from config + data."""
+    return default_prior(x.shape[1], cfg.gamma_a0, cfg.gamma_b0)
+
+
+def param_struct() -> PoisParams:
+    """Pytree template (leaves are placeholders) for spec-mapping."""
+    return PoisParams(log_rate=0)
+
+
+def stats_struct() -> PoisStats:
+    return PoisStats(n=0, sx=0)
+
+
 def empty_stats(batch_shape: tuple, d: int, dtype=jnp.float32) -> PoisStats:
     return PoisStats(n=jnp.zeros(batch_shape, dtype),
                      sx=jnp.zeros(batch_shape + (d,), dtype))

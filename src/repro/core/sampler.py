@@ -2,9 +2,19 @@
 
 Composition per iteration (paper §4.1):
     restricted Gibbs sweep  ->  splits  ->  merges  ->  stats consistency
-with splits/merges gated by ``burnout``. The whole iteration runs inside a
-single ``shard_map`` over the mesh's data axes; the only communication is
-the psum of sufficient statistics (paper §4.3).
+with splits/merges gated by ``burnout``. Iterations run inside a single
+``shard_map`` over the mesh's data axes; the only cross-device
+communication is the psum of sufficient statistics (paper §4.3).
+
+Observation models are ``ComponentFamily`` instances looked up from the
+registry (core/family.py) by ``cfg.component`` — the sampler never inspects
+param/stat pytrees itself.
+
+The driver is a *chunked on-device scan*: ``cfg.log_every`` iterations of
+``dpmm_step`` run inside one jitted, buffer-donated ``lax.scan`` call that
+collects ``state.summarize()`` history on device, so the host blocks once
+per chunk (``ceil(iters / log_every)`` syncs total) instead of once per
+iteration — no O(iters) host round-trips in the hot loop.
 
 Example (paper §3.4.1 analogue):
     >>> from repro.core.sampler import DPMM
@@ -18,36 +28,26 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import DPMMConfig
-from repro.core import gibbs, multinomial, niw, poisson, splitmerge
-from repro.core.distributed import data_axes_of, make_data_mesh, shard_points
+from repro.core import gibbs, splitmerge
+from repro.core.distributed import (data_axes_of, make_data_mesh,
+                                    shard_map, shard_points)
+from repro.core.family import (ComponentFamily, get_family,
+                               state_partition_specs)
 from repro.core.metrics import ari, nmi
 from repro.core.state import DPMMState
 
-
-def component_module(name: str):
-    if name == "gaussian":
-        return niw
-    if name == "multinomial":
-        return multinomial
-    if name == "poisson":
-        return poisson
-    raise ValueError(f"unknown component {name!r}")
+_HIST_KEYS = ("k", "max_cluster", "min_cluster")
 
 
-def _cluster_means(comp, stats):
-    first = stats.sx if hasattr(stats, "sx") else stats.counts
-    return first / jnp.maximum(stats.n[..., None], 1.0)
-
-
-def _init_local(key, x, valid, *, prior, comp, cfg, axes, k_max,
+def _init_local(key, x, valid, *, prior, family, cfg, axes, k_max,
                 feat_axis=None):
     """Initial state (runs under shard_map)."""
     n_local = x.shape[0]
@@ -55,18 +55,21 @@ def _init_local(key, x, valid, *, prior, comp, cfg, axes, k_max,
     labels = (gidx % jnp.uint32(cfg.init_clusters)).astype(jnp.int32)
     # first pass for cluster means, then hyperplane sub-label init
     stats0, _ = gibbs.compute_stats(
-        comp, x, valid, labels, jnp.zeros_like(labels), k_max, axes,
+        family, x, valid, labels, jnp.zeros_like(labels), k_max, axes,
         feat_axis)
     sublabels = splitmerge.hyperplane_bits(
-        jax.random.fold_in(key, 1), x, labels, _cluster_means(comp, stats0),
+        jax.random.fold_in(key, 1), x, labels, family.cluster_means(stats0),
         feat_axis)
     stats, substats = gibbs.compute_stats(
-        comp, x, valid, labels, sublabels, k_max, axes, feat_axis)
+        family, x, valid, labels, sublabels, k_max, axes, feat_axis)
     active = jnp.arange(k_max) < cfg.init_clusters
-    params = comp.expected_params(prior, stats)
-    subparams = comp.expected_params(prior, substats)
-    logw = jnp.where(active, -jnp.log(float(cfg.init_clusters)), gibbs.NEG_INF)
-    sublogw = jnp.full((k_max, 2), jnp.log(0.5))
+    params = family.expected_params(prior, stats)
+    subparams = family.expected_params(prior, substats)
+    # strong dtypes: weak-typed leaves would force a second trace/compile of
+    # the chunk fn on its own (strongly-typed) output state
+    logw = jnp.where(active, -jnp.log(float(cfg.init_clusters)),
+                     gibbs.NEG_INF).astype(jnp.float32)
+    sublogw = jnp.full((k_max, 2), jnp.log(0.5), dtype=jnp.float32)
     return DPMMState(
         key=key, it=jnp.zeros((), jnp.int32), active=active,
         logweights=logw, sub_logweights=sublogw,
@@ -75,26 +78,26 @@ def _init_local(key, x, valid, *, prior, comp, cfg, axes, k_max,
         labels=labels, sublabels=sublabels)
 
 
-def _split_merge(state: DPMMState, x, valid, *, prior, comp, cfg, axes,
+def _split_merge(state: DPMMState, x, valid, *, prior, family, cfg, axes,
                  k_max, feat_axis=None) -> DPMMState:
     key = jax.random.fold_in(state.key, -(state.it + 1))
     k_s, k_m, k_b = jax.random.split(key, 3)
 
-    dec_s = splitmerge.propose_splits(k_s, state, prior, comp, cfg.alpha)
+    dec_s = splitmerge.propose_splits(k_s, state, prior, family, cfg.alpha)
     stats1 = splitmerge.apply_split_to_stats(
-        comp, state.stats, state.substats, dec_s)
+        family, state.stats, state.substats, dec_s)
     # provisional relabel (moves r-halves to their new slots) ...
     labels_mid = jnp.where(
         dec_s.accept[state.labels] & (state.sublabels == 1),
         dec_s.dest[state.labels], state.labels).astype(jnp.int32)
     # ... then hyperplane sub-label init around the *post-split* means
     bits = splitmerge.hyperplane_bits(
-        k_b, x, labels_mid, _cluster_means(comp, stats1), feat_axis)
+        k_b, x, labels_mid, family.cluster_means(stats1), feat_axis)
     labels1, sublabels1 = splitmerge.relabel_after_split(
         state.labels, state.sublabels, dec_s, bits)
 
     dec_m = splitmerge.propose_merges(
-        k_m, dec_s.new_active, stats1, prior, comp, comp.add_stats, cfg.alpha)
+        k_m, dec_s.new_active, stats1, prior, family, cfg.alpha)
     labels2, sublabels2 = splitmerge.relabel_after_merge(
         labels1, sublabels1, dec_m)
 
@@ -108,7 +111,7 @@ def _split_merge(state: DPMMState, x, valid, *, prior, comp, cfg, axes,
     stuck = jnp.where(reset, 0, stuck).astype(jnp.int32)
     stats2 = splitmerge.apply_merge_to_stats(stats1, dec_m)
     bits2 = splitmerge.hyperplane_bits(
-        jax.random.fold_in(k_b, 1), x, labels2, _cluster_means(comp, stats2),
+        jax.random.fold_in(k_b, 1), x, labels2, family.cluster_means(stats2),
         feat_axis)
     sublabels2 = jnp.where(reset[labels2], bits2, sublabels2)
 
@@ -116,21 +119,22 @@ def _split_merge(state: DPMMState, x, valid, *, prior, comp, cfg, axes,
     # (paper §4.4: 'processing accepted splits/merges requires updating the
     # sufficient statistics', O(N/G) + one psum)
     stats3, substats3 = gibbs.compute_stats(
-        comp, x, valid, labels2, sublabels2, k_max, axes, feat_axis)
+        family, x, valid, labels2, sublabels2, k_max, axes, feat_axis)
     return state._replace(
         active=dec_m.new_active, stuck=stuck, stats=stats3,
         substats=substats3, labels=labels2, sublabels=sublabels2)
 
 
-def dpmm_step(state: DPMMState, x, valid, *, prior, comp, cfg, axes,
+def dpmm_step(state: DPMMState, x, valid, *, prior, family, cfg, axes,
               k_max, feat_axis=None) -> DPMMState:
     """One full iteration; designed to run under shard_map."""
-    state = gibbs.sweep(state, x, valid, prior, comp, cfg.alpha, axes,
+    state = gibbs.sweep(state, x, valid, prior, family, cfg.alpha, axes,
                         use_pallas=cfg.use_pallas, feat_axis=feat_axis)
     state = jax.lax.cond(
         state.it >= cfg.burnout,
-        lambda s: _split_merge(s, x, valid, prior=prior, comp=comp, cfg=cfg,
-                               axes=axes, k_max=k_max, feat_axis=feat_axis),
+        lambda s: _split_merge(s, x, valid, prior=prior, family=family,
+                               cfg=cfg, axes=axes, k_max=k_max,
+                               feat_axis=feat_axis),
         lambda s: s,
         state)
     return state._replace(it=state.it + 1)
@@ -163,87 +167,89 @@ class DPMM:
     def __init__(self, cfg: DPMMConfig, mesh: Optional[Mesh] = None):
         self.cfg = cfg
         self.mesh = mesh
-        self.comp = component_module(cfg.component)
-
-    def _build_prior(self, x: np.ndarray):
-        cfg = self.cfg
-        if cfg.component == "gaussian":
-            mean = jnp.asarray(x.mean(axis=0), jnp.float32)
-            psi_diag = jnp.full((x.shape[1],), cfg.niw_psi, jnp.float32)
-            return niw.default_prior(
-                mean, psi_diag, cfg.niw_kappa, x.shape[1] + cfg.niw_nu_extra)
-        if cfg.component == "poisson":
-            return poisson.default_prior(x.shape[1], cfg.gamma_a0,
-                                         cfg.gamma_b0)
-        return multinomial.default_prior(x.shape[1], cfg.dir_alpha)
+        self.family: ComponentFamily = get_family(cfg.component)
 
     def fit(self, x: np.ndarray, iters: Optional[int] = None,
             verbose: bool = False) -> FitResult:
         cfg = self.cfg
+        family = self.family
         iters = iters if iters is not None else cfg.iters
         mesh = self.mesh if self.mesh is not None else make_data_mesh()
         axes = data_axes_of(mesh)
-        prior = self._build_prior(x)
+        prior = family.build_prior(cfg, x)
         n = x.shape[0]
+        # non-separable families keep features replicated even when
+        # shard_features is requested (family.feature_shardable contract)
+        want_feat_shard = cfg.shard_features and family.feature_shardable
         xs, valid = shard_points(mesh, np.asarray(x, np.float32),
-                                 cfg.shard_features)
-
-        feat_axis = ("model" if (cfg.shard_features
-                                 and "model" in mesh.axis_names
-                                 and cfg.component in ("multinomial",
-                                                       "poisson"))
+                                 want_feat_shard)
+        feat_axis = ("model" if (want_feat_shard
+                                 and "model" in mesh.axis_names)
                      else None)
-        kwargs = dict(prior=prior, comp=self.comp, cfg=cfg, axes=axes,
+        kwargs = dict(prior=prior, family=family, cfg=cfg, axes=axes,
                       k_max=cfg.k_max, feat_axis=feat_axis)
         shard_spec = P(axes)
         x_in_spec = P(axes, feat_axis)
         rep = P()
-        state_specs = DPMMState(
-            key=rep, it=rep, active=rep, logweights=rep, sub_logweights=rep,
-            stuck=rep,
-            params=jax.tree.map(lambda _: rep, _param_struct(self.comp)),
-            subparams=jax.tree.map(lambda _: rep, _param_struct(self.comp)),
-            stats=jax.tree.map(lambda _: rep, _stats_struct(self.comp)),
-            substats=jax.tree.map(lambda _: rep, _stats_struct(self.comp)),
-            labels=shard_spec, sublabels=shard_spec)
+        state_specs = state_partition_specs(family, shard_spec)
 
-        init = jax.jit(jax.shard_map(
+        init = jax.jit(shard_map(
             functools.partial(_init_local, **kwargs), mesh=mesh,
-            in_specs=(rep, x_in_spec, shard_spec), out_specs=state_specs,
-            check_vma=False))
-        step = jax.jit(jax.shard_map(
-            functools.partial(dpmm_step, **kwargs), mesh=mesh,
-            in_specs=(state_specs, x_in_spec, shard_spec),
-            out_specs=state_specs, check_vma=False))
+            in_specs=(rep, x_in_spec, shard_spec), out_specs=state_specs))
+
+        def make_chunk(length: int):
+            """`length` iterations in one jitted call, history on device.
+
+            The scan carries the full sampler state; per-step host-visible
+            output is only the O(1) ``summarize()`` scalars. State buffers
+            are donated, so chunk i+1 reuses chunk i's memory.
+            """
+            def run(state, x, valid):
+                def body(s, _):
+                    s = dpmm_step(s, x, valid, **kwargs)
+                    return s, s.summarize()
+                return jax.lax.scan(body, state, None, length=length)
+            hist_specs = {k: rep for k in _HIST_KEYS}
+            return jax.jit(
+                shard_map(run, mesh=mesh,
+                          in_specs=(state_specs, x_in_spec, shard_spec),
+                          out_specs=(state_specs, hist_specs)),
+                donate_argnums=(0,))
 
         key = jax.random.key(cfg.seed)
         state = init(key, xs, valid)
-        hist_k, times = [], []
-        for it in range(iters):
+
+        chunk = max(1, cfg.log_every)
+        lengths = [chunk] * (iters // chunk)
+        if iters % chunk:
+            lengths.append(iters % chunk)   # one shorter trailing chunk
+        chunk_fns: Dict[int, Any] = {}
+        hist_chunks: List[Dict[str, np.ndarray]] = []
+        times: List[float] = []
+        done = 0
+        for length in lengths:
+            if length not in chunk_fns:
+                # AOT-compile outside the timed region so jit compile time
+                # (seconds) never contaminates iter_times_s / benchmarks.
+                # At most two compiles per fit: `log_every` + one trailing
+                # remainder length.
+                chunk_fns[length] = make_chunk(length).lower(
+                    state, xs, valid).compile()
             t0 = time.perf_counter()
-            state = step(state, xs, valid)
-            k_now = int(state.k_hat)  # blocks; also per-iter timing
-            times.append(time.perf_counter() - t0)
-            hist_k.append(k_now)
-            if verbose and (it % 10 == 0 or it == iters - 1):
-                print(f"iter {it:4d}  K={k_now}  {times[-1]*1e3:.1f} ms")
+            state, hist = chunk_fns[length](state, xs, valid)
+            hist = jax.device_get(hist)       # the one host sync per chunk
+            dt = time.perf_counter() - t0
+            times.extend([dt / length] * length)
+            hist_chunks.append(hist)
+            done += length
+            if verbose:
+                print(f"iter {done:4d}  K={int(hist['k'][-1])}  "
+                      f"{dt / length * 1e3:.1f} ms/iter")
+        history = {
+            k: (np.concatenate([h[k] for h in hist_chunks])
+                if hist_chunks else np.zeros((0,)))
+            for k in _HIST_KEYS}
         labels = np.asarray(jax.device_get(state.labels))[:n]
         return FitResult(
             state=state, labels=labels, k=int(state.k_hat),
-            history={"k": np.array(hist_k)}, iter_times_s=times)
-
-
-def _param_struct(comp):
-    if comp is niw:
-        return niw.GaussParams(mu=0, chol_prec=0, logdet_prec=0)
-    if comp is poisson:
-        return poisson.PoisParams(log_rate=0)
-    return multinomial.MultParams(logtheta=0)
-
-
-def _stats_struct(comp):
-    if comp is niw:
-        return niw.GaussStats(n=0, sx=0, sxx=0)
-    if comp is poisson:
-        return poisson.PoisStats(n=0, sx=0)
-    return multinomial.MultStats(n=0, counts=0)
+            history=history, iter_times_s=times)

@@ -37,24 +37,25 @@ class MergeDecision(NamedTuple):
     new_active: jax.Array   # (K,) bool
 
 
-def log_hastings_split(prior, comp, stats, substats, alpha: float):
+def log_hastings_split(prior, family, stats, substats, alpha: float):
     """log H_split per cluster (paper eq. 12 / 20)."""
     n = stats.n
     nl = substats.n[..., 0]
     nr = substats.n[..., 1]
-    logm_c = comp.log_marginal(prior, stats)
-    logm_sub = comp.log_marginal(prior, substats)
+    logm_c = family.log_marginal(prior, stats)
+    logm_sub = family.log_marginal(prior, substats)
     return (jnp.log(alpha)
             + gammaln(jnp.maximum(nl, 1e-6)) + logm_sub[..., 0]
             + gammaln(jnp.maximum(nr, 1e-6)) + logm_sub[..., 1]
             - gammaln(jnp.maximum(n, 1e-6)) - logm_c)
 
 
-def propose_splits(key: jax.Array, state: DPMMState, prior, comp,
+def propose_splits(key: jax.Array, state: DPMMState, prior, family,
                    alpha: float) -> SplitDecision:
     k_max = state.active.shape[0]
     k_h, = jax.random.split(key, 1)
-    log_h = log_hastings_split(prior, comp, state.stats, state.substats, alpha)
+    log_h = log_hastings_split(prior, family, state.stats, state.substats,
+                               alpha)
     nl = state.substats.n[:, 0]
     nr = state.substats.n[:, 1]
     valid = state.active & (nl >= 1.0) & (nr >= 1.0)
@@ -77,7 +78,7 @@ def propose_splits(key: jax.Array, state: DPMMState, prior, comp,
                          new_active=new_active)
 
 
-def apply_split_to_stats(comp, stats, substats, dec: SplitDecision):
+def apply_split_to_stats(family, stats, substats, dec: SplitDecision):
     """stats[k] <- substats[k,l]; stats[dest] <- substats[k,r] (analytic)."""
     def upd(full, sub):
         # sub: (K, 2, ...) ; full: (K, ...)
@@ -97,15 +98,14 @@ def apply_split_to_stats(comp, stats, substats, dec: SplitDecision):
     return jax.tree.map(upd, stats, substats)
 
 
-def log_hastings_merge(prior, comp, stats_a, stats_b, comp_add,
-                       alpha: float):
+def log_hastings_merge(prior, family, stats_a, stats_b, alpha: float):
     """log H_merge for pairs (paper eq. 21)."""
     n1 = stats_a.n
     n2 = stats_b.n
-    merged = comp_add(stats_a, stats_b)
-    logm_1 = comp.log_marginal(prior, stats_a)
-    logm_2 = comp.log_marginal(prior, stats_b)
-    logm_m = comp.log_marginal(prior, merged)
+    merged = family.add_stats(stats_a, stats_b)
+    logm_1 = family.log_marginal(prior, stats_a)
+    logm_2 = family.log_marginal(prior, stats_b)
+    logm_m = family.log_marginal(prior, merged)
     a = jnp.asarray(alpha, n1.dtype)
     return (gammaln(jnp.maximum(n1 + n2, 1e-6)) - jnp.log(a)
             - gammaln(jnp.maximum(n1, 1e-6)) - gammaln(jnp.maximum(n2, 1e-6))
@@ -115,7 +115,7 @@ def log_hastings_merge(prior, comp, stats_a, stats_b, comp_add,
             - 2.0 * gammaln(a / 2))
 
 
-def _pair_log_h(prior, comp, comp_add, stats, alpha: float,
+def _pair_log_h(prior, family, stats, alpha: float,
                 first: jax.Array, second: jax.Array,
                 chunk: int = 256) -> jax.Array:
     """log H_merge for a list of (first, second) pairs, chunk-mapped so the
@@ -128,15 +128,15 @@ def _pair_log_h(prior, comp, comp_add, stats, alpha: float,
     def body(pair_idx):
         a = jax.tree.map(lambda s: s[pair_idx[0]], stats)
         b = jax.tree.map(lambda s: s[pair_idx[1]], stats)
-        return log_hastings_merge(prior, comp, a, b, comp_add, alpha)
+        return log_hastings_merge(prior, family, a, b, alpha)
 
     out = jax.lax.map(jax.vmap(body),
                       (fi.reshape(-1, chunk), se.reshape(-1, chunk)))
     return out.reshape(-1)[:n_pairs]
 
 
-def propose_merges(key: jax.Array, active: jax.Array, stats, prior, comp,
-                   comp_add, alpha: float) -> MergeDecision:
+def propose_merges(key: jax.Array, active: jax.Array, stats, prior, family,
+                   alpha: float) -> MergeDecision:
     """All-pairs merge proposals (paper §4.1: 'for all pairs k1, k2').
 
     Every unordered active pair draws its own MH acceptance (eq. 21); the
@@ -147,7 +147,7 @@ def propose_merges(key: jax.Array, active: jax.Array, stats, prior, comp,
     k_max = active.shape[0]
     iu, ju = jnp.triu_indices(k_max, k=1)            # (P,) all pairs i<j
     pair_valid = active[iu] & active[ju]
-    log_h = _pair_log_h(prior, comp, comp.add_stats, stats, alpha, iu, ju)
+    log_h = _pair_log_h(prior, family, stats, alpha, iu, ju)
     u = jax.random.uniform(key, iu.shape, minval=1e-12)
     accept = pair_valid & (jnp.log(u) < log_h)       # (P,)
 

@@ -31,12 +31,19 @@ class DPMMState(NamedTuple):
     def k_hat(self) -> jax.Array:
         return jnp.sum(self.active.astype(jnp.int32))
 
+    def summarize(self) -> dict:
+        """Replicated scalar diagnostics, collected on-device per step by
+        the chunked scan driver (core/sampler.py) so the host syncs once
+        per chunk instead of once per iteration."""
+        return {
+            "k": self.k_hat,
+            "max_cluster": jnp.max(
+                jnp.where(self.active, self.stats.n, 0.0)),
+            "min_cluster": jnp.min(
+                jnp.where(self.active, self.stats.n, jnp.inf)),
+        }
+
 
 def summarize(state: DPMMState) -> dict:
     """Replicated scalar diagnostics for logging / history scans."""
-    return {
-        "k": state.k_hat,
-        "max_cluster": jnp.max(jnp.where(state.active, state.stats.n, 0.0)),
-        "min_cluster": jnp.min(
-            jnp.where(state.active, state.stats.n, jnp.inf)),
-    }
+    return state.summarize()

@@ -58,9 +58,18 @@ def suffstats_pallas(x: jax.Array, resp: jax.Array, **kw
 
 
 def gauss_loglik(x: jax.Array, params, use_pallas: bool) -> jax.Array:
-    """Dispatcher used by the DPMM sampler: (N, K) log-likelihoods from a
-    batched GaussParams pytree (core/niw.py)."""
+    """Gaussian family fast path (core/family.py): (N, K) log-likelihoods
+    from a batched GaussParams pytree (core/niw.py)."""
     if use_pallas:
         return loglik_pallas(x, params.mu, params.chol_prec,
                              params.logdet_prec)
     return ref.loglik(x, params.mu, params.chol_prec, params.logdet_prec)
+
+
+def diag_gauss_loglik(x: jax.Array, params, use_pallas: bool) -> jax.Array:
+    """diag_gaussian family fast path: the quadratic expands into two
+    (N, d) x (d, K) matmuls served by the paper's auto-selected matmul
+    kernel (§4.2) — same hot-spot shape as the multinomial likelihood."""
+    from repro.core import diag_gaussian
+    return diag_gaussian.loglik(
+        x, params, matmul=matmul_auto if use_pallas else ref.matmul)

@@ -23,8 +23,9 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import DPMMConfig
-from repro.core import multinomial, niw
-from repro.core.sampler import _param_struct, _stats_struct, dpmm_step
+from repro.core.distributed import shard_map
+from repro.core.family import get_family, state_partition_specs
+from repro.core.sampler import dpmm_step
 from repro.core.state import DPMMState
 from repro.launch.mesh import make_production_mesh, mesh_chips
 from repro.roofline.analysis import analyze, save_json
@@ -56,63 +57,30 @@ def main(argv=None):
     n_local = -(-args.n // n_data_shards)
     n = n_local * n_data_shards
 
-    # --shard-features => multinomial component (the paper's 20newsgroups
+    # --shard-features => multinomial family (the paper's 20newsgroups
     # d=20,000 regime; Gaussian full-covariance is not feature-separable)
-    comp = multinomial if args.shard_features else niw
+    family = get_family("multinomial" if args.shard_features else "gaussian")
     feat_axis = "model" if args.shard_features else None
     cfg = DPMMConfig(alpha=10.0, k_max=args.k_max, burnout=0,
-                     component=("multinomial" if args.shard_features
-                                else "gaussian"),
+                     component=family.name,
                      shard_features=args.shard_features)
-    if comp is niw:
-        prior = niw.default_prior(jnp.zeros(args.d), jnp.ones(args.d), 1.0,
-                                  args.d + 3.0)
-    else:
-        prior = multinomial.default_prior(args.d, 1.0)
-    kwargs = dict(prior=prior, comp=comp, cfg=cfg, axes=axes,
+    prior = family.build_prior(cfg, jnp.zeros((1, args.d), jnp.float32))
+    kwargs = dict(prior=prior, family=family, cfg=cfg, axes=axes,
                   k_max=cfg.k_max, feat_axis=feat_axis)
 
     shard_spec = P(axes)
     x_spec = P(axes, feat_axis)
-    rep = P()
-    state_specs = DPMMState(
-        key=rep, it=rep, active=rep, logweights=rep, sub_logweights=rep,
-        stuck=rep,
-        params=jax.tree.map(lambda _: rep, _param_struct(comp)),
-        subparams=jax.tree.map(lambda _: rep, _param_struct(comp)),
-        stats=jax.tree.map(lambda _: rep, _stats_struct(comp)),
-        substats=jax.tree.map(lambda _: rep, _stats_struct(comp)),
-        labels=shard_spec, sublabels=shard_spec)
+    state_specs = state_partition_specs(family, shard_spec)
 
-    # abstract state/input (ShapeDtypeStruct only — no allocation)
+    # abstract state/input (ShapeDtypeStruct only — no allocation): the
+    # family's own empty_stats/expected_params give the per-family shapes
     k = args.k_max
     d = args.d
     f32 = jnp.float32
-    if comp is multinomial:
-        gp = lambda *shape: multinomial.MultParams(
-            logtheta=jax.ShapeDtypeStruct(shape + (d,), f32))
-        gs = lambda *shape: multinomial.MultStats(
-            n=jax.ShapeDtypeStruct(shape, f32),
-            counts=jax.ShapeDtypeStruct(shape + (d,), f32))
-        params_s, subparams_s = gp(k), gp(k, 2)
-        stats_s, substats_s = gs(k), gs(k, 2)
-    else:
-        params_s = niw.GaussParams(
-            mu=jax.ShapeDtypeStruct((k, d), f32),
-            chol_prec=jax.ShapeDtypeStruct((k, d, d), f32),
-            logdet_prec=jax.ShapeDtypeStruct((k,), f32))
-        subparams_s = niw.GaussParams(
-            mu=jax.ShapeDtypeStruct((k, 2, d), f32),
-            chol_prec=jax.ShapeDtypeStruct((k, 2, d, d), f32),
-            logdet_prec=jax.ShapeDtypeStruct((k, 2), f32))
-        stats_s = niw.GaussStats(
-            n=jax.ShapeDtypeStruct((k,), f32),
-            sx=jax.ShapeDtypeStruct((k, d), f32),
-            sxx=jax.ShapeDtypeStruct((k, d, d), f32))
-        substats_s = niw.GaussStats(
-            n=jax.ShapeDtypeStruct((k, 2), f32),
-            sx=jax.ShapeDtypeStruct((k, 2, d), f32),
-            sxx=jax.ShapeDtypeStruct((k, 2, d, d), f32))
+    stats_s = jax.eval_shape(lambda: family.empty_stats((k,), d))
+    substats_s = jax.eval_shape(lambda: family.empty_stats((k, 2), d))
+    params_s = jax.eval_shape(family.expected_params, prior, stats_s)
+    subparams_s = jax.eval_shape(family.expected_params, prior, substats_s)
     state = DPMMState(
         key=jax.eval_shape(lambda: jax.random.key(0)),
         it=jax.ShapeDtypeStruct((), jnp.int32),
@@ -129,10 +97,10 @@ def main(argv=None):
     xs = jax.ShapeDtypeStruct((n, d), f32)
     valid = jax.ShapeDtypeStruct((n,), f32)
 
-    step = jax.jit(jax.shard_map(
+    step = jax.jit(shard_map(
         functools.partial(dpmm_step, **kwargs), mesh=mesh,
         in_specs=(state_specs, x_spec, P(axes)),
-        out_specs=state_specs, check_vma=False))
+        out_specs=state_specs))
     with mesh:
         lowered = step.lower(state, xs, valid)
         compiled = lowered.compile()
@@ -140,13 +108,13 @@ def main(argv=None):
     # MODEL_FLOPS: the O(N K T) loglik/suffstat passes (T = d^2 Gaussian,
     # T = d multinomial — paper §4.4) + the O(K^2 d^3) all-pairs merge
     # marginals for Gaussian (they dominate when N/chips < K*d)
-    t_term = d * d if comp is niw else d
+    gaussian = family.name == "gaussian"
+    t_term = d * d if gaussian else d
     model_flops = (8.0 * n * args.k_max * t_term / chips
-                   + (args.k_max ** 2 / 2 * d ** 3 / 3 if comp is niw
+                   + (args.k_max ** 2 / 2 * d ** 3 / 3 if gaussian
                       else 0.0))
     r = analyze(compiled,
-                arch=("dpmm-multinomial" if comp is multinomial
-                      else "dpmm-gaussian"),
+                arch=f"dpmm-{family.name}",
                 shape=f"N{args.n}_d{d}_K{args.k_max}"
                       + ("_featshard" if args.shard_features else ""),
                 mesh_name=mesh_name, chips=chips, model_flops=model_flops)

@@ -19,8 +19,24 @@ import time
 import numpy as np
 
 from repro.configs import DPMMConfig
+from repro.core.family import available_families
 from repro.core.sampler import DPMM
-from repro.data.synthetic import generate_gmm, generate_mnmm
+from repro.data.synthetic import generate_gmm, generate_mnmm, generate_pmm
+
+# reference-CLI aliases on top of the registry's canonical names
+_PRIOR_ALIASES = {"gaussian": "gaussian", "multinomial": "multinomial",
+                  "poisson": "poisson", "diaggaussian": "diag_gaussian"}
+
+
+def _component_of(prior_type: str) -> str:
+    name = prior_type.lower()
+    name = _PRIOR_ALIASES.get(name, name)
+    if name not in available_families():
+        raise SystemExit(
+            f"unknown --prior-type {prior_type!r}; known: "
+            f"{', '.join(available_families())} (or reference-CLI aliases "
+            f"{', '.join(sorted(_PRIOR_ALIASES))})")
+    return name
 
 
 def main(argv=None):
@@ -32,7 +48,9 @@ def main(argv=None):
     ap.add_argument("--iters", type=int, default=100)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--prior-type", "--prior_type", default="Gaussian",
-                    choices=("Gaussian", "Multinomial"))
+                    help="component family: any registry name "
+                         "(gaussian, diag_gaussian, multinomial, poisson) "
+                         "or the reference CLI's capitalized aliases")
     ap.add_argument("--data-path", default="", help=".npy (N, d) input")
     ap.add_argument("--params-path", "--params_path", default="")
     ap.add_argument("--result-path", "--result_path", default="")
@@ -45,12 +63,12 @@ def main(argv=None):
         with open(args.params_path) as f:
             overrides = json.load(f)
     cfg = DPMMConfig(
-        component="multinomial" if args.prior_type == "Multinomial"
-        else "gaussian",
+        component=_component_of(args.prior_type),
         alpha=overrides.get("alpha", args.alpha),
         iters=overrides.get("iters", args.iters),
         k_max=overrides.get("k_max", 64),
         burnout=overrides.get("burnout", 15),
+        log_every=overrides.get("log_every", 10),
         use_pallas=args.use_pallas or overrides.get("use_pallas", False),
         seed=args.seed,
     )
@@ -58,8 +76,10 @@ def main(argv=None):
     if args.data_path:
         x = np.load(args.data_path)
         gt = None
-    elif cfg.component == "gaussian":
+    elif cfg.component in ("gaussian", "diag_gaussian"):
         x, gt = generate_gmm(args.n, args.d, args.k, seed=args.seed)
+    elif cfg.component == "poisson":
+        x, gt = generate_pmm(args.n, args.d, args.k, seed=args.seed)
     else:
         x, gt = generate_mnmm(args.n, args.d, args.k, seed=args.seed)
 

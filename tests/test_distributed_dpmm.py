@@ -51,37 +51,28 @@ def test_only_suffstats_cross_shards(data):
     model = DPMM(cfg, mesh=mesh)
 
     # reproduce the fit()'s compiled step to inspect its HLO
-    from repro.core.sampler import _param_struct, _stats_struct, dpmm_step
-    from repro.core.distributed import data_axes_of, shard_points
-    from repro.core.state import DPMMState
+    from repro.core.sampler import _init_local, dpmm_step
+    from repro.core.distributed import data_axes_of, shard_map, shard_points
+    from repro.core.family import state_partition_specs
     from jax.sharding import PartitionSpec as P
 
     axes = data_axes_of(mesh)
-    prior = model._build_prior(x)
+    prior = model.family.build_prior(cfg, x)
     xs, valid = shard_points(mesh, np.asarray(x, np.float32), False)
-    kwargs = dict(prior=prior, comp=model.comp, cfg=cfg, axes=axes,
+    kwargs = dict(prior=prior, family=model.family, cfg=cfg, axes=axes,
                   k_max=cfg.k_max)
     shard_spec = P(axes)
     rep = P()
-    state_specs = DPMMState(
-        key=rep, it=rep, active=rep, logweights=rep, sub_logweights=rep,
-        stuck=rep,
-        params=jax.tree.map(lambda _: rep, _param_struct(model.comp)),
-        subparams=jax.tree.map(lambda _: rep, _param_struct(model.comp)),
-        stats=jax.tree.map(lambda _: rep, _stats_struct(model.comp)),
-        substats=jax.tree.map(lambda _: rep, _stats_struct(model.comp)),
-        labels=shard_spec, sublabels=shard_spec)
-    init = jax.jit(jax.shard_map(
-        functools.partial(
-            __import__("repro.core.sampler", fromlist=["_init_local"])
-            ._init_local, **kwargs),
+    state_specs = state_partition_specs(model.family, shard_spec)
+    init = jax.jit(shard_map(
+        functools.partial(_init_local, **kwargs),
         mesh=mesh, in_specs=(rep, shard_spec, shard_spec),
-        out_specs=state_specs, check_vma=False))
+        out_specs=state_specs))
     state = init(jax.random.key(0), xs, valid)
-    step = jax.jit(jax.shard_map(
+    step = jax.jit(shard_map(
         functools.partial(dpmm_step, **kwargs), mesh=mesh,
         in_specs=(state_specs, shard_spec, shard_spec),
-        out_specs=state_specs, check_vma=False))
+        out_specs=state_specs))
     hlo = step.lower(state, xs, valid).compile().as_text()
 
     n_local = x.shape[0] // jax.device_count()
@@ -163,3 +154,40 @@ def test_feature_sharded_multinomial_identical():
     r_fs = DPMM(cfg_fs, mesh=mesh22).fit(x)
     assert r_plain.k == r_fs.k
     assert np.array_equal(r_plain.labels, r_fs.labels)
+
+
+def test_feature_sharded_diag_gaussian_identical():
+    """diag_gaussian is feature-separable (per-feature NIG), so it gets the
+    high-d sharded path the full-covariance Gaussian can't have — the
+    registry's feature_shardable contract in action."""
+    from jax.sharding import Mesh
+
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    x, gt = generate_gmm(1024, 16, 4, seed=3, sep=8.0)
+    cfg = DPMMConfig(component="diag_gaussian", alpha=10.0, iters=25,
+                     k_max=16, burnout=5)
+    r_plain = DPMM(cfg).fit(x)
+    mesh22 = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                  ("data", "model"))
+    cfg_fs = DPMMConfig(component="diag_gaussian", alpha=10.0, iters=25,
+                        k_max=16, burnout=5, shard_features=True)
+    r_fs = DPMM(cfg_fs, mesh=mesh22).fit(x)
+    assert r_plain.k == r_fs.k
+    assert np.array_equal(r_plain.labels, r_fs.labels)
+
+
+def test_gaussian_shard_features_falls_back_to_replicated():
+    """shard_features with a non-separable family must not silently shard:
+    fit() keeps the replicated-feature path and still works."""
+    from jax.sharding import Mesh
+
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    x, gt = generate_gmm(512, 4, 3, seed=4, sep=10.0)
+    mesh22 = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                  ("data", "model"))
+    cfg = DPMMConfig(alpha=10.0, iters=10, k_max=8, burnout=3,
+                     shard_features=True)
+    r = DPMM(cfg, mesh=mesh22).fit(x)
+    assert r.k >= 1

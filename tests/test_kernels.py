@@ -4,6 +4,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
+
+# property tests need hypothesis (requirements-dev.txt)
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ops, ref

@@ -2,6 +2,9 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+# property tests need hypothesis (requirements-dev.txt)
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.metrics import ari, nmi
