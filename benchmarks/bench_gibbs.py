@@ -8,10 +8,21 @@ the speed (Figs 4, 6) and accuracy (Figs 5, 7) tables come from one run.
 chunked scan driver at the default `log_every` AND at `log_every=1`
 (per-iteration host sync — the pre-scan-driver behaviour), so driver perf
 regressions and host-sync overhead are both visible in the log.
+
+`--hotpath` starts the perf trajectory for the fused assignment +
+label-indexed suff-stat sweep: steady-state ms/iter and peak device memory
+(via `jax.local_devices()[0].memory_stats()` where the backend reports it)
+for the jnp reference path vs the fused Pallas path, persisted to
+BENCH_gibbs.json so CI can track the numbers per PR. On non-TPU backends
+the fused leg is skipped by default (interpret-mode Pallas executes the
+kernel body in Python — not a performance measurement); `--force-fused`
+runs it anyway for plumbing checks.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import platform
 
 import numpy as np
 
@@ -79,15 +90,140 @@ def run_smoke(iters: int = 30) -> float:
     return ms_chunked
 
 
+HOTPATH_N, HOTPATH_D, HOTPATH_K, HOTPATH_KMAX = 50_000, 16, 8, 32
+_ROW_MARK = "HOTPATH_ROW "
+
+
+def _hbm_intermediate_floats(n: int, k: int, d: int) -> dict:
+    """Per-sweep HBM intermediates of the assignment + stats path (floats).
+
+    Dominant terms, including the (N, *, d) pairwise-contraction
+    intermediates XLA materializes for the three-operand sxx einsums:
+    seed: (N,K) logits + Gumbel + (N,K,2) all-K sub-loglik + (N,K) resp +
+    (N,K,2) subresp + ~3NKd einsum temporaries. reference (this PR):
+    (N,K) logits (+Gumbel fused by XLA); the Gaussian additionally pays
+    one (N,2K) one-hot and its ~2NKd sxx einsum temporary, while the
+    linear families segment-sum with no dense responsibilities at all.
+    fused: none — labels and stats stream out of VMEM tiles.
+    """
+    return {"seed": 7 * n * k + 3 * n * k * d,
+            "reference_gaussian": n * k + 2 * n * k * d + 2 * n * k,
+            "reference_linear": n * k,
+            "fused": 0}
+
+
+def _hotpath_leg(use_pallas: bool, iters: int) -> dict:
+    """One measured leg; run in its OWN process so memory_stats()'s
+    process-lifetime peak_bytes_in_use is per-path, not a running max
+    over whichever leg happened to run first."""
+    import jax
+
+    n, d, k = HOTPATH_N, HOTPATH_D, HOTPATH_K
+    x, gt = generate_gmm(n, d, k, seed=0, sep=8.0)
+
+    def fit():
+        cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=HOTPATH_KMAX,
+                         burnout=5, use_pallas=use_pallas)
+        return DPMM(cfg).fit(x)
+
+    fit()                                # process warm-up, discarded...
+    mem0 = jax.local_devices()[0].memory_stats() or {}
+    base = mem0.get("peak_bytes_in_use")  # ...but it sets the same peak
+    r = fit()
+    mem = jax.local_devices()[0].memory_stats() or {}
+    row = {"path": "fused" if use_pallas else "reference",
+           "backend": jax.default_backend(),
+           "ms_per_iter": float(np.mean(r.iter_times_s[1:]) * 1e3),
+           "K_found": r.k, "nmi": round(r.nmi(gt), 4),
+           "peak_bytes_in_use": mem.get("peak_bytes_in_use"),
+           "warmup_peak_bytes_in_use": base}
+    print(_ROW_MARK + json.dumps(row), flush=True)
+    return row
+
+
+def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
+                force_fused: bool = False) -> dict:
+    """Reference vs fused steady-state ms/iter + peak memory -> JSON.
+
+    Each path runs in a subprocess (see _hotpath_leg) so its peak device
+    memory is isolated AND the parent never initializes JAX — on TPU the
+    parent grabbing the device would force every child leg onto CPU. The
+    backend is whatever the reference leg reports.
+    """
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(root, "src"), root] +
+        ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
+
+    def leg(path_name: str) -> dict:
+        proc = subprocess.run(
+            [sys.executable, os.path.abspath(__file__),
+             "--_hotpath-leg", path_name, "--iters", str(iters)],
+            capture_output=True, text=True, env=env, cwd=root)
+        for line in proc.stdout.splitlines():
+            if line.startswith(_ROW_MARK):
+                row = json.loads(line[len(_ROW_MARK):])
+                print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
+                      flush=True)
+                return row
+        raise RuntimeError(
+            f"hotpath leg {path_name!r} produced no row:\n"
+            f"{proc.stdout[-1000:]}\n{proc.stderr[-2000:]}")
+
+    rows = [leg("reference")]
+    backend = rows[0].get("backend", "unknown")
+    if backend == "tpu" or force_fused:
+        rows.append(leg("fused"))
+    else:
+        rows.append({"path": "fused", "skipped":
+                     f"interpret-mode Pallas on backend={backend!r} is "
+                     "Python-speed; measure on TPU (or --force-fused)"})
+    payload = {
+        "bench": "gibbs_hotpath",
+        "backend": backend,
+        "host": platform.platform(),
+        "config": {"component": "gaussian", "N": HOTPATH_N, "d": HOTPATH_D,
+                   "K_true": HOTPATH_K, "k_max": HOTPATH_KMAX,
+                   "iters": iters},
+        "hbm_intermediate_floats_per_sweep": _hbm_intermediate_floats(
+            HOTPATH_N, HOTPATH_KMAX, HOTPATH_D),
+        "results": rows,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"[gibbs_hotpath] wrote {out_path}")
+    return payload
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
                     help="seconds-scale CI slice instead of the paper grid")
+    ap.add_argument("--hotpath", action="store_true",
+                    help="reference-vs-fused sweep hot path -> "
+                         "BENCH_gibbs.json (perf trajectory)")
+    ap.add_argument("--force-fused", action="store_true",
+                    help="run the fused leg of --hotpath even off-TPU "
+                         "(interpret mode; plumbing check, not perf)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--iters", type=int, default=None)
     ap.add_argument("--out-dir", default="experiments")
+    ap.add_argument("--out-json", default="BENCH_gibbs.json")
+    ap.add_argument("--_hotpath-leg", dest="hotpath_leg", default=None,
+                    choices=["reference", "fused"], help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
-    if args.smoke:
+    if args.hotpath_leg:
+        _hotpath_leg(args.hotpath_leg == "fused", args.iters or 30)
+    elif args.hotpath:
+        run_hotpath(args.iters or 30, out_path=args.out_json,
+                    force_fused=args.force_fused)
+    elif args.smoke:
         run_smoke(args.iters or 30)
     else:
         run(full=args.full, iters=args.iters or 40, out_dir=args.out_dir)

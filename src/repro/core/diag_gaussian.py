@@ -94,6 +94,32 @@ def add_stats(a: DiagStats, b: DiagStats) -> DiagStats:
     return DiagStats(a.n + b.n, a.sx + b.sx, a.sxx + b.sxx)
 
 
+def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
+                      sublabels: jax.Array, k_max: int) -> DiagStats:
+    """(k_max, 2)-batched sub-cluster stats via segment-sum on the stacked
+    [x, x^2] moments (no dense responsibilities; core/labelstats.py —
+    same feature stacking as the family's Pallas fast path)."""
+    from repro.core.labelstats import moments_from_labels
+    d = x.shape[-1]
+    n2, sf2 = moments_from_labels(jnp.concatenate([x, x * x], axis=-1),
+                                  valid, labels, sublabels, k_max)
+    return DiagStats(n=n2, sx=sf2[..., :d], sxx=sf2[..., d:])
+
+
+def assign_pack(x: jax.Array, params: DiagParams):
+    """Linear-likelihood packing for the fused assignment kernels:
+    expanding (x - mu)^2 turns the quadratic into
+    [x, x^2] @ [prec*mu, -prec/2]_b + const_b (cf. ``loglik``)."""
+    prec = jnp.exp(params.log_prec)
+    feats = jnp.concatenate([x, x * x], axis=-1)
+    w = jnp.concatenate([prec * params.mu, -0.5 * prec], axis=-1)
+    d = x.shape[-1]
+    const = (0.5 * jnp.sum(params.log_prec, axis=-1)
+             - 0.5 * jnp.sum(prec * params.mu * params.mu, axis=-1)
+             - 0.5 * d * LOG_2PI)
+    return feats, w, const
+
+
 def posterior(prior: NIGPrior, stats: DiagStats):
     """NIG posterior hyper-parameters, per feature (the d=1 NIW update)."""
     kappa_n = prior.kappa + stats.n                          # (*B,)

@@ -11,6 +11,14 @@ everything the skeleton needs from an observation model:
  - pytree *templates* (``param_struct`` / ``stats_struct``) used to build
    replicated PartitionSpecs without knowing field names,
  - an optional Pallas/accelerated ``loglik_fast`` path (paper §4.2),
+ - the fused sweep hot path (paper §4.1e/§4.4 "Kernel #1/#2"): ``assign``
+   (step e), ``sub_assign`` (step f, own-cluster only) and
+   ``stats_from_labels`` dispatch between streaming Pallas kernels
+   (``assign_fast`` / ``assign_pack`` / ``sub_assign_fast`` /
+   ``labels_stats_fast``, kernels/assign.py + kernels/suffstats.py) and
+   jnp reference fallbacks (``labels_stats_ref``, chunked own-cluster
+   gather) — neither path materializes an (N, K, 2) sub-cluster loglik or
+   a dense (N, K, 2) responsibility tensor,
  - the feature-sharding contract (DESIGN §10): ``feature_shardable``
    families declare which stats fields carry a feature axis
    (``feature_stat_fields``, all-gathered after the data-axis psum) and how
@@ -30,6 +38,7 @@ Registering a new family::
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -38,6 +47,10 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import diag_gaussian, multinomial, niw, poisson
 from repro.core.state import DPMMState
+from repro.kernels import prng
+# the inactive-cluster assignment mask — single-sourced from the fused
+# kernels so reference and in-kernel masking can never drift
+from repro.kernels.assign import NEG_INF  # noqa: F401  (re-exported)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,6 +69,21 @@ class ComponentFamily:
     sample_posterior: Callable[[jax.Array, Any, Any], Any]
     expected_params: Callable[[Any, Any], Any]
     loglik_ref: Callable[[jax.Array, Any], jax.Array]  # (x, params) -> (N,*B)
+    # label-indexed suff-stats: (x, valid, labels, sublabels, k_max) ->
+    # (k_max, 2)-batched sub-cluster stats (cluster stats are the sub fold,
+    # core/gibbs.compute_stats). ``_ref`` is the jnp path (segment-sum /
+    # one-hot einsum); ``_fast`` the Pallas kernel, returning None when the
+    # problem falls outside the kernel's VMEM envelope.
+    labels_stats_ref: Callable[..., Any] = None
+    labels_stats_fast: Optional[Callable[..., Any]] = None
+    # fused assignment (steps e/f). ``assign_pack`` expresses a linear
+    # likelihood loglik(x)_b = feats @ w_b + const_b so one shared kernel
+    # serves every such family; non-linear families provide dedicated
+    # ``assign_fast`` / ``sub_assign_fast`` kernels instead. All return
+    # None outside their guard so the caller can fall back.
+    assign_pack: Optional[Callable[[jax.Array, Any], Tuple]] = None
+    assign_fast: Optional[Callable[..., Optional[jax.Array]]] = None
+    sub_assign_fast: Optional[Callable[..., Optional[jax.Array]]] = None
     # optional accelerated loglik (Pallas on TPU; paper §4.2 'Kernel #1/#2')
     loglik_fast: Optional[Callable[[jax.Array, Any], jax.Array]] = None
     # feature-sharding contract (DESIGN §10); shardable families' loglik and
@@ -72,6 +100,144 @@ class ComponentFamily:
         if use_pallas and self.loglik_fast is not None:
             return self.loglik_fast(x, params)
         return self.loglik_ref(x, params)
+
+    # -- fused sweep hot path (steps e/f + suff-stats) --------------------
+    def assign(self, x: jax.Array, params: Any, logw: jax.Array,
+               active: jax.Array, gidx: jax.Array, key_data: jax.Array,
+               use_pallas: bool = False, feat_axis=None) -> jax.Array:
+        """Step (e): z_i = argmax_k [loglik + log pi_k + Gumbel] -> (N,).
+
+        The Gumbel noise is the counter-based Threefry draw of
+        kernels/prng.py keyed on (key, global index, cluster) — identical
+        bits in the fused kernel and in this reference path, so both
+        sample the same chain. With ``use_pallas`` the streaming kernel
+        (kernels/assign.py) runs the whole step in VMEM tiles and the
+        (N, K) logits/Gumbel matrices never exist in HBM; otherwise this
+        reference materializes the (N, K) logits once (and nothing else).
+        """
+        if use_pallas and feat_axis is None:
+            fused = self._assign_fused(x, params, logw, active, gidx,
+                                       key_data)
+            if fused is not None:
+                return fused
+        ll = (self.loglik_sharded(x, params, feat_axis)
+              if feat_axis is not None
+              else self.loglik(x, params, use_pallas=use_pallas))
+        logits = ll + logw[None, :]
+        logits = jnp.where(active[None, :], logits, NEG_INF)
+        cid = jnp.arange(logw.shape[0], dtype=jnp.uint32)
+        logits = logits + prng.gumbel(key_data, gidx[:, None], cid[None, :])
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    def _assign_fused(self, x, params, logw, active, gidx, key_data):
+        from repro.kernels import ops
+        if self.assign_fast is not None:
+            return self.assign_fast(x, params, logw, active, gidx, key_data)
+        if self.assign_pack is not None:
+            feats, w, const = self.assign_pack(x, params)
+            return ops.assign_linear_pallas(feats, w, const, logw, active,
+                                            gidx, key_data)
+        return None
+
+    def sub_assign(self, x: jax.Array, subparams: Any, sublogw: jax.Array,
+                   labels: jax.Array, gidx: jax.Array, key_data: jax.Array,
+                   use_pallas: bool = False, feat_axis=None,
+                   chunk: Optional[int] = None) -> jax.Array:
+        """Step (f): sub-label under the point's OWN cluster only -> (N,).
+
+        Evaluates the sub-cluster log-likelihood for 2 sub-clusters per
+        point instead of all 2K — the O(N K T) -> O(N T) cut. The fused
+        kernels gather the (K, 2, ...) sub-params in VMEM; this reference
+        gathers them per ``chunk`` points under ``lax.map`` so the largest
+        jnp intermediate is (chunk, 2, ...) — never (N, K, 2). ``chunk``
+        defaults to a memory-budgeted size (all N at once when the gathered
+        params are small — e.g. any linear family or a low-d Gaussian — so
+        the scan and its per-step overhead disappear entirely).
+        """
+        if use_pallas and feat_axis is None:
+            fused = self._sub_assign_fused(x, subparams, sublogw, labels,
+                                           gidx, key_data)
+            if fused is not None:
+                return fused
+        own = self._own_subloglik(x, subparams, labels, feat_axis, chunk)
+        t = own + sublogw[labels]
+        cid = jnp.arange(2, dtype=jnp.uint32)
+        t = t + prng.gumbel(key_data, gidx[:, None], cid[None, :])
+        return jnp.argmax(t, axis=-1).astype(jnp.int32)
+
+    def _sub_assign_fused(self, x, subparams, sublogw, labels, gidx,
+                          key_data):
+        from repro.kernels import ops
+        if self.sub_assign_fast is not None:
+            return self.sub_assign_fast(x, subparams, sublogw, labels,
+                                        gidx, key_data)
+        if self.assign_pack is not None:
+            feats, w, const = self.assign_pack(x, subparams)
+            return ops.sub_assign_linear_pallas(feats, w, const, sublogw,
+                                                labels, gidx, key_data)
+        return None
+
+    # cap on the gathered (chunk, 2, ...) sub-params intermediate (floats):
+    # 32M floats = 128 MiB — far below the dense (N, K, 2, ...) it replaces
+    _SUB_GATHER_BUDGET = 32 * 1024 * 1024
+
+    def _own_subloglik(self, x, subparams, labels, feat_axis,
+                       chunk: Optional[int]) -> jax.Array:
+        """(N, 2) own-cluster sub-loglik via chunked gather (jnp path)."""
+        n = x.shape[0]
+        if chunk is None:
+            per_point = sum(math.prod(leaf.shape[1:])
+                            for leaf in jax.tree_util.tree_leaves(subparams))
+            chunk = max(512, self._SUB_GATHER_BUDGET // max(per_point, 1))
+        chunk = min(chunk, n)
+        pad = (-n) % chunk
+        xp = jnp.pad(x, ((0, pad), (0, 0)))
+        lp = jnp.pad(labels, (0, pad))
+        if feat_axis is not None:
+            # x is a feature slice; sub-params are full-d replicated —
+            # slice the gathered params to the local block and psum the
+            # (N, 2) partials once at the end (O(N) wire bytes, not O(N K))
+            blk = jax.lax.axis_index(feat_axis) * x.shape[1]
+
+        def body(args):
+            xc, lc = args
+            pc = jax.tree.map(lambda p: p[lc], subparams)   # (chunk, 2, ..)
+            if feat_axis is not None:
+                pc = self.slice_params(pc, blk, x.shape[1])
+            one = lambda xi, pi: self.loglik_ref(xi[None], pi)[0]
+            return jax.vmap(one)(xc, pc)                     # (chunk, 2)
+
+        if xp.shape[0] == chunk:        # one chunk: no scan wrapper at all
+            out = body((xp, lp))[:n]
+        else:
+            out = jax.lax.map(body, (xp.reshape(-1, chunk, x.shape[1]),
+                                     lp.reshape(-1, chunk)))
+            out = out.reshape(-1, 2)[:n]
+        if feat_axis is not None:
+            out = jax.lax.psum(out, feat_axis)
+        return out
+
+    def stats_from_labels(self, x: jax.Array, valid: jax.Array,
+                          labels: jax.Array, sublabels: jax.Array,
+                          k_max: int, use_pallas: bool = False) -> Any:
+        """(k_max, 2)-batched sub-cluster stats straight from int labels;
+        cluster stats are the fold over the sub axis (gibbs.compute_stats).
+        No dense (N, K, 2) responsibility tensor on either path."""
+        if use_pallas and self.labels_stats_fast is not None:
+            out = self.labels_stats_fast(x, valid, labels, sublabels, k_max)
+            if out is not None:
+                return out
+        if self.labels_stats_ref is not None:
+            return self.labels_stats_ref(x, valid, labels, sublabels, k_max)
+        # back-compat for user families registered without a label-indexed
+        # path: dense (N, 2K) one-hot through stats_from_points (all four
+        # built-ins provide labels_stats_ref and never take this branch)
+        seg = labels * 2 + sublabels
+        r2 = (jax.nn.one_hot(seg, 2 * k_max, dtype=x.dtype)
+              * valid.astype(x.dtype)[:, None])
+        flat = self.stats_from_points(x, r2)
+        return jax.tree.map(
+            lambda a: a.reshape((k_max, 2) + a.shape[1:]), flat)
 
     def loglik_sharded(self, x: jax.Array, params: Any,
                        feat_axis: str) -> jax.Array:
@@ -164,6 +330,9 @@ def state_partition_specs(family: ComponentFamily,
 # Built-in families
 # ---------------------------------------------------------------------------
 def _module_family(mod, **kw) -> ComponentFamily:
+    kw.setdefault("labels_stats_ref", mod.stats_from_labels)
+    if hasattr(mod, "assign_pack"):
+        kw.setdefault("assign_pack", mod.assign_pack)
     return ComponentFamily(
         param_struct=mod.param_struct, stats_struct=mod.stats_struct,
         build_prior=mod.build_prior, empty_stats=mod.empty_stats,
@@ -192,12 +361,65 @@ def _diag_gauss_loglik_fast(x: jax.Array, params) -> jax.Array:
     return ops.diag_gauss_loglik(x, params, True)
 
 
+def _gauss_assign_fast(x, params, logw, active, gidx, key_data):
+    if params.mu.ndim != 2:
+        return None
+    from repro.kernels import ops
+    return ops.assign_gauss_pallas(x, params.mu, params.chol_prec,
+                                   params.logdet_prec, logw, active, gidx,
+                                   key_data)
+
+
+def _gauss_sub_assign_fast(x, subparams, sublogw, labels, gidx, key_data):
+    if subparams.mu.ndim != 3:                        # expect (K, 2, d)
+        return None
+    from repro.kernels import ops
+    return ops.sub_assign_gauss_pallas(x, subparams.mu, subparams.chol_prec,
+                                       subparams.logdet_prec, sublogw,
+                                       labels, gidx, key_data)
+
+
+def _gauss_labels_stats_fast(x, valid, labels, sublabels, k_max):
+    from repro.kernels import ops
+    out = ops.suffstats_labels_pallas(x, labels, sublabels, valid, k_max)
+    return None if out is None else niw.GaussStats(*out)
+
+
+def _moments_labels_fast(feats, valid, labels, sublabels, k_max):
+    from repro.kernels import ops
+    return ops.moments_labels_pallas(feats, labels, sublabels, valid, k_max)
+
+
+def _mult_labels_stats_fast(x, valid, labels, sublabels, k_max):
+    out = _moments_labels_fast(x, valid, labels, sublabels, k_max)
+    return None if out is None else multinomial.MultStats(n=out[0],
+                                                          counts=out[1])
+
+
+def _pois_labels_stats_fast(x, valid, labels, sublabels, k_max):
+    out = _moments_labels_fast(x, valid, labels, sublabels, k_max)
+    return None if out is None else poisson.PoisStats(n=out[0], sx=out[1])
+
+
+def _diag_labels_stats_fast(x, valid, labels, sublabels, k_max):
+    out = _moments_labels_fast(jnp.concatenate([x, x * x], axis=-1),
+                               valid, labels, sublabels, k_max)
+    if out is None:
+        return None
+    d = x.shape[-1]
+    return diag_gaussian.DiagStats(n=out[0], sx=out[1][..., :d],
+                                   sxx=out[1][..., d:])
+
+
 GAUSSIAN = register_family(_module_family(
     niw, name="gaussian", loglik_fast=_gauss_loglik_fast,
+    assign_fast=_gauss_assign_fast, sub_assign_fast=_gauss_sub_assign_fast,
+    labels_stats_fast=_gauss_labels_stats_fast,
     feature_shardable=False, mean_field="sx"))
 
 MULTINOMIAL = register_family(_module_family(
     multinomial, name="multinomial",
+    labels_stats_fast=_mult_labels_stats_fast,
     feature_shardable=True, feature_stat_fields=("counts",),
     slice_params=lambda p, s, n: multinomial.MultParams(
         logtheta=_slice_last(p.logtheta, s, n)),
@@ -205,6 +427,7 @@ MULTINOMIAL = register_family(_module_family(
 
 POISSON = register_family(_module_family(
     poisson, name="poisson",
+    labels_stats_fast=_pois_labels_stats_fast,
     feature_shardable=True, feature_stat_fields=("sx",),
     slice_params=lambda p, s, n: poisson.PoisParams(
         log_rate=_slice_last(p.log_rate, s, n)),
@@ -213,6 +436,7 @@ POISSON = register_family(_module_family(
 DIAG_GAUSSIAN = register_family(_module_family(
     diag_gaussian, name="diag_gaussian",
     loglik_fast=_diag_gauss_loglik_fast,
+    labels_stats_fast=_diag_labels_stats_fast,
     feature_shardable=True, feature_stat_fields=("sx", "sxx"),
     slice_params=lambda p, s, n: diag_gaussian.DiagParams(
         mu=_slice_last(p.mu, s, n), log_prec=_slice_last(p.log_prec, s, n)),

@@ -6,8 +6,16 @@ is the ``psum`` of sufficient statistics at the end of the sweep — the
 paper's 'we never transfer data; only sufficient statistics and parameters'
 property (§4.3).
 
-Per-point randomness derives from ``fold_in(key, global_index)`` so chains
-are bitwise identical under any sharding (DESIGN §2, assumption 3).
+Per-point randomness is a counter-based Threefry draw keyed on the *global*
+point index (kernels/prng.py), so chains are bitwise identical under any
+sharding (DESIGN §2, assumption 3) AND identical between the fused Pallas
+assignment kernels and the jnp reference path.
+
+The hot path itself lives behind the ``ComponentFamily`` dispatch
+(core/family.py): ``family.assign`` (step e), ``family.sub_assign``
+(step f, own-cluster only) and ``family.stats_from_labels``. This module
+never materializes dense responsibilities or an (N, K, 2) sub-cluster
+log-likelihood — step (f) costs O(N T), not O(N K T), on every path.
 """
 from __future__ import annotations
 
@@ -16,9 +24,9 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.core.family import NEG_INF  # noqa: F401  (re-export: sampler)
 from repro.core.state import DPMMState
-
-NEG_INF = -1e30
+from repro.kernels import prng
 
 
 def psum_tree(tree: Any, axes: Tuple[str, ...]):
@@ -40,19 +48,6 @@ def global_indices(n_local: int, axes: Tuple[str, ...]) -> jax.Array:
         return base
     idx = jax.lax.axis_index(axes)  # linearized index over the given axes
     return idx.astype(jnp.uint32) * jnp.uint32(n_local) + base
-
-
-def _per_point_gumbel(key: jax.Array, gidx: jax.Array, k: int) -> jax.Array:
-    """(N_local, k) Gumbel noise, keyed by *global* point index."""
-    def one(i):
-        return jax.random.gumbel(jax.random.fold_in(key, i), (k,))
-    return jax.vmap(one)(gidx)
-
-
-def _per_point_bit(key: jax.Array, gidx: jax.Array) -> jax.Array:
-    def one(i):
-        return jax.random.bernoulli(jax.random.fold_in(key, i))
-    return jax.vmap(one)(gidx).astype(jnp.int32)
 
 
 def sample_weights(key: jax.Array, active: jax.Array, nk: jax.Array,
@@ -86,47 +81,37 @@ def sample_subweights(key: jax.Array, active: jax.Array, nkl: jax.Array,
 
 def compute_stats(family, x: jax.Array, valid: jax.Array, labels: jax.Array,
                   sublabels: jax.Array, k_max: int,
-                  axes: Tuple[str, ...], feat_axis=None):
+                  axes: Tuple[str, ...], feat_axis=None,
+                  use_pallas: bool = False):
     """Suff-stats of clusters and sub-clusters from (sharded) labels + psum.
 
-    This is the paper's 3-step suff-stat update (§4.4): local accumulation
-    (the Pallas suffstats kernel on TPU; one-hot matmuls here), then a
-    cross-shard aggregation that moves only O(K * T) floats.
+    This is the paper's 3-step suff-stat update (§4.4): label-indexed local
+    accumulation (the Pallas suffstats kernels on TPU; segment-sum /
+    one-hot einsum otherwise — family.stats_from_labels), then ONE
+    cross-shard psum of the (K, 2, ...) sub-cluster stats. Cluster stats
+    are the exact fold of the sub-cluster stats over the l/r axis (every
+    point belongs to exactly one sub-cluster of its cluster), computed
+    *after* the psum — so the wire carries O(K * T) floats once, half of
+    what psumming clusters and sub-clusters separately moved.
 
     ``feat_axis``: the feature dim of x is additionally sharded over this
     mesh axis (high-d mode, DESIGN §10): the family's feature-sliced stats
     fields are all-gathered along features after the data-axis psum — still
     O(K * d). Only ``family.feature_shardable`` families support this.
     """
-    resp = jax.nn.one_hot(labels, k_max, dtype=x.dtype) * valid[:, None]
-    sub = jax.nn.one_hot(sublabels, 2, dtype=x.dtype)
-    subresp = resp[:, :, None] * sub[:, None, :]
-    stats = family.stats_from_points(x, resp)
-    substats = family.stats_from_points(x, subresp)
-    stats, substats = psum_tree((stats, substats), axes)
+    substats = family.stats_from_labels(x, valid, labels, sublabels, k_max,
+                                        use_pallas=use_pallas)
+    substats = psum_tree(substats, axes)
     if feat_axis is not None:
-        stats = family.gather_feature_stats(stats, feat_axis)
         substats = family.gather_feature_stats(substats, feat_axis)
+    stats = jax.tree.map(lambda a: jnp.sum(a, axis=1), substats)
     return stats, substats
-
-
-def _loglik(family, x, params, use_pallas: bool, feat_axis=None):
-    """The O(N K T) hot spot — Pallas kernel on TPU when enabled (§4.2).
-
-    With ``feat_axis`` the feature-separable likelihoods (multinomial,
-    Poisson, diag-Gaussian) run on local feature slices and psum the
-    (N_local, K) partials — the paper's d=20,000 20newsgroups regime
-    without ever replicating x's features."""
-    if feat_axis is not None:
-        return family.loglik_sharded(x, params, feat_axis)
-    return family.loglik(x, params, use_pallas=use_pallas)
 
 
 def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, family,
           alpha: float, axes: Tuple[str, ...],
           use_pallas: bool = False, feat_axis=None) -> DPMMState:
     """One restricted Gibbs sweep (steps a-f). Runs under shard_map."""
-    k_max = state.active.shape[0]
     key = jax.random.fold_in(state.key, state.it)
     k_w, k_sw, k_p, k_sp, k_z, k_zb = jax.random.split(key, 6)
 
@@ -141,26 +126,21 @@ def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, family,
     subparams = family.sample_posterior(k_sp, prior, state.substats)
 
     # (e) cluster assignments: z_i ~ pi_k f(x_i; theta_k)  over *existing* k
+    # — the O(N K T) hot spot, fused through the family dispatch
     gidx = global_indices(x.shape[0], axes)
-    ll = _loglik(family, x, params, use_pallas, feat_axis)  # (N, K) hot spot
-    logits = ll + logw[None, :]
-    logits = jnp.where(state.active[None, :], logits, NEG_INF)
-    labels = jnp.argmax(
-        logits + _per_point_gumbel(k_z, gidx, k_max), axis=-1
-    ).astype(jnp.int32)
+    labels = family.assign(x, params, logw, state.active, gidx,
+                           prng.key_words(k_z), use_pallas=use_pallas,
+                           feat_axis=feat_axis)
 
-    # (f) sub-cluster assignments under the point's own cluster
-    subll = _loglik(family, x, subparams, False, feat_axis)  # (N, K, 2)
-    own = jnp.take_along_axis(
-        subll, labels[:, None, None].astype(jnp.int32), axis=1)[:, 0, :]
-    sublogits = own + sublogw[labels]
-    sublabels = jnp.argmax(
-        sublogits + _per_point_gumbel(k_zb, gidx, 2), axis=-1
-    ).astype(jnp.int32)
+    # (f) sub-cluster assignments under the point's OWN cluster only: O(N T)
+    sublabels = family.sub_assign(x, subparams, sublogw, labels, gidx,
+                                  prng.key_words(k_zb),
+                                  use_pallas=use_pallas, feat_axis=feat_axis)
 
     # suff-stats + the one cross-shard reduction
     stats, substats = compute_stats(
-        family, x, valid, labels, sublabels, k_max, axes, feat_axis)
+        family, x, valid, labels, sublabels, state.active.shape[0], axes,
+        feat_axis, use_pallas)
 
     return state._replace(
         logweights=logw, sub_logweights=sublogw, params=params,

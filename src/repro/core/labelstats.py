@@ -1,0 +1,30 @@
+"""Shared segment-sum moments-from-labels for feature-separable families.
+
+The jnp reference path of ``stats_from_labels`` is identical for every
+family whose sufficient statistics are first moments of some per-point
+feature map (multinomial: x, poisson: x, diag-Gaussian: [x, x^2]): scatter
+each point's features into segment s = 2*label + sublabel, with invalid
+(padding) points routed to a sacrificial segment that is sliced off. No
+dense (N, K) / (N, K, 2) responsibility tensor ever exists. This mirrors
+the families' shared Pallas fast path (kernels/suffstats.moments_labels),
+which builds the equivalent one-hot per tile in VMEM instead.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def moments_from_labels(feats: jax.Array, valid: jax.Array,
+                        labels: jax.Array, sublabels: jax.Array,
+                        k_max: int) -> Tuple[jax.Array, jax.Array]:
+    """feats: (N, d') -> (n (k_max, 2), sf (k_max, 2, d'))."""
+    s = 2 * k_max
+    seg = jnp.where(valid, labels * 2 + sublabels, s)
+    n2 = jax.ops.segment_sum(valid.astype(feats.dtype), seg,
+                             num_segments=s + 1)[:s]
+    sf2 = jax.ops.segment_sum(feats, seg, num_segments=s + 1)[:s]
+    return (n2.reshape(k_max, 2),
+            sf2.reshape(k_max, 2, feats.shape[-1]))

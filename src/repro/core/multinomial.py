@@ -68,6 +68,23 @@ def add_stats(a: MultStats, b: MultStats) -> MultStats:
     return MultStats(a.n + b.n, a.counts + b.counts)
 
 
+def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
+                      sublabels: jax.Array, k_max: int) -> MultStats:
+    """(k_max, 2)-batched sub-cluster stats via segment-sum — no dense
+    responsibility tensor (core/labelstats.py). Cluster stats are the
+    fold over the sub axis (gibbs.compute_stats)."""
+    from repro.core.labelstats import moments_from_labels
+    n2, counts2 = moments_from_labels(x, valid, labels, sublabels, k_max)
+    return MultStats(n=n2, counts=counts2)
+
+
+def assign_pack(x: jax.Array, params: MultParams):
+    """Linear-likelihood packing for the fused assignment kernels
+    (kernels/assign.py): loglik(x)_b = feats @ w_b + const_b."""
+    return x, params.logtheta, jnp.zeros(params.logtheta.shape[:-1],
+                                         x.dtype)
+
+
 def log_marginal(prior: MultPrior, stats: MultStats) -> jax.Array:
     """Dirichlet-multinomial marginal (multinomial coefficients dropped).
 

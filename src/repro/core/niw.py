@@ -107,6 +107,35 @@ def add_stats(a: GaussStats, b: GaussStats) -> GaussStats:
     return GaussStats(a.n + b.n, a.sx + b.sx, a.sxx + b.sxx)
 
 
+def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
+                      sublabels: jax.Array, k_max: int) -> GaussStats:
+    """(k_max, 2)-batched sub-cluster stats straight from int labels.
+
+    One (N, 2K) one-hot over segments s = 2*label + sublabel replaces the
+    old resp (N, K) + subresp (N, K, 2) pair — cluster stats are the fold
+    over the sub axis (core/gibbs.compute_stats), so clusters and
+    sub-clusters come from ONE einsum pass. The second-moment einsum needs
+    the one-hot operand (sxx is a masked x^T x — there is no segment-sum
+    form that avoids materializing per-point outer products, which at
+    (N, d, d) would dwarf the (N, 2K) one-hot), and its pairwise
+    contraction still materializes an (N, 2K-or-d, d) temporary — half of
+    what the old two-pass resp+subresp einsums peaked at, but the real
+    fix is the Pallas kernel (kernels/suffstats.py), which builds the
+    one-hot per tile in VMEM and accumulates sxx without any HBM
+    temporary. This is the jnp oracle / non-TPU path.
+    """
+    seg = labels * 2 + sublabels
+    r2 = (jax.nn.one_hot(seg, 2 * k_max, dtype=x.dtype)
+          * valid.astype(x.dtype)[:, None])          # (N, 2K)
+    n2 = jnp.sum(r2, axis=0)
+    sx2 = jnp.einsum("ns,nd->sd", r2, x)
+    sxx2 = jnp.einsum("ns,nd,ne->sde", r2, x, x)
+    d = x.shape[-1]
+    return GaussStats(n=n2.reshape(k_max, 2),
+                      sx=sx2.reshape(k_max, 2, d),
+                      sxx=sxx2.reshape(k_max, 2, d, d))
+
+
 def posterior(prior: NIWPrior, stats: GaussStats):
     """NIW posterior hyper-parameters given sufficient statistics."""
     n = stats.n[..., None]

@@ -69,6 +69,22 @@ def add_stats(a: PoisStats, b: PoisStats) -> PoisStats:
     return PoisStats(a.n + b.n, a.sx + b.sx)
 
 
+def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
+                      sublabels: jax.Array, k_max: int) -> PoisStats:
+    """(k_max, 2)-batched sub-cluster stats via segment-sum (no dense
+    responsibilities; core/labelstats.py)."""
+    from repro.core.labelstats import moments_from_labels
+    n2, sx2 = moments_from_labels(x, valid, labels, sublabels, k_max)
+    return PoisStats(n=n2, sx=sx2)
+
+
+def assign_pack(x: jax.Array, params: PoisParams):
+    """Linear-likelihood packing for the fused assignment kernels:
+    loglik(x)_b = x @ log(lambda_b) - sum_j lambda_bj."""
+    return (x, params.log_rate,
+            -jnp.sum(jnp.exp(params.log_rate), axis=-1))
+
+
 def log_marginal(prior: PoisPrior, stats: PoisStats) -> jax.Array:
     """Negative-binomial marginal (log x! terms dropped):
 

@@ -56,12 +56,13 @@ def _init_local(key, x, valid, *, prior, family, cfg, axes, k_max,
     # first pass for cluster means, then hyperplane sub-label init
     stats0, _ = gibbs.compute_stats(
         family, x, valid, labels, jnp.zeros_like(labels), k_max, axes,
-        feat_axis)
+        feat_axis, cfg.use_pallas)
     sublabels = splitmerge.hyperplane_bits(
         jax.random.fold_in(key, 1), x, labels, family.cluster_means(stats0),
         feat_axis)
     stats, substats = gibbs.compute_stats(
-        family, x, valid, labels, sublabels, k_max, axes, feat_axis)
+        family, x, valid, labels, sublabels, k_max, axes, feat_axis,
+        cfg.use_pallas)
     active = jnp.arange(k_max) < cfg.init_clusters
     params = family.expected_params(prior, stats)
     subparams = family.expected_params(prior, substats)
@@ -117,9 +118,11 @@ def _split_merge(state: DPMMState, x, valid, *, prior, family, cfg, axes,
 
     # consistency pass: recompute stats AND substats from the new labels
     # (paper §4.4: 'processing accepted splits/merges requires updating the
-    # sufficient statistics', O(N/G) + one psum)
+    # sufficient statistics', O(N/G) + one psum) — same label-indexed
+    # fused/reference stats path as the sweep (family.stats_from_labels)
     stats3, substats3 = gibbs.compute_stats(
-        family, x, valid, labels2, sublabels2, k_max, axes, feat_axis)
+        family, x, valid, labels2, sublabels2, k_max, axes, feat_axis,
+        cfg.use_pallas)
     return state._replace(
         active=dec_m.new_active, stuck=stuck, stats=stats3,
         substats=substats3, labels=labels2, sublabels=sublabels2)

@@ -12,6 +12,10 @@ more than two clusters may merge simultaneously; accepted pairs merge with
 the old clusters becoming the l/r sub-clusters of the merged one (eq. 21).
 
 All decision math is replicated O(K); label rewrites happen on the shards.
+The post-move stats consistency pass (core/sampler._split_merge) runs
+through the same label-indexed ``family.stats_from_labels`` path as the
+sweep — sub-cluster stats in one pass, cluster stats as their fold — so
+splits/merges never materialize dense responsibilities either.
 """
 from __future__ import annotations
 

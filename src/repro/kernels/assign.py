@@ -1,0 +1,352 @@
+"""Pallas TPU kernels for the fused assignment steps (e) and (f).
+
+The paper's GPU implementation wins by *fusing* the assignment hot path
+(§4.1e, §4.4 "Kernel #1/#2"): likelihood, prior weight, categorical noise
+and the argmax all happen per streaming tile, so the (N, K) logit and noise
+matrices never round-trip through global memory. These kernels are the TPU
+analogue — a flash-attention-style running (max, argmax) over cluster
+tiles:
+
+``assign_linear`` / ``assign_gauss``  (step e)
+    grid (N/bn, K/bk) with the *cluster* axis innermost; the only VMEM
+    state carried across cluster tiles is a (bn,) running best value and
+    best index. Per tile the kernel computes loglik + logpi + Gumbel
+    (counter-based Threefry keyed on the global point index —
+    kernels/prng.py, bitwise-identical to the reference sweep) and folds it
+    into the running pair. Labels come out directly: the (N, K) logits and
+    Gumbel tensors never exist in HBM.
+
+``sub_assign_linear`` / ``sub_assign_gauss``  (step f)
+    grid (N/bn,); the whole (K, 2, ...) sub-cluster parameter block sits in
+    VMEM and each point *gathers its own cluster's* parameters, so the
+    sub-cluster likelihood is evaluated for 2 sub-clusters per point
+    instead of all 2K — the O(N K T) -> O(N T) cut. The linear-family
+    kernel gathers via a one-hot matmul (MXU-served, exact: one-hot rows
+    add 0.0 terms); the Gaussian kernel gathers (K, 2, d, d) Cholesky
+    factors with a vector ``take`` (interpret-validated; the ops.py
+    dispatcher guards the VMEM budget and falls back to the chunked jnp
+    reference where Mosaic gather support is in doubt).
+
+Families plug in via two shapes of likelihood:
+ - *linear*: loglik(x)_k = feats @ w_k + const_k  (multinomial, poisson,
+   diag-Gaussian — see the families' ``assign_pack`` hooks), and
+ - *Gaussian*: the whitening Mahalanobis form of kernels/loglik.py.
+
+All kernels mirror the reference sweep's op order exactly
+(ll + logpi, mask, + Gumbel, first-max argmax), so interpret-mode labels
+match the jnp path bitwise except on exact floating-point argmax ties
+(probability ~0 under continuous Gumbel noise).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import prng
+
+LOG_2PI = 1.8378770664093453
+# Inactive-cluster mask, canonical: core.family imports it from here so the
+# constant baked into the kernels' tile masking can never drift from the
+# reference sweep's.
+NEG_INF = -1e30
+
+
+def _pad_dim(a: jax.Array, axis: int, pad: int, value=0) -> jax.Array:
+    if not pad:
+        return a
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(a, widths, constant_values=value)
+
+
+def _fold_best(j, bk, total, best_ref, lab_ref):
+    """Fold a (bn, bk) logit tile into the running (max, argmax) pair."""
+    tile_best = jnp.max(total, axis=1)
+    tile_arg = (jnp.argmax(total, axis=1).astype(jnp.int32)
+                + jnp.int32(j * bk))
+    improve = tile_best > best_ref[...]  # strict: keep FIRST max, like argmax
+    lab_ref[...] = jnp.where(improve, tile_arg, lab_ref[...])
+    best_ref[...] = jnp.where(improve, tile_best, best_ref[...])
+
+
+# ---------------------------------------------------------------------------
+# Step (e): cluster assignment
+# ---------------------------------------------------------------------------
+def _assign_linear_kernel(feats_ref, w_ref, const_ref, logw_ref, act_ref,
+                          gidx_ref, key_ref, best_ref, lab_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        lab_ref[...] = jnp.zeros_like(lab_ref)
+
+    bk = w_ref.shape[0]
+    ll = (jnp.dot(feats_ref[...], w_ref[...].T,
+                  preferred_element_type=jnp.float32)
+          + const_ref[...][None, :])                  # (bn, bk) loglik tile
+    t = ll + logw_ref[...][None, :]
+    t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
+    cid = (jnp.uint32(j * bk)
+           + jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1))
+    t = t + prng.gumbel(key_ref[...], gidx_ref[...][:, None], cid)
+    _fold_best(j, bk, t, best_ref, lab_ref)
+
+
+def _assign_gauss_kernel(x_ref, mu_ref, f_ref, ld_ref, logw_ref, act_ref,
+                         gidx_ref, key_ref, best_ref, lab_ref):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        lab_ref[...] = jnp.zeros_like(lab_ref)
+
+    x = x_ref[...]                                    # (bn, d)
+    bk, d = mu_ref.shape
+    diff = x[:, None, :] - mu_ref[...][None, :, :]    # (bn, bk, d)
+    # whitening y = diff @ F_k, batched over the bk clusters (MXU) — same
+    # contraction order as kernels/loglik.py / core/niw.py, so the loglik
+    # matches the reference bitwise on CPU interpret mode
+    y = jax.lax.dot_general(
+        diff.transpose(1, 0, 2), f_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)           # (bk, bn, d)
+    maha = jnp.sum(y * y, axis=-1)                    # (bk, bn)
+    ll = (0.5 * (ld_ref[...][:, None] - maha) - 0.5 * d * LOG_2PI).T
+    t = ll + logw_ref[...][None, :]
+    t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
+    cid = (jnp.uint32(j * bk)
+           + jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1))
+    t = t + prng.gumbel(key_ref[...], gidx_ref[...][:, None], cid)
+    _fold_best(j, bk, t, best_ref, lab_ref)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "interpret"))
+def assign_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
+                  logw: jax.Array, active: jax.Array, gidx: jax.Array,
+                  key_data: jax.Array, *, bn: int = 128, bk: int = 8,
+                  interpret: bool = False) -> jax.Array:
+    """Fused step (e) for linear-likelihood families -> (N,) int32 labels.
+
+    feats: (N, d'); w: (K, d'); const/logw: (K,); active: (K,) bool;
+    gidx: (N,) uint32 global point indices; key_data: (2,) uint32.
+    """
+    n, dp = feats.shape
+    k = w.shape[0]
+    bn = min(bn, n) or 1
+    bk = min(bk, k) or 1
+    pn, pk = (-n) % bn, (-k) % bk
+    feats = _pad_dim(feats, 0, pn)
+    gidx = _pad_dim(gidx, 0, pn)
+    w = _pad_dim(w, 0, pk)
+    const = _pad_dim(const, 0, pk)
+    logw = _pad_dim(logw, 0, pk)
+    active = _pad_dim(active.astype(jnp.int32), 0, pk)  # pad slots inactive
+    gn, gk = feats.shape[0] // bn, w.shape[0] // bk
+
+    _, labels = pl.pallas_call(
+        _assign_linear_kernel,
+        grid=(gn, gk),                       # K innermost: running argmax
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),   # revisited over j
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((feats.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((feats.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(feats, w, const, logw, active, gidx, key_data)
+    return labels[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bn", "bk", "interpret"))
+def assign_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
+                 logdet_prec: jax.Array, logw: jax.Array,
+                 active: jax.Array, gidx: jax.Array, key_data: jax.Array,
+                 *, bn: int = 128, bk: int = 8,
+                 interpret: bool = False) -> jax.Array:
+    """Fused step (e) for the full-covariance Gaussian -> (N,) labels."""
+    n, d = x.shape
+    k = mu.shape[0]
+    bn = min(bn, n) or 1
+    bk = min(bk, k) or 1
+    pn, pk = (-n) % bn, (-k) % bk
+    x = _pad_dim(x, 0, pn)
+    gidx = _pad_dim(gidx, 0, pn)
+    mu = _pad_dim(mu, 0, pk)
+    if pk:
+        eye = jnp.broadcast_to(jnp.eye(d, dtype=chol_prec.dtype),
+                               (pk, d, d))
+        chol_prec = jnp.concatenate([chol_prec, eye], axis=0)
+    logdet_prec = _pad_dim(logdet_prec, 0, pk)
+    logw = _pad_dim(logw, 0, pk)
+    active = _pad_dim(active.astype(jnp.int32), 0, pk)
+    gn, gk = x.shape[0] // bn, mu.shape[0] // bk
+
+    _, labels = pl.pallas_call(
+        _assign_gauss_kernel,
+        grid=(gn, gk),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((2,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0],), jnp.float32),
+            jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, mu, chol_prec, logdet_prec, logw, active, gidx, key_data)
+    return labels[:n]
+
+
+# ---------------------------------------------------------------------------
+# Step (f): own-cluster sub-assignment
+# ---------------------------------------------------------------------------
+def _sub_assign_linear_kernel(feats_ref, w_ref, const_ref, sublogw_ref,
+                              lab_ref, gidx_ref, key_ref, out_ref):
+    feats = feats_ref[...]                             # (bn, dp)
+    k, _, dp = w_ref.shape
+    lab = lab_ref[...]
+    # gather each point's own (2, dp) sub-params via a one-hot matmul: the
+    # MXU-served gather (exact — off rows contribute 0.0 * w)
+    onehot = (lab[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (lab.shape[0], k), 1)
+              ).astype(jnp.float32)                    # (bn, K)
+    own_w = jnp.dot(onehot, w_ref[...].reshape(k, 2 * dp),
+                    preferred_element_type=jnp.float32).reshape(-1, 2, dp)
+    own_const = jnp.dot(onehot, const_ref[...],
+                        preferred_element_type=jnp.float32)     # (bn, 2)
+    own_logw = jnp.dot(onehot, sublogw_ref[...],
+                       preferred_element_type=jnp.float32)      # (bn, 2)
+    ll = jnp.einsum("nd,nsd->ns", feats, own_w,
+                    preferred_element_type=jnp.float32) + own_const
+    t = ll + own_logw
+    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
+    t = t + prng.gumbel(key_ref[...], gidx_ref[...][:, None], cid)
+    out_ref[...] = jnp.argmax(t, axis=1).astype(jnp.int32)
+
+
+def _sub_assign_gauss_kernel(x_ref, mu_ref, f_ref, ld_ref, sublogw_ref,
+                             lab_ref, gidx_ref, key_ref, out_ref):
+    x = x_ref[...]                                     # (bn, d)
+    d = x.shape[1]
+    lab = lab_ref[...]
+    # vector gather of the own-cluster sub-params (no K-fold FLOPs at all);
+    # interpret mode executes this as jnp.take — ops.py guards the TPU path
+    mu_own = jnp.take(mu_ref[...], lab, axis=0)        # (bn, 2, d)
+    f_own = jnp.take(f_ref[...], lab, axis=0)          # (bn, 2, d, d)
+    ld_own = jnp.take(ld_ref[...], lab, axis=0)        # (bn, 2)
+    logw_own = jnp.take(sublogw_ref[...], lab, axis=0)
+    diff = x[:, None, :] - mu_own                      # (bn, 2, d)
+    y = jnp.einsum("nsd,nsde->nse", diff, f_own,
+                   preferred_element_type=jnp.float32)
+    maha = jnp.sum(y * y, axis=-1)                     # (bn, 2)
+    ll = 0.5 * (ld_own - maha) - 0.5 * d * LOG_2PI
+    t = ll + logw_own
+    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
+    t = t + prng.gumbel(key_ref[...], gidx_ref[...][:, None], cid)
+    out_ref[...] = jnp.argmax(t, axis=1).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def sub_assign_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
+                      sublogw: jax.Array, labels: jax.Array,
+                      gidx: jax.Array, key_data: jax.Array, *,
+                      bn: int = 128, interpret: bool = False) -> jax.Array:
+    """Fused step (f) for linear families -> (N,) int32 sub-labels.
+
+    feats: (N, d'); w: (K, 2, d'); const/sublogw: (K, 2); labels: (N,).
+    """
+    n, dp = feats.shape
+    bn = min(bn, n) or 1
+    pn = (-n) % bn
+    feats = _pad_dim(feats, 0, pn)
+    labels = _pad_dim(labels, 0, pn)
+    gidx = _pad_dim(gidx, 0, pn)
+    k = w.shape[0]
+    gn = feats.shape[0] // bn
+
+    out = pl.pallas_call(
+        _sub_assign_linear_kernel,
+        grid=(gn,),
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda i: (i, 0)),
+            pl.BlockSpec((k, 2, dp), lambda i: (0, 0, 0)),  # resident VMEM
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((feats.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(feats, w, const, sublogw, labels, gidx, key_data)
+    return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def sub_assign_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
+                     logdet_prec: jax.Array, sublogw: jax.Array,
+                     labels: jax.Array, gidx: jax.Array,
+                     key_data: jax.Array, *, bn: int = 32,
+                     interpret: bool = False) -> jax.Array:
+    """Fused step (f) for the Gaussian -> (N,) int32 sub-labels.
+
+    x: (N, d); mu: (K, 2, d); chol_prec: (K, 2, d, d); logdet/sublogw:
+    (K, 2). ``bn`` is small: the gathered (bn, 2, d, d) factors live in
+    VMEM next to the resident (K, 2, d, d) block.
+    """
+    n, d = x.shape
+    bn = min(bn, n) or 1
+    pn = (-n) % bn
+    x = _pad_dim(x, 0, pn)
+    labels = _pad_dim(labels, 0, pn)
+    gidx = _pad_dim(gidx, 0, pn)
+    k = mu.shape[0]
+    gn = x.shape[0] // bn
+
+    out = pl.pallas_call(
+        _sub_assign_gauss_kernel,
+        grid=(gn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, 2, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, 2, d, d), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(x, mu, chol_prec, logdet_prec, sublogw, labels, gidx, key_data)
+    return out[:n]

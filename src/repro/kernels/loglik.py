@@ -9,6 +9,10 @@ paper's complexity O(N K T / G) with T = d^2.
 Tiling: grid (N/bn, K/bk); VMEM per step =
     x (bn, d) + mu/F (bk d + bk d^2) + diff/y (2 bn bk d) + out (bn, bk)
 with bn=128, bk=8, d<=128 that is ~1.6 MiB — well inside the ~16 MiB VMEM.
+``MAX_KERNEL_D`` makes the d<=128 assumption explicit: the per-step VMEM
+footprint grows as bk*d^2 + 2*bn*bk*d, so beyond 128 the tile no longer
+fits the budget and ``loglik`` falls back to the jnp reference
+(kernels/ref.py) instead of silently blowing VMEM at Mosaic compile time.
 """
 from __future__ import annotations
 
@@ -17,6 +21,9 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+from repro.kernels.suffstats import MAX_KERNEL_D  # shared VMEM ceiling
 
 LOG_2PI = 1.8378770664093453
 
@@ -44,6 +51,8 @@ def loglik(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
            interpret: bool = False) -> jax.Array:
     """x: (N, d); mu: (K, d); chol_prec: (K, d, d); logdet: (K,) -> (N, K)."""
     n, d = x.shape
+    if d > MAX_KERNEL_D:                 # documented VMEM guard: jnp path
+        return ref.loglik(x, mu, chol_prec, logdet_prec)
     k = mu.shape[0]
     bn = min(bn, n) or 1
     bk = min(bk, k) or 1

@@ -13,11 +13,12 @@ same ``pl.pallas_call`` lowers through Mosaic.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import assign as _assign
 from repro.kernels import loglik as _loglik
 from repro.kernels import matmul as _matmul
 from repro.kernels import ref
@@ -25,6 +26,15 @@ from repro.kernels import suffstats as _suffstats
 
 # the paper's measured CUDA crossover; bench_kernels re-measures per host
 MATMUL_CROSSOVER = 640_000
+
+# shared VMEM ceiling on the feature dim (kernels/loglik.py, suffstats.py)
+MAX_KERNEL_D = _suffstats.MAX_KERNEL_D
+
+# VMEM budget for the resident (K, 2, ...) sub-cluster parameter block of
+# the fused sub-assignment kernels (kernels/assign.py) — Cholesky factors
+# for the Gaussian, packed weights (+ the per-tile (bn, K) one-hot used for
+# the MXU gather) for the linear families
+SUB_PARAMS_VMEM_BYTES = 8 * 1024 * 1024
 
 
 def _interpret() -> bool:
@@ -64,6 +74,63 @@ def gauss_loglik(x: jax.Array, params, use_pallas: bool) -> jax.Array:
         return loglik_pallas(x, params.mu, params.chol_prec,
                              params.logdet_prec)
     return ref.loglik(x, params.mu, params.chol_prec, params.logdet_prec)
+
+
+# ---------------------------------------------------------------------------
+# Fused assignment (steps e/f) + label-indexed suff-stats (kernels/assign.py,
+# kernels/suffstats.py). Every wrapper returns ``None`` when the problem
+# falls outside the kernel's documented VMEM envelope, and the caller
+# (core/family.py dispatch) runs the jnp reference path instead.
+# ---------------------------------------------------------------------------
+def assign_linear_pallas(feats, w, const, logw, active, gidx,
+                         key_data) -> Optional[jax.Array]:
+    if feats.shape[1] > 2 * MAX_KERNEL_D:     # [x, x^2] packs reach 2d
+        return None
+    return _assign.assign_linear(feats, w, const, logw, active, gidx,
+                                 key_data, interpret=_interpret())
+
+
+def assign_gauss_pallas(x, mu, chol_prec, logdet_prec, logw, active, gidx,
+                        key_data) -> Optional[jax.Array]:
+    if x.shape[1] > MAX_KERNEL_D:
+        return None
+    return _assign.assign_gauss(x, mu, chol_prec, logdet_prec, logw,
+                                active, gidx, key_data,
+                                interpret=_interpret())
+
+
+def sub_assign_linear_pallas(feats, w, const, sublogw, labels, gidx,
+                             key_data) -> Optional[jax.Array]:
+    resident = (w.size + 128 * w.shape[0]) * 4   # (K,2,d') block + one-hot
+    if feats.shape[1] > 2 * MAX_KERNEL_D or resident > SUB_PARAMS_VMEM_BYTES:
+        return None
+    return _assign.sub_assign_linear(feats, w, const, sublogw, labels,
+                                     gidx, key_data,
+                                     interpret=_interpret())
+
+
+def sub_assign_gauss_pallas(x, mu, chol_prec, logdet_prec, sublogw, labels,
+                            gidx, key_data) -> Optional[jax.Array]:
+    d = x.shape[1]
+    if d > MAX_KERNEL_D or chol_prec.size * 4 > SUB_PARAMS_VMEM_BYTES:
+        return None
+    return _assign.sub_assign_gauss(x, mu, chol_prec, logdet_prec, sublogw,
+                                    labels, gidx, key_data,
+                                    interpret=_interpret())
+
+
+def suffstats_labels_pallas(x, labels, sublabels, valid, k: int):
+    if x.shape[1] > MAX_KERNEL_D:
+        return None
+    return _suffstats.suffstats_labels(x, labels, sublabels, valid, k,
+                                       interpret=_interpret())
+
+
+def moments_labels_pallas(feats, labels, sublabels, valid, k: int):
+    if feats.shape[1] > 2 * MAX_KERNEL_D:
+        return None
+    return _suffstats.moments_labels(feats, labels, sublabels, valid, k,
+                                     interpret=_interpret())
 
 
 def diag_gauss_loglik(x: jax.Array, params, use_pallas: bool) -> jax.Array:

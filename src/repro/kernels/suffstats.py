@@ -1,17 +1,34 @@
-"""Pallas TPU kernel for per-cluster sufficient statistics — the paper's
+"""Pallas TPU kernels for per-cluster sufficient statistics — the paper's
 per-stream suff-stat accumulation (§4.4, 3-step update), as masked matmuls.
 
-Given points x (N, d) and responsibilities resp (N, K) (one-hot labels, or
-label x sub-label products for the sub-cluster stats):
-    n_k  = sum_i r_ik          (K,)
-    sx_k = sum_i r_ik x_i      (K, d)     = resp^T @ x        (MXU)
-    sxx_k = sum_i r_ik x_i x_i^T (K,d,d)  = batched (d,bn)@(bn,d) per k
+Two generations of kernel live here:
 
-Tiling: grid (K/bk, N/bn) with the N axis innermost and *revisited*: the
-output tiles (bk,), (bk, d), (bk, d, d) stay resident in VMEM and
-accumulate across N steps — the TPU analogue of the paper's per-stream
-partial sums, with the cross-device psum happening outside the kernel.
+``suffstats`` (dense responsibilities)
+    Given points x (N, d) and responsibilities resp (N, K) (one-hot labels,
+    or label x sub-label products for the sub-cluster stats):
+        n_k  = sum_i r_ik          (K,)
+        sx_k = sum_i r_ik x_i      (K, d)     = resp^T @ x        (MXU)
+        sxx_k = sum_i r_ik x_i x_i^T (K,d,d)  = batched (d,bn)@(bn,d) per k
+    The caller must materialize resp in HBM — kept as the dense oracle.
+
+``suffstats_labels`` / ``moments_labels`` (label-indexed, the hot path)
+    Take int32 ``labels``/``sublabels``/``valid`` directly and build the
+    one-hot *per tile in VMEM* over segments s = 2*label + sublabel, so no
+    (N, K) or (N, K, 2) responsibility tensor ever exists in HBM. One pass
+    over x yields the (K, 2, ...) sub-cluster stats; cluster stats are the
+    fold over the sub axis (core/gibbs.compute_stats). ``moments_labels``
+    is the first-moment-only variant serving the feature-separable families
+    (multinomial / poisson / diag-Gaussian via stacked [x, x^2] features).
+
+Tiling: grid (S/bk, N/bn) with the N axis innermost and *revisited*: the
+output tiles stay resident in VMEM and accumulate across N steps — the TPU
+analogue of the paper's per-stream partial sums, with the cross-device psum
+happening outside the kernel.
 VMEM (bk=8, bn=128, d<=128): x 64k + resp 4k + sxx 512k + masked 512k f32.
+``MAX_KERNEL_D`` guards that budget: the (bk, d, d) output tile and the
+(bk, bn, d) masked intermediate grow as d^2 / d, so d > 128 would blow the
+~16 MiB VMEM; callers (kernels/ops.py) fall back to the jnp reference
+(kernels/ref.py or the families' segment-sum paths) above it.
 """
 from __future__ import annotations
 
@@ -21,6 +38,13 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels import ref
+
+# VMEM ceiling for the feature dimension (see module docstring); above it
+# every entry point here returns the jnp reference result instead. This is
+# THE canonical kernel-d guard: loglik.py and ops.py import it from here.
+MAX_KERNEL_D = 128
 
 
 def _suffstats_kernel(x_ref, r_ref, n_ref, sx_ref, sxx_ref):
@@ -42,12 +66,71 @@ def _suffstats_kernel(x_ref, r_ref, n_ref, sx_ref, sxx_ref):
         preferred_element_type=jnp.float32)          # (bk, d, d)
 
 
+def _tile_resp(lab_ref, sub_ref, val_ref, j: int, bk: int) -> jax.Array:
+    """(bn, bk) one-hot over segments s = 2*label + sublabel, in VMEM."""
+    seg = lab_ref[...] * 2 + sub_ref[...]            # (bn,)
+    col = (jnp.int32(j * bk)
+           + jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], bk), 1))
+    return ((seg[:, None] == col).astype(jnp.float32)
+            * val_ref[...][:, None])
+
+
+def _suffstats_labels_kernel(x_ref, lab_ref, sub_ref, val_ref,
+                             n_ref, sx_ref, sxx_ref):
+    r_ref = _tile_resp(lab_ref, sub_ref, val_ref, pl.program_id(0),
+                       n_ref.shape[0])
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        n_ref[...] = jnp.zeros_like(n_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+        sxx_ref[...] = jnp.zeros_like(sxx_ref)
+
+    x = x_ref[...]
+    r = r_ref
+    n_ref[...] += jnp.sum(r, axis=0)
+    sx_ref[...] += jnp.dot(r.T, x, preferred_element_type=jnp.float32)
+    xw = r.T[:, :, None] * x[None, :, :]
+    sxx_ref[...] += jax.lax.dot_general(
+        xw.transpose(0, 2, 1), jnp.broadcast_to(x, (r.shape[1],) + x.shape),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)
+
+
+def _moments_labels_kernel(x_ref, lab_ref, sub_ref, val_ref, n_ref, sx_ref):
+    r = _tile_resp(lab_ref, sub_ref, val_ref, pl.program_id(0),
+                   n_ref.shape[0])
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        n_ref[...] = jnp.zeros_like(n_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+
+    n_ref[...] += jnp.sum(r, axis=0)
+    sx_ref[...] += jnp.dot(r.T, x_ref[...],
+                           preferred_element_type=jnp.float32)
+
+
+def _pad_points(arrs, bn: int):
+    n = arrs[0].shape[0]
+    pn = (-n) % bn
+    if not pn:
+        return arrs
+    out = []
+    for a in arrs:
+        widths = [(0, pn)] + [(0, 0)] * (a.ndim - 1)
+        out.append(jnp.pad(a, widths))
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
 def suffstats(x: jax.Array, resp: jax.Array, *, bn: int = 128, bk: int = 8,
               interpret: bool = False
               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """x: (N, d); resp: (N, K) -> (n (K,), sx (K, d), sxx (K, d, d))."""
     n_pts, d = x.shape
+    if d > MAX_KERNEL_D:                 # documented VMEM guard: jnp path
+        return ref.suffstats(x, resp)
     k = resp.shape[1]
     bn = min(bn, n_pts) or 1
     bk = min(bk, k) or 1
@@ -79,3 +162,97 @@ def suffstats(x: jax.Array, resp: jax.Array, *, bn: int = 128, bk: int = 8,
         interpret=interpret,
     )(x, resp)
     return n_out[:k], sx[:k], sxx[:k]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bn", "bk", "interpret"))
+def suffstats_labels(x: jax.Array, labels: jax.Array, sublabels: jax.Array,
+                     valid: jax.Array, k: int, *, bn: int = 128,
+                     bk: int = 8, interpret: bool = False
+                     ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Label-indexed sub-cluster stats; one-hot never leaves VMEM.
+
+    x: (N, d); labels/sublabels: (N,) int32; valid: (N,) bool ->
+    (n (k, 2), sx (k, 2, d), sxx (k, 2, d, d)).
+    """
+    n_pts, d = x.shape
+    assert d <= MAX_KERNEL_D, (
+        f"suffstats_labels: d={d} exceeds the VMEM budget "
+        f"(MAX_KERNEL_D={MAX_KERNEL_D}); use the family's segment-sum "
+        "reference path (kernels/ops.py guards this)")
+    s = 2 * k
+    bn = min(bn, n_pts) or 1
+    bk = min(bk, s)
+    x, labels, sublabels, valid = _pad_points(
+        (x, labels, sublabels, jnp.asarray(valid, jnp.float32)), bn)
+    ps = (-s) % bk
+    gk, gn = (s + ps) // bk, x.shape[0] // bn
+
+    n2, sx2, sxx2 = pl.pallas_call(
+        _suffstats_labels_kernel,
+        grid=(gk, gn),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda j, i: (i, 0)),
+            pl.BlockSpec((bn,), lambda j, i: (i,)),
+            pl.BlockSpec((bn,), lambda j, i: (i,)),
+            pl.BlockSpec((bn,), lambda j, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk,), lambda j, i: (j,)),
+            pl.BlockSpec((bk, d), lambda j, i: (j, 0)),
+            pl.BlockSpec((bk, d, d), lambda j, i: (j, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s + ps,), jnp.float32),
+            jax.ShapeDtypeStruct((s + ps, d), jnp.float32),
+            jax.ShapeDtypeStruct((s + ps, d, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, labels, sublabels, valid)
+    return (n2[:s].reshape(k, 2), sx2[:s].reshape(k, 2, d),
+            sxx2[:s].reshape(k, 2, d, d))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "bn", "bk", "interpret"))
+def moments_labels(feats: jax.Array, labels: jax.Array,
+                   sublabels: jax.Array, valid: jax.Array, k: int, *,
+                   bn: int = 128, bk: int = 8, interpret: bool = False
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Label-indexed first moments for the feature-separable families.
+
+    feats: (N, d') per-point features (x, or [x, x^2] stacked) ->
+    (n (k, 2), sf (k, 2, d')).
+    """
+    n_pts, dp = feats.shape
+    assert dp <= 2 * MAX_KERNEL_D, (
+        f"moments_labels: d'={dp} exceeds the VMEM budget; use the "
+        "family's segment-sum reference path (kernels/ops.py guards this)")
+    s = 2 * k
+    bn = min(bn, n_pts) or 1
+    bk = min(bk, s)
+    feats, labels, sublabels, valid = _pad_points(
+        (feats, labels, sublabels, jnp.asarray(valid, jnp.float32)), bn)
+    ps = (-s) % bk
+    gk, gn = (s + ps) // bk, feats.shape[0] // bn
+
+    n2, sf2 = pl.pallas_call(
+        _moments_labels_kernel,
+        grid=(gk, gn),
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda j, i: (i, 0)),
+            pl.BlockSpec((bn,), lambda j, i: (i,)),
+            pl.BlockSpec((bn,), lambda j, i: (i,)),
+            pl.BlockSpec((bn,), lambda j, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bk,), lambda j, i: (j,)),
+            pl.BlockSpec((bk, dp), lambda j, i: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s + ps,), jnp.float32),
+            jax.ShapeDtypeStruct((s + ps, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(feats, labels, sublabels, valid)
+    return n2[:s].reshape(k, 2), sf2[:s].reshape(k, 2, dp)
