@@ -2,8 +2,20 @@
 with T = d^2 (Gaussian) — verified by scaling one variable at a time —
 and §4.5 memory O(d * N). Also the weak-scaling distribution claim: time
 per iteration vs device count at fixed work per device.
+
+Results persist to BENCH_scaling.json (same schema spirit as
+BENCH_gibbs.json) so CI tracks the trajectory per PR. `--oocore` runs the
+out-of-core leg on its own (seconds-scale, CI-friendly): ms/iter and peak
+device bytes vs `tile_size` at fixed N — peak memory falls roughly
+linearly with tile size while ms/iter stays flat, because tiling only
+changes *where* points wait, not what math runs (chains are bitwise
+identical across planes; tests/test_tiled_parity.py).
 """
 from __future__ import annotations
+
+import argparse
+import json
+import platform
 
 import numpy as np
 
@@ -13,7 +25,11 @@ from benchmarks.common import Table
 from repro.configs import DPMMConfig
 from repro.core.distributed import make_data_mesh
 from repro.core.sampler import DPMM
+from repro.data.source import HostTiledSource
 from repro.data.synthetic import generate_gmm
+
+OOCORE_N, OOCORE_D, OOCORE_K = 60_000, 8, 8
+OOCORE_TILES = (None, 16_384, 4_096, 1_024)   # None = resident baseline
 
 
 def _ms_per_iter(n, d, k_init, iters=12, mesh=None, k_max=32):
@@ -25,22 +41,29 @@ def _ms_per_iter(n, d, k_init, iters=12, mesh=None, k_max=32):
     return float(np.mean(r.iter_times_s[2:]) * 1e3), r
 
 
-def run(out_dir: str = "experiments"):
+def run(out_dir: str = "experiments",
+        out_json: str = "BENCH_scaling.json", oocore_iters: int = 12):
     t = Table("scaling", ["axis", "value", "ms_per_iter", "ratio_vs_prev"])
+    rows = []
+
+    def leg(axis, value, ms, prev):
+        t.add(axis, value, f"{ms:.2f}", f"{ms/prev:.2f}" if prev else "-")
+        rows.append({"axis": axis, "value": value, "ms_per_iter": ms})
+
     prev = None
     for n in (10_000, 20_000, 40_000, 80_000):        # expect ~linear
         ms, _ = _ms_per_iter(n, 8, 8)
-        t.add("N", n, f"{ms:.2f}", f"{ms/prev:.2f}" if prev else "-")
+        leg("N", n, ms, prev)
         prev = ms
     prev = None
     for d in (4, 8, 16, 32):                          # expect ~quadratic (T=d^2)
         ms, _ = _ms_per_iter(20_000, d, 8)
-        t.add("d", d, f"{ms:.2f}", f"{ms/prev:.2f}" if prev else "-")
+        leg("d", d, ms, prev)
         prev = ms
     prev = None
     for k in (4, 8, 16, 32):                          # expect ~linear
         ms, _ = _ms_per_iter(20_000, 8, k, k_max=64)
-        t.add("K", k, f"{ms:.2f}", f"{ms/prev:.2f}" if prev else "-")
+        leg("K", k, ms, prev)
         prev = ms
     # weak scaling across devices (fixed per-device N)
     n_dev = jax.device_count()
@@ -48,12 +71,89 @@ def run(out_dir: str = "experiments"):
     prev = None
     for nd in sorted({1, max(n_dev // 2, 1), n_dev}):
         ms, _ = _ms_per_iter(per_dev * nd, 8, 8, mesh=make_data_mesh(nd))
-        t.add(f"devices(weak,{per_dev}/dev)", nd, f"{ms:.2f}",
-              f"{ms/prev:.2f}" if prev else "-")
+        leg(f"devices(weak,{per_dev}/dev)", nd, ms, prev)
         prev = ms
     t.emit_csv(f"{out_dir}/bench_scaling.csv")
+    _write_json(out_json, scaling=rows,
+                oocore=run_oocore(iters=oocore_iters))
     return t
 
 
+def run_oocore(iters: int = 12, n: int = OOCORE_N, d: int = OOCORE_D):
+    """The out-of-core leg: resident vs streamed tiles at fixed N.
+
+    The point array lives host-side behind a ``HostTiledSource`` for the
+    tiled legs; only O(k_max + tile) bytes are ever device-resident
+    (``FitResult.device_bytes``), at ms/iter flat within noise — N is
+    bounded by host storage, not device HBM. ``est_peak_bytes`` is the
+    analytic accounting over persistent device buffers (the CPU backend
+    reports no memory_stats); backends that measure also record
+    ``peak_bytes_in_use``.
+    """
+    x, gt = generate_gmm(n, d, OOCORE_K, seed=0, sep=8.0)
+    x = np.asarray(x, np.float32)
+    rows = []
+    resident_peak = None
+    baseline = None
+    for tile in OOCORE_TILES:
+        cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=32, burnout=4,
+                         tile_size=tile)
+        data = x if tile is None else HostTiledSource(x)
+        r = DPMM(cfg).fit(data)
+        ms = float(np.mean(r.iter_times_s[1:]) * 1e3)
+        peak = r.device_bytes["est_peak_bytes"]
+        if tile is None:
+            resident_peak = peak
+            baseline = r
+        row = {
+            "tile_size": tile,
+            "mode": r.device_bytes["mode"],
+            "ms_per_iter": ms,
+            "est_peak_device_bytes": peak,
+            "peak_bytes_in_use": r.device_bytes["peak_bytes_in_use"],
+            "resident_footprint_ratio": round(peak / resident_peak, 4),
+            "K_found": r.k,
+            "nmi": round(r.nmi(gt), 4),
+            "chain_identical_to_resident": bool(
+                np.array_equal(r.labels, baseline.labels)),
+        }
+        rows.append(row)
+        print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
+              flush=True)
+    return {"config": {"component": "gaussian", "N": n, "d": d,
+                       "K_true": OOCORE_K, "k_max": 32, "iters": iters},
+            "results": rows}
+
+
+def _write_json(out_json: str, scaling=None, oocore=None):
+    payload = {
+        "bench": "scaling",
+        "backend": jax.default_backend(),
+        "host": platform.platform(),
+        "scaling": scaling,
+        "out_of_core": oocore,
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"[bench_scaling] wrote {out_json}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--oocore", action="store_true",
+                    help="only the out-of-core tile_size leg (CI-friendly)")
+    ap.add_argument("--iters", type=int, default=12)
+    ap.add_argument("--out-dir", default="experiments")
+    ap.add_argument("--out-json", default="BENCH_scaling.json")
+    args = ap.parse_args(argv)
+    if args.oocore:
+        _write_json(args.out_json, oocore=run_oocore(iters=args.iters))
+    else:
+        run(out_dir=args.out_dir, out_json=args.out_json,
+            oocore_iters=args.iters)
+
+
 if __name__ == "__main__":
-    run()
+    main()

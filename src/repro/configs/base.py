@@ -190,7 +190,37 @@ class DPMMConfig:
     # distribution
     shard_features: bool = False      # shard d over the model axis (high-d)
     use_pallas: bool = False          # swap in Pallas kernels (TPU)
+    # data plane: None = resident (points device-resident, fastest); an int
+    # streams points through tiles of ~this many rows per data shard
+    # (rounded up to the suff-stat fold block) from the DataSource — device
+    # memory becomes O(k_max + tile_size) and N is bounded by host storage.
+    # Chains are bitwise identical across planes and tile sizes.
+    tile_size: Optional[int] = None
     seed: int = 0
+
+    def __post_init__(self):
+        def positive(name, value):
+            import numbers
+            if (isinstance(value, bool)
+                    or not isinstance(value, numbers.Integral)
+                    or value <= 0):
+                raise ValueError(
+                    f"DPMMConfig.{name} must be a positive int, got "
+                    f"{value!r}")
+        positive("k_max", self.k_max)
+        positive("init_clusters", self.init_clusters)
+        positive("log_every", self.log_every)
+        if self.tile_size is not None:
+            positive("tile_size", self.tile_size)
+        if self.init_clusters > self.k_max:
+            raise ValueError(
+                f"DPMMConfig.init_clusters ({self.init_clusters}) exceeds "
+                f"k_max ({self.k_max}): the static capacity cannot hold "
+                "the initial clusters")
+        if self.iters < 0 or self.burnout < 0:
+            raise ValueError(
+                f"DPMMConfig.iters/burnout must be >= 0, got "
+                f"iters={self.iters} burnout={self.burnout}")
 
 
 @dataclasses.dataclass(frozen=True)

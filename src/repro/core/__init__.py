@@ -3,4 +3,4 @@
 from repro.core.family import (ComponentFamily, available_families,  # noqa: F401
                                get_family, register_family)
 from repro.core.sampler import DPMM, FitResult, dpmm_step  # noqa: F401
-from repro.core.state import DPMMState  # noqa: F401
+from repro.core.state import ModelState, PointState  # noqa: F401

@@ -46,6 +46,37 @@ def data_axes_of(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in mesh.axis_names if a != "model")
 
 
+def n_data_shards(mesh: Mesh) -> int:
+    """Number of shards the data axes partition points into."""
+    return int(np.prod([mesh.shape[a] for a in data_axes_of(mesh)],
+                       dtype=np.int64))
+
+
+def tile_plan(n: int, n_shards: int, tile_size: Optional[int]
+              ) -> Tuple[int, Sequence[Tuple[int, int]]]:
+    """Per-shard tile layout for the streamed data plane.
+
+    Returns ``(n_local, [(offset, length), ...])``: every data shard holds
+    exactly ``n_local = ceil(n / n_shards)`` rows (the same padded layout
+    ``shard_points`` produces for the resident plane, so global point
+    indices — and therefore chains — match bitwise across planes), cut
+    into tiles at STATS_BLOCK-aligned offsets. Alignment keeps the
+    suff-stat block fold's float addition order identical for every tile
+    size (core/gibbs.py); only the shard's ragged tail tile may be
+    non-multiple. ``tile_size`` is rounded up to the alignment; ``None``
+    picks a default sized for streaming (64 blocks).
+    """
+    from repro.core.gibbs import STATS_BLOCK
+    n_local = -(-n // n_shards)
+    if tile_size is None:
+        tile_size = 64 * STATS_BLOCK
+    tile = -(-tile_size // STATS_BLOCK) * STATS_BLOCK
+    tile = min(tile, n_local)
+    tiles = [(off, min(tile, n_local - off))
+             for off in range(0, n_local, tile)]
+    return n_local, tiles
+
+
 def pad_to_multiple(x: np.ndarray, multiple: int):
     """Pad axis 0 to a multiple; returns (padded, valid_mask)."""
     n = x.shape[0]

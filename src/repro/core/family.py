@@ -24,6 +24,11 @@ everything the skeleton needs from an observation model:
    (``feature_stat_fields``, all-gathered after the data-axis psum) and how
    to slice their params to a local feature block (``slice_params``), and
  - ``build_prior(cfg, x)``: config + data -> prior hyper-parameters.
+   ``DPMM.fit`` passes the (1, d) *column-mean summary row* from the
+   ``DataSource`` (computed by one canonical streaming pass so resident
+   and out-of-core fits build bitwise-identical priors) — family hooks may
+   read ``x.shape[1]`` and ``x.mean(axis=0)`` but must not assume all N
+   rows are present.
 
 ``core/gibbs.py``, ``core/sampler.py`` and ``core/splitmerge.py`` dispatch
 *only* through this interface — no ``hasattr``/``getattr`` probing of
@@ -46,7 +51,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core import diag_gaussian, multinomial, niw, poisson
-from repro.core.state import DPMMState
+from repro.core.state import ModelState, PointState
 from repro.kernels import prng
 # the inactive-cluster assignment mask — single-sourced from the fused
 # kernels so reference and in-kernel masking can never drift
@@ -310,20 +315,23 @@ def shardable_families() -> Tuple[str, ...]:
                  if _REGISTRY[n].feature_shardable)
 
 
-def state_partition_specs(family: ComponentFamily,
-                          shard_spec: P) -> DPMMState:
-    """shard_map specs for a DPMMState: labels on the data axes, everything
-    per-cluster replicated (paper §4.3: only stats/params are global)."""
+def state_partition_specs(family: ComponentFamily, shard_spec: P
+                          ) -> Tuple[ModelState, PointState]:
+    """shard_map specs for the (ModelState, PointState) pair: per-point
+    state on the data axes, everything per-cluster replicated (paper §4.3:
+    only stats/params are global)."""
     rep = P()
     rep_tree = lambda struct: jax.tree.map(lambda _: rep, struct)
-    return DPMMState(
+    model = ModelState(
         key=rep, it=rep, active=rep, logweights=rep, sub_logweights=rep,
         stuck=rep,
         params=rep_tree(family.param_struct()),
         subparams=rep_tree(family.param_struct()),
         stats=rep_tree(family.stats_struct()),
-        substats=rep_tree(family.stats_struct()),
-        labels=shard_spec, sublabels=shard_spec)
+        substats=rep_tree(family.stats_struct()))
+    point = PointState(labels=shard_spec, sublabels=shard_spec,
+                       valid=shard_spec)
+    return model, point
 
 
 # ---------------------------------------------------------------------------

@@ -1,15 +1,25 @@
-"""Restricted Gibbs sweep (paper §4.1 steps a-f), shard_map-ready.
+"""Restricted Gibbs sweep (paper §4.1 steps a-f), shard_map- and tile-ready.
 
-The sweep runs *inside* ``shard_map``: points/labels are local shards, all
-per-cluster quantities are replicated. The only cross-device communication
-is the ``psum`` of sufficient statistics at the end of the sweep — the
-paper's 'we never transfer data; only sufficient statistics and parameters'
-property (§4.3).
+The sweep is split along the model/point state boundary (core/state.py):
 
-Per-point randomness is a counter-based Threefry draw keyed on the *global*
-point index (kernels/prng.py), so chains are bitwise identical under any
-sharding (DESIGN §2, assumption 3) AND identical between the fused Pallas
-assignment kernels and the jnp reference path.
+ - ``sweep_model`` — steps (a)-(d): replicated O(K) weight/parameter
+   resampling from the current sufficient statistics.
+ - ``sweep_tile`` — steps (e)/(f) plus suff-stat accumulation for one
+   contiguous tile of points. Per-point randomness is a counter-based
+   Threefry draw keyed on the *global* point index (kernels/prng.py), so
+   the tile decomposition is a pure performance knob: resident (one tile =
+   the whole local shard), out-of-core streamed tiles, and any data
+   sharding all produce bitwise-identical chains.
+ - ``finalize_substats`` — the ONE cross-device reduction: a psum of the
+   (K, 2, ...) sub-cluster stats (paper §4.3: 'we never transfer data;
+   only sufficient statistics and parameters').
+
+Sufficient statistics are *additive*, so tiles fold partial stats into a
+running accumulator. To make the fold bitwise-independent of the tile size,
+every path accumulates in fixed ``STATS_BLOCK``-point blocks, left to
+right in global point order: any tile size that is a multiple of
+``STATS_BLOCK`` (the driver rounds — data/source.py) produces the exact
+same float addition sequence as the resident single-tile pass.
 
 The hot path itself lives behind the ``ComponentFamily`` dispatch
 (core/family.py): ``family.assign`` (step e), ``family.sub_assign``
@@ -19,14 +29,20 @@ log-likelihood — step (f) costs O(N T), not O(N K T), on every path.
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.family import NEG_INF  # noqa: F401  (re-export: sampler)
-from repro.core.state import DPMMState
+from repro.core.state import ModelState, PointState
 from repro.kernels import prng
+
+# Granularity of the suff-stat fold. Tiles are STATS_BLOCK-aligned (except
+# a shard's ragged tail), so the accumulation order — and therefore every
+# float in the chain — is identical for all tile sizes, including the
+# resident whole-shard "tile". Changing this constant changes chains.
+STATS_BLOCK = 1024
 
 
 def psum_tree(tree: Any, axes: Tuple[str, ...]):
@@ -35,15 +51,24 @@ def psum_tree(tree: Any, axes: Tuple[str, ...]):
     return jax.tree.map(lambda a: jax.lax.psum(a, axes), tree)
 
 
-def global_indices(n_local: int, axes: Tuple[str, ...]) -> jax.Array:
-    """Global point indices of this shard (0..N-1 ordering over the mesh).
+def add_tree(a: Any, b: Any):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def global_indices(n_local: int, axes: Tuple[str, ...],
+                   offset: Any = 0, length: Optional[int] = None
+                   ) -> jax.Array:
+    """Global point indices of a tile of this shard (0..N-1 over the mesh).
 
     Assumes every data shard holds exactly ``n_local`` points —
-    ``distributed.shard_points`` guarantees it by padding N up to a multiple
-    of the data-shard count — so this shard's offset is simply
-    ``axis_index(axes) * n_local``.
+    ``distributed.shard_points`` / the tiled layout guarantee it by padding
+    N up to a multiple of the data-shard count — so this shard's base is
+    simply ``axis_index(axes) * n_local``. ``offset``/``length`` select a
+    tile of the shard (``offset`` may be a traced scalar so tile functions
+    compile once per tile *length*, not per tile).
     """
-    base = jnp.arange(n_local, dtype=jnp.uint32)
+    length = n_local if length is None else length
+    base = jnp.uint32(offset) + jnp.arange(length, dtype=jnp.uint32)
     if not axes:
         return base
     idx = jax.lax.axis_index(axes)  # linearized index over the given axes
@@ -79,28 +104,66 @@ def sample_subweights(key: jax.Array, active: jax.Array, nkl: jax.Array,
     return jnp.where(active[:, None], logw, jnp.log(0.5))
 
 
-def compute_stats(family, x: jax.Array, valid: jax.Array, labels: jax.Array,
-                  sublabels: jax.Array, k_max: int,
-                  axes: Tuple[str, ...], feat_axis=None,
-                  use_pallas: bool = False):
-    """Suff-stats of clusters and sub-clusters from (sharded) labels + psum.
+# ---------------------------------------------------------------------------
+# Tile-foldable suff-stat accumulation
+# ---------------------------------------------------------------------------
+def empty_substats(family, k_max: int, d: int):
+    """Zero (k_max, 2)-batched sub-cluster stats accumulator (local
+    feature width ``d`` — the slice width in feature-sharded mode)."""
+    return family.empty_stats((k_max, 2), d)
+
+
+def accumulate_substats(family, x: jax.Array, valid: jax.Array,
+                        labels: jax.Array, sublabels: jax.Array,
+                        k_max: int, acc, use_pallas: bool = False):
+    """Fold this tile's sub-cluster stat partials into ``acc``.
+
+    Partials are computed per STATS_BLOCK-point block and added left to
+    right in point order, so the float addition sequence — hence every bit
+    of the resulting stats — is invariant to how points are tiled, as long
+    as tile boundaries are STATS_BLOCK-aligned (the last tile of a shard
+    may be ragged; its trailing partial block folds last either way).
+    """
+    n = x.shape[0]
+    nb, rem = divmod(n, STATS_BLOCK)
+    if nb:
+        blk = lambda a: a[:nb * STATS_BLOCK].reshape(
+            (nb, STATS_BLOCK) + a.shape[1:])
+
+        def body(a, args):
+            xb, vb, lb, sb = args
+            p = family.stats_from_labels(xb, vb, lb, sb, k_max,
+                                         use_pallas=use_pallas)
+            return add_tree(a, p), None
+
+        acc, _ = jax.lax.scan(
+            body, acc, (blk(x), blk(valid), blk(labels), blk(sublabels)))
+    if rem:
+        tail = slice(nb * STATS_BLOCK, None)
+        p = family.stats_from_labels(x[tail], valid[tail], labels[tail],
+                                     sublabels[tail], k_max,
+                                     use_pallas=use_pallas)
+        acc = add_tree(acc, p)
+    return acc
+
+
+def finalize_substats(family, substats, axes: Tuple[str, ...],
+                      feat_axis=None):
+    """psum the folded sub-cluster stats, then derive cluster stats.
 
     This is the paper's 3-step suff-stat update (§4.4): label-indexed local
-    accumulation (the Pallas suffstats kernels on TPU; segment-sum /
-    one-hot einsum otherwise — family.stats_from_labels), then ONE
-    cross-shard psum of the (K, 2, ...) sub-cluster stats. Cluster stats
-    are the exact fold of the sub-cluster stats over the l/r axis (every
-    point belongs to exactly one sub-cluster of its cluster), computed
-    *after* the psum — so the wire carries O(K * T) floats once, half of
-    what psumming clusters and sub-clusters separately moved.
+    accumulation, then ONE cross-shard psum of the (K, 2, ...) sub-cluster
+    stats. Cluster stats are the exact fold of the sub-cluster stats over
+    the l/r axis (every point belongs to exactly one sub-cluster of its
+    cluster), computed *after* the psum — so the wire carries O(K * T)
+    floats once, half of what psumming clusters and sub-clusters separately
+    would move.
 
     ``feat_axis``: the feature dim of x is additionally sharded over this
     mesh axis (high-d mode, DESIGN §10): the family's feature-sliced stats
     fields are all-gathered along features after the data-axis psum — still
     O(K * d). Only ``family.feature_shardable`` families support this.
     """
-    substats = family.stats_from_labels(x, valid, labels, sublabels, k_max,
-                                        use_pallas=use_pallas)
     substats = psum_tree(substats, axes)
     if feat_axis is not None:
         substats = family.gather_feature_stats(substats, feat_axis)
@@ -108,41 +171,83 @@ def compute_stats(family, x: jax.Array, valid: jax.Array, labels: jax.Array,
     return stats, substats
 
 
-def sweep(state: DPMMState, x: jax.Array, valid: jax.Array, prior, family,
-          alpha: float, axes: Tuple[str, ...],
-          use_pallas: bool = False, feat_axis=None) -> DPMMState:
-    """One restricted Gibbs sweep (steps a-f). Runs under shard_map."""
-    key = jax.random.fold_in(state.key, state.it)
-    k_w, k_sw, k_p, k_sp, k_z, k_zb = jax.random.split(key, 6)
+def compute_stats(family, x: jax.Array, valid: jax.Array, labels: jax.Array,
+                  sublabels: jax.Array, k_max: int,
+                  axes: Tuple[str, ...], feat_axis=None,
+                  use_pallas: bool = False):
+    """Suff-stats of clusters and sub-clusters from (sharded) labels + psum
+    — the whole-shard (single-tile) composition of the accumulate/finalize
+    pair above."""
+    acc = empty_substats(family, k_max, x.shape[-1])
+    acc = accumulate_substats(family, x, valid, labels, sublabels, k_max,
+                              acc, use_pallas)
+    return finalize_substats(family, acc, axes, feat_axis)
 
-    # (a) cluster weights  (b) sub-cluster weights
-    logw = sample_weights(k_w, state.active, state.stats.n, alpha)
+
+# ---------------------------------------------------------------------------
+# The sweep, split into model-side and tile-side halves
+# ---------------------------------------------------------------------------
+def sweep_keys(model: ModelState):
+    """The six per-sweep keys, derived from (key, it) only — so the tiled
+    driver's separate model/tile calls reconstruct the exact keys the
+    resident fused sweep uses."""
+    key = jax.random.fold_in(model.key, model.it)
+    return jax.random.split(key, 6)   # k_w, k_sw, k_p, k_sp, k_z, k_zb
+
+
+def sweep_model(model: ModelState, prior, family, alpha: float
+                ) -> ModelState:
+    """Steps (a)-(d): replicated O(K) weights + params resampling."""
+    k_w, k_sw, k_p, k_sp, _, _ = sweep_keys(model)
+    logw = sample_weights(k_w, model.active, model.stats.n, alpha)
     sublogw = sample_subweights(
-        k_sw, state.active, state.substats.n[:, 0], state.substats.n[:, 1],
+        k_sw, model.active, model.substats.n[:, 0], model.substats.n[:, 1],
         alpha)
+    params = family.sample_posterior(k_p, prior, model.stats)
+    subparams = family.sample_posterior(k_sp, prior, model.substats)
+    return model._replace(logweights=logw, sub_logweights=sublogw,
+                          params=params, subparams=subparams)
 
-    # (c) cluster params  (d) sub-cluster params  — replicated O(K d^3)
-    params = family.sample_posterior(k_p, prior, state.stats)
-    subparams = family.sample_posterior(k_sp, prior, state.substats)
+
+def sweep_tile(model: ModelState, x: jax.Array, point: PointState,
+               gidx: jax.Array, acc, family,
+               use_pallas: bool = False, feat_axis=None
+               ) -> Tuple[PointState, Any]:
+    """Steps (e)/(f) + suff-stat fold for one tile of points.
+
+    ``gidx`` carries the tile's global point indices; all randomness is
+    counter-based on them, so this body is oblivious to which tile (or
+    shard) it is running on.
+    """
+    _, _, _, _, k_z, k_zb = sweep_keys(model)
 
     # (e) cluster assignments: z_i ~ pi_k f(x_i; theta_k)  over *existing* k
     # — the O(N K T) hot spot, fused through the family dispatch
-    gidx = global_indices(x.shape[0], axes)
-    labels = family.assign(x, params, logw, state.active, gidx,
-                           prng.key_words(k_z), use_pallas=use_pallas,
+    labels = family.assign(x, model.params, model.logweights, model.active,
+                           gidx, prng.key_words(k_z), use_pallas=use_pallas,
                            feat_axis=feat_axis)
 
     # (f) sub-cluster assignments under the point's OWN cluster only: O(N T)
-    sublabels = family.sub_assign(x, subparams, sublogw, labels, gidx,
-                                  prng.key_words(k_zb),
+    sublabels = family.sub_assign(x, model.subparams, model.sub_logweights,
+                                  labels, gidx, prng.key_words(k_zb),
                                   use_pallas=use_pallas, feat_axis=feat_axis)
 
-    # suff-stats + the one cross-shard reduction
-    stats, substats = compute_stats(
-        family, x, valid, labels, sublabels, state.active.shape[0], axes,
-        feat_axis, use_pallas)
+    k_max = model.active.shape[0]
+    acc = accumulate_substats(family, x, point.valid, labels, sublabels,
+                              k_max, acc, use_pallas)
+    return point._replace(labels=labels, sublabels=sublabels), acc
 
-    return state._replace(
-        logweights=logw, sub_logweights=sublogw, params=params,
-        subparams=subparams, stats=stats, substats=substats,
-        labels=labels, sublabels=sublabels)
+
+def sweep(model: ModelState, point: PointState, x: jax.Array, prior, family,
+          alpha: float, axes: Tuple[str, ...],
+          use_pallas: bool = False, feat_axis=None
+          ) -> Tuple[ModelState, PointState]:
+    """One restricted Gibbs sweep (steps a-f), whole shard as a single
+    tile. Runs under shard_map; the resident driver's hot loop."""
+    model = sweep_model(model, prior, family, alpha)
+    gidx = global_indices(x.shape[0], axes)
+    acc = empty_substats(family, model.active.shape[0], x.shape[-1])
+    point, acc = sweep_tile(model, x, point, gidx, acc, family,
+                            use_pallas=use_pallas, feat_axis=feat_axis)
+    stats, substats = finalize_substats(family, acc, axes, feat_axis)
+    return model._replace(stats=stats, substats=substats), point

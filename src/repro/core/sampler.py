@@ -2,25 +2,37 @@
 
 Composition per iteration (paper §4.1):
     restricted Gibbs sweep  ->  splits  ->  merges  ->  stats consistency
-with splits/merges gated by ``burnout``. Iterations run inside a single
-``shard_map`` over the mesh's data axes; the only cross-device
-communication is the psum of sufficient statistics (paper §4.3).
+with splits/merges gated by ``burnout``. Observation models are
+``ComponentFamily`` instances looked up from the registry (core/family.py)
+by ``cfg.component`` — the sampler never inspects param/stat pytrees
+itself.
 
-Observation models are ``ComponentFamily`` instances looked up from the
-registry (core/family.py) by ``cfg.component`` — the sampler never inspects
-param/stat pytrees itself.
+Two data planes share every sampling body (core/gibbs.py,
+core/splitmerge.py — the split is model-side O(K) math vs per-point tile
+bodies):
 
-The driver is a *chunked on-device scan*: ``cfg.log_every`` iterations of
-``dpmm_step`` run inside one jitted, buffer-donated ``lax.scan`` call that
-collects ``state.summarize()`` history on device, so the host blocks once
-per chunk (``ceil(iters / log_every)`` syncs total) instead of once per
-iteration — no O(iters) host round-trips in the hot loop.
+ - **Resident** (``cfg.tile_size is None`` and the source is resident):
+   points are device-resident; ``cfg.log_every`` iterations run inside one
+   jitted, buffer-donated ``lax.scan`` chunk that carries the
+   (ModelState, PointState) pair and collects ``summarize()`` history on
+   device, so the host blocks once per chunk — no O(iters) round-trips.
+ - **Tiled / out-of-core** (``cfg.tile_size`` set, or a non-resident
+   ``DataSource``): only ModelState persists on device. Points stream
+   through fixed-size tiles pulled from the ``DataSource``
+   (data/source.py) with double-buffered ``jax.device_put``; per-point
+   labels live in host arrays and ride along with their tile. Device
+   memory is O(K_max + tile), so N is bounded by host storage, not HBM.
+
+Because per-point randomness is counter-based on the *global* point index
+and suff-stats fold in fixed STATS_BLOCK-aligned blocks (core/gibbs.py),
+the two planes produce bitwise-identical chains — tile size, like shard
+count, is a pure performance knob.
 
 Example (paper §3.4.1 analogue):
     >>> from repro.core.sampler import DPMM
     >>> from repro.configs import DPMMConfig
     >>> model = DPMM(DPMMConfig(alpha=10., iters=100))
-    >>> result = model.fit(x)          # x: (N, d) np.ndarray
+    >>> result = model.fit(x)          # x: (N, d) np.ndarray or DataSource
     >>> result.labels, result.k, result.nmi(gt)
 """
 from __future__ import annotations
@@ -28,41 +40,56 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DPMMConfig
 from repro.core import gibbs, splitmerge
 from repro.core.distributed import (data_axes_of, make_data_mesh,
-                                    shard_map, shard_points)
+                                    n_data_shards, shard_map, shard_points,
+                                    tile_plan)
 from repro.core.family import (ComponentFamily, get_family,
                                state_partition_specs)
 from repro.core.metrics import ari, nmi
-from repro.core.state import DPMMState
+from repro.core.state import ModelState, PointState
+from repro.data.source import DataSource, as_source
 
 _HIST_KEYS = ("k", "max_cluster", "min_cluster")
 
 
 def _init_local(key, x, valid, *, prior, family, cfg, axes, k_max,
-                feat_axis=None):
-    """Initial state (runs under shard_map)."""
+                feat_axis=None) -> Tuple[ModelState, PointState]:
+    """Initial state (runs under shard_map), whole shard as one tile."""
     n_local = x.shape[0]
     gidx = gibbs.global_indices(n_local, axes)
-    labels = (gidx % jnp.uint32(cfg.init_clusters)).astype(jnp.int32)
+    labels = _init_labels(gidx, cfg.init_clusters)
     # first pass for cluster means, then hyperplane sub-label init
     stats0, _ = gibbs.compute_stats(
         family, x, valid, labels, jnp.zeros_like(labels), k_max, axes,
         feat_axis, cfg.use_pallas)
-    sublabels = splitmerge.hyperplane_bits(
-        jax.random.fold_in(key, 1), x, labels, family.cluster_means(stats0),
-        feat_axis)
+    means0 = family.cluster_means(stats0)
+    v0 = splitmerge.hyperplane_vecs(
+        jax.random.fold_in(key, 1), k_max, means0.shape[1], x.dtype)
+    sublabels = splitmerge.hyperplane_bits(x, labels, means0, v0, feat_axis)
     stats, substats = gibbs.compute_stats(
         family, x, valid, labels, sublabels, k_max, axes, feat_axis,
         cfg.use_pallas)
+    return (_init_model(key, stats, substats, prior=prior, family=family,
+                        cfg=cfg, k_max=k_max),
+            PointState(labels=labels, sublabels=sublabels, valid=valid))
+
+
+def _init_labels(gidx: jax.Array, init_clusters: int) -> jax.Array:
+    return (gidx % jnp.uint32(init_clusters)).astype(jnp.int32)
+
+
+def _init_model(key, stats, substats, *, prior, family, cfg,
+                k_max) -> ModelState:
+    """Replicated O(K) half of initialization, given the initial stats."""
     active = jnp.arange(k_max) < cfg.init_clusters
     params = family.expected_params(prior, stats)
     subparams = family.expected_params(prior, substats)
@@ -71,85 +98,73 @@ def _init_local(key, x, valid, *, prior, family, cfg, axes, k_max,
     logw = jnp.where(active, -jnp.log(float(cfg.init_clusters)),
                      gibbs.NEG_INF).astype(jnp.float32)
     sublogw = jnp.full((k_max, 2), jnp.log(0.5), dtype=jnp.float32)
-    return DPMMState(
+    return ModelState(
         key=key, it=jnp.zeros((), jnp.int32), active=active,
         logweights=logw, sub_logweights=sublogw,
         stuck=jnp.zeros((k_max,), jnp.int32), params=params,
-        subparams=subparams, stats=stats, substats=substats,
-        labels=labels, sublabels=sublabels)
+        subparams=subparams, stats=stats, substats=substats)
 
 
-def _split_merge(state: DPMMState, x, valid, *, prior, family, cfg, axes,
-                 k_max, feat_axis=None) -> DPMMState:
-    key = jax.random.fold_in(state.key, -(state.it + 1))
-    k_s, k_m, k_b = jax.random.split(key, 3)
-
-    dec_s = splitmerge.propose_splits(k_s, state, prior, family, cfg.alpha)
-    stats1 = splitmerge.apply_split_to_stats(
-        family, state.stats, state.substats, dec_s)
-    # provisional relabel (moves r-halves to their new slots) ...
-    labels_mid = jnp.where(
-        dec_s.accept[state.labels] & (state.sublabels == 1),
-        dec_s.dest[state.labels], state.labels).astype(jnp.int32)
-    # ... then hyperplane sub-label init around the *post-split* means
-    bits = splitmerge.hyperplane_bits(
-        k_b, x, labels_mid, family.cluster_means(stats1), feat_axis)
-    labels1, sublabels1 = splitmerge.relabel_after_split(
-        state.labels, state.sublabels, dec_s, bits)
-
-    dec_m = splitmerge.propose_merges(
-        k_m, dec_s.new_active, stats1, prior, family, cfg.alpha)
-    labels2, sublabels2 = splitmerge.relabel_after_merge(
-        labels1, sublabels1, dec_m)
-
-    # sub-cluster reset: clusters whose split keeps being rejected re-draw
-    # their sub-labels from a fresh hyperplane (escapes sub-Gibbs local
-    # modes; the reference DPMMSubClusters does the same). The MH target is
-    # untouched — sub-labels are auxiliary proposal state.
-    stuck = jnp.where(dec_s.accept | dec_m.merged | ~state.active,
-                      0, state.stuck + 1)
-    reset = stuck >= cfg.subreset_every
-    stuck = jnp.where(reset, 0, stuck).astype(jnp.int32)
-    stats2 = splitmerge.apply_merge_to_stats(stats1, dec_m)
-    bits2 = splitmerge.hyperplane_bits(
-        jax.random.fold_in(k_b, 1), x, labels2, family.cluster_means(stats2),
-        feat_axis)
-    sublabels2 = jnp.where(reset[labels2], bits2, sublabels2)
-
-    # consistency pass: recompute stats AND substats from the new labels
-    # (paper §4.4: 'processing accepted splits/merges requires updating the
-    # sufficient statistics', O(N/G) + one psum) — same label-indexed
-    # fused/reference stats path as the sweep (family.stats_from_labels)
-    stats3, substats3 = gibbs.compute_stats(
-        family, x, valid, labels2, sublabels2, k_max, axes, feat_axis,
-        cfg.use_pallas)
-    return state._replace(
-        active=dec_m.new_active, stuck=stuck, stats=stats3,
-        substats=substats3, labels=labels2, sublabels=sublabels2)
+def _move_key(model: ModelState) -> jax.Array:
+    """Per-iteration split/merge key (negative fold: disjoint from the
+    sweep's fold_in(key, it) stream)."""
+    return jax.random.fold_in(model.key, -(model.it + 1))
 
 
-def dpmm_step(state: DPMMState, x, valid, *, prior, family, cfg, axes,
-              k_max, feat_axis=None) -> DPMMState:
+def _split_merge(model: ModelState, point: PointState, x, *, prior, family,
+                 cfg, axes, k_max, feat_axis=None
+                 ) -> Tuple[ModelState, PointState]:
+    """Resident split/merge: plan (O(K)), one whole-shard tile, finalize."""
+    plan = splitmerge.plan_split_merge(
+        _move_key(model), model, prior, family, cfg.alpha,
+        cfg.subreset_every)
+    acc = gibbs.empty_substats(family, k_max, x.shape[-1])
+    point, acc = splitmerge.split_merge_tile(
+        plan, x, point, acc, family, use_pallas=cfg.use_pallas,
+        feat_axis=feat_axis)
+    # consistency pass (paper §4.4: 'processing accepted splits/merges
+    # requires updating the sufficient statistics', O(N/G) + one psum)
+    stats3, substats3 = gibbs.finalize_substats(family, acc, axes, feat_axis)
+    model = model._replace(active=plan.merge.new_active, stuck=plan.stuck,
+                           stats=stats3, substats=substats3)
+    return model, point
+
+
+def dpmm_step(model: ModelState, point: PointState, x, *, prior, family,
+              cfg, axes, k_max, feat_axis=None
+              ) -> Tuple[ModelState, PointState]:
     """One full iteration; designed to run under shard_map."""
-    state = gibbs.sweep(state, x, valid, prior, family, cfg.alpha, axes,
-                        use_pallas=cfg.use_pallas, feat_axis=feat_axis)
-    state = jax.lax.cond(
-        state.it >= cfg.burnout,
-        lambda s: _split_merge(s, x, valid, prior=prior, family=family,
-                               cfg=cfg, axes=axes, k_max=k_max,
-                               feat_axis=feat_axis),
-        lambda s: s,
-        state)
-    return state._replace(it=state.it + 1)
+    model, point = gibbs.sweep(model, point, x, prior, family, cfg.alpha,
+                               axes, use_pallas=cfg.use_pallas,
+                               feat_axis=feat_axis)
+    model, point = jax.lax.cond(
+        model.it >= cfg.burnout,
+        lambda mp: _split_merge(*mp, x, prior=prior, family=family,
+                                cfg=cfg, axes=axes, k_max=k_max,
+                                feat_axis=feat_axis),
+        lambda mp: mp,
+        (model, point))
+    return model._replace(it=model.it + 1), point
+
+
+def _tree_bytes(tree: Any) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(tree)
+               if hasattr(l, "shape"))
 
 
 @dataclasses.dataclass
 class FitResult:
-    state: DPMMState
+    state: ModelState            # final replicated model-side state
     labels: np.ndarray           # (N,) cluster assignments (unpadded)
     k: int
     history: Dict[str, np.ndarray]
     iter_times_s: List[float]
+    # accounting of what the fit kept device-resident (see README
+    # 'Memory model'): est_peak_bytes is the analytic per-run peak over
+    # persistent device buffers; backends with memory_stats() also report
+    # measured peak_bytes_in_use (None on CPU).
+    device_bytes: Optional[Dict[str, Any]] = None
 
     def nmi(self, true_labels: np.ndarray, n_true: Optional[int] = None):
         n_true = n_true or int(true_labels.max()) + 1
@@ -164,6 +179,11 @@ class FitResult:
                          jnp.asarray(self.labels), n_true, k_max))
 
 
+def _measured_peak() -> Optional[int]:
+    stats = jax.local_devices()[0].memory_stats() or {}
+    return stats.get("peak_bytes_in_use")
+
+
 class DPMM:
     """Distributed DPMM with sub-cluster splits (paper [1] + this paper)."""
 
@@ -172,29 +192,51 @@ class DPMM:
         self.mesh = mesh
         self.family: ComponentFamily = get_family(cfg.component)
 
-    def fit(self, x: np.ndarray, iters: Optional[int] = None,
+    def fit(self, x, iters: Optional[int] = None,
             verbose: bool = False) -> FitResult:
+        """Fit to ``x``: an (N, d) array (resident fast path) or any
+        ``DataSource`` (e.g. ``HostTiledSource`` over an np.memmap for
+        out-of-core data). ``cfg.tile_size`` forces the tiled plane even
+        for resident arrays — chains are bitwise identical either way."""
+        source = as_source(x)
+        iters = iters if iters is not None else self.cfg.iters
+        if self.cfg.tile_size is None and source.resident() is not None:
+            return self._fit_resident(source, iters, verbose)
+        return self._fit_tiled(source, iters, verbose)
+
+    def _setup(self, source: DataSource):
         cfg = self.cfg
         family = self.family
-        iters = iters if iters is not None else cfg.iters
         mesh = self.mesh if self.mesh is not None else make_data_mesh()
         axes = data_axes_of(mesh)
-        prior = family.build_prior(cfg, x)
-        n = x.shape[0]
-        # non-separable families keep features replicated even when
-        # shard_features is requested (family.feature_shardable contract)
+        # the prior's data-dependent part is the column mean, computed
+        # once by the source's canonical streaming pass — identical for
+        # resident and out-of-core modes (data/source.py)
+        prior = family.build_prior(cfg, source.column_mean()[None, :])
         want_feat_shard = cfg.shard_features and family.feature_shardable
-        xs, valid = shard_points(mesh, np.asarray(x, np.float32),
-                                 want_feat_shard)
         feat_axis = ("model" if (want_feat_shard
                                  and "model" in mesh.axis_names)
                      else None)
         kwargs = dict(prior=prior, family=family, cfg=cfg, axes=axes,
                       k_max=cfg.k_max, feat_axis=feat_axis)
+        return mesh, axes, feat_axis, kwargs
+
+    # ------------------------------------------------------------------
+    # Resident plane: device-resident points, chunked on-device scan
+    # ------------------------------------------------------------------
+    def _fit_resident(self, source: DataSource, iters: int,
+                      verbose: bool) -> FitResult:
+        cfg = self.cfg
+        mesh, axes, feat_axis, kwargs = self._setup(source)
+        x = source.resident()
+        n = x.shape[0]
+        # non-separable families keep features replicated even when
+        # shard_features is requested (family.feature_shardable contract)
+        xs, valid = shard_points(mesh, x, feat_axis is not None)
         shard_spec = P(axes)
         x_in_spec = P(axes, feat_axis)
         rep = P()
-        state_specs = state_partition_specs(family, shard_spec)
+        state_specs = state_partition_specs(self.family, shard_spec)
 
         init = jax.jit(shard_map(
             functools.partial(_init_local, **kwargs), mesh=mesh,
@@ -203,24 +245,26 @@ class DPMM:
         def make_chunk(length: int):
             """`length` iterations in one jitted call, history on device.
 
-            The scan carries the full sampler state; per-step host-visible
-            output is only the O(1) ``summarize()`` scalars. State buffers
-            are donated, so chunk i+1 reuses chunk i's memory.
+            The scan carries the (model, point) state pair; per-step
+            host-visible output is only the O(1) ``summarize()`` scalars.
+            State buffers are donated, so chunk i+1 reuses chunk i's
+            memory.
             """
-            def run(state, x, valid):
-                def body(s, _):
-                    s = dpmm_step(s, x, valid, **kwargs)
-                    return s, s.summarize()
-                return jax.lax.scan(body, state, None, length=length)
+            def run(model, point, x):
+                def body(mp, _):
+                    m, p = dpmm_step(*mp, x, **kwargs)
+                    return (m, p), m.summarize()
+                return jax.lax.scan(body, (model, point), None,
+                                    length=length)
             hist_specs = {k: rep for k in _HIST_KEYS}
             return jax.jit(
                 shard_map(run, mesh=mesh,
-                          in_specs=(state_specs, x_in_spec, shard_spec),
+                          in_specs=(*state_specs, x_in_spec),
                           out_specs=(state_specs, hist_specs)),
-                donate_argnums=(0,))
+                donate_argnums=(0, 1))
 
         key = jax.random.key(cfg.seed)
-        state = init(key, xs, valid)
+        model, point = init(key, xs, valid)
 
         chunk = max(1, cfg.log_every)
         lengths = [chunk] * (iters // chunk)
@@ -237,9 +281,9 @@ class DPMM:
                 # At most two compiles per fit: `log_every` + one trailing
                 # remainder length.
                 chunk_fns[length] = make_chunk(length).lower(
-                    state, xs, valid).compile()
+                    model, point, xs).compile()
             t0 = time.perf_counter()
-            state, hist = chunk_fns[length](state, xs, valid)
+            (model, point), hist = chunk_fns[length](model, point, xs)
             hist = jax.device_get(hist)       # the one host sync per chunk
             dt = time.perf_counter() - t0
             times.extend([dt / length] * length)
@@ -252,7 +296,271 @@ class DPMM:
             k: (np.concatenate([h[k] for h in hist_chunks])
                 if hist_chunks else np.zeros((0,)))
             for k in _HIST_KEYS}
-        labels = np.asarray(jax.device_get(state.labels))[:n]
+        labels = np.asarray(jax.device_get(point.labels))[:n]
+        device_bytes = {
+            "mode": "resident",
+            "est_peak_bytes": (_tree_bytes(xs) + _tree_bytes(valid)
+                               + 2 * _tree_bytes(point)
+                               + 2 * _tree_bytes(model)),
+            "peak_bytes_in_use": _measured_peak(),
+        }
         return FitResult(
-            state=state, labels=labels, k=int(state.k_hat),
-            history=history, iter_times_s=times)
+            state=model, labels=labels, k=int(model.k_hat),
+            history=history, iter_times_s=times, device_bytes=device_bytes)
+
+    # ------------------------------------------------------------------
+    # Tiled plane: out-of-core points streamed under a resident ModelState
+    # ------------------------------------------------------------------
+    def _fit_tiled(self, source: DataSource, iters: int,
+                   verbose: bool) -> FitResult:
+        cfg = self.cfg
+        family = self.family
+        mesh, axes, feat_axis, kwargs = self._setup(source)
+        prior = kwargs["prior"]
+        k_max = cfg.k_max
+        n, d = source.n, source.d
+        shards = n_data_shards(mesh)
+        n_local, tiles = tile_plan(n, shards, cfg.tile_size)
+        if shards * n_local > 2 ** 32:
+            raise ValueError(
+                f"N={n} ({shards * n_local} rows padded) exceeds the "
+                "uint32 global point-index space: counter-based draws "
+                "would wrap and silently corrupt the chain. Shard the fit "
+                "across processes, or widen kernels/prng counters to "
+                "uint64 first.")
+        use_pallas = cfg.use_pallas
+
+        model_specs, point_specs = state_partition_specs(family, P(axes))
+        x_spec = P(axes, feat_axis)
+        rep = P()
+
+        # ---- the per-shard suff-stat accumulator: leading shard axis ----
+        # built at full feature width; feature-sliced fields are sharded
+        # over the model axis so each device's local slice matches the
+        # local width its stats_from_labels partials produce
+        acc_shape = jax.eval_shape(
+            lambda: gibbs.empty_substats(family, k_max, d))
+        feat_fields = set(family.feature_stat_fields if feat_axis else ())
+
+        def leaf_spec(field, leaf):
+            dims = [axes] + [None] * leaf.ndim
+            if field in feat_fields:
+                dims[-1] = feat_axis
+            return P(*dims)
+
+        acc_specs = type(acc_shape)(**{
+            f: leaf_spec(f, getattr(acc_shape, f))
+            for f in acc_shape._fields})
+
+        zeros_acc = jax.jit(
+            lambda: type(acc_shape)(**{
+                f: jnp.zeros((shards,) + getattr(acc_shape, f).shape,
+                             jnp.float32)
+                for f in acc_shape._fields}),
+            out_shardings=type(acc_shape)(**{
+                f: NamedSharding(mesh, getattr(acc_specs, f))
+                for f in acc_shape._fields}))
+
+        local = lambda acc: jax.tree.map(lambda v: v[0], acc)
+        delocal = lambda acc: jax.tree.map(lambda v: v[None], acc)
+
+        # ---- host-side point state and tile transfer ------------------
+        labels_h = np.zeros((shards * n_local,), np.int32)
+        sublabels_h = np.zeros((shards * n_local,), np.int32)
+        x_sharding = NamedSharding(mesh, x_spec)
+        i32_sharding = NamedSharding(mesh, P(axes))
+
+        def put_x_tile(off: int, length: int):
+            rows = np.concatenate(
+                [source.read_block(s * n_local + off,
+                                   s * n_local + off + length)
+                 for s in range(shards)], axis=0)
+            return jax.device_put(rows, x_sharding)
+
+        def put_label_tile(host, off: int, length: int):
+            rows = np.concatenate(
+                [host[s * n_local + off:s * n_local + off + length]
+                 for s in range(shards)])
+            return jax.device_put(rows, i32_sharding)
+
+        def write_back(host, off: int, length: int, tile_out):
+            rows = np.asarray(jax.device_get(tile_out))
+            for s in range(shards):
+                host[s * n_local + off:s * n_local + off + length] = (
+                    rows[s * length:(s + 1) * length])
+
+        def stream(pass_fn, carry, point_pass: bool):
+            """Run ``pass_fn`` over all tiles with double-buffered
+            device_put: tile i+1's transfer is issued right after tile i's
+            compute is dispatched (dispatch is async), so it overlaps."""
+            def load(i):
+                off, length = tiles[i]
+                xt = put_x_tile(off, length)
+                pt = (put_label_tile(labels_h, off, length),
+                      put_label_tile(sublabels_h, off, length)
+                      ) if point_pass else None
+                return xt, pt
+            buf = load(0)
+            for i, (off, length) in enumerate(tiles):
+                xt, pt = buf
+                out, carry = pass_fn(i, off, length, xt, pt, carry)
+                if i + 1 < len(tiles):
+                    buf = load(i + 1)       # overlaps the dispatched compute
+                if out is not None:
+                    lab_t, sub_t = out
+                    write_back(labels_h, off, length, lab_t)
+                    write_back(sublabels_h, off, length, sub_t)
+            return carry
+
+        # ---- jitted bodies (compiled once per distinct tile length) ----
+        def tile_point(pt, off, length, x_t):
+            lab, sub = pt
+            gidx = gibbs.global_indices(n_local, axes, offset=off,
+                                        length=length)
+            valid = (gidx < jnp.uint32(n)).astype(x_t.dtype)
+            return PointState(labels=lab, sublabels=sub, valid=valid), gidx
+
+        def _sweep_tile(model, x_t, lab, sub, off, acc):
+            point, gidx = tile_point((lab, sub), off, x_t.shape[0], x_t)
+            point, a = gibbs.sweep_tile(model, x_t, point, gidx, local(acc),
+                                        family, use_pallas=use_pallas,
+                                        feat_axis=feat_axis)
+            return (point.labels, point.sublabels), delocal(a)
+
+        def _sm_tile(plan, x_t, lab, sub, off, acc):
+            point, _ = tile_point((lab, sub), off, x_t.shape[0], x_t)
+            point, a = splitmerge.split_merge_tile(
+                plan, x_t, point, local(acc), family,
+                use_pallas=use_pallas, feat_axis=feat_axis)
+            return (point.labels, point.sublabels), delocal(a)
+
+        def _init1_tile(x_t, off, acc):
+            gidx = gibbs.global_indices(n_local, axes, offset=off,
+                                        length=x_t.shape[0])
+            labels = _init_labels(gidx, cfg.init_clusters)
+            valid = (gidx < jnp.uint32(n)).astype(x_t.dtype)
+            a = gibbs.accumulate_substats(
+                family, x_t, valid, labels, jnp.zeros_like(labels), k_max,
+                local(acc), use_pallas)
+            return (labels, jnp.zeros_like(labels)), delocal(a)
+
+        def _init2_tile(means0, v0, x_t, lab, sub, off, acc):
+            point, gidx = tile_point((lab, sub), off, x_t.shape[0], x_t)
+            sublabels = splitmerge.hyperplane_bits(x_t, point.labels,
+                                                   means0, v0, feat_axis)
+            a = gibbs.accumulate_substats(
+                family, x_t, point.valid, point.labels, sublabels, k_max,
+                local(acc), use_pallas)
+            return (point.labels, sublabels), delocal(a)
+
+        def _finalize(acc):
+            return gibbs.finalize_substats(family, local(acc), axes,
+                                           feat_axis)
+
+        lab_specs = (P(axes), P(axes))
+        smap = functools.partial(shard_map, mesh=mesh)
+        sweep_tile_fn = jax.jit(smap(
+            _sweep_tile, in_specs=(model_specs, x_spec, *lab_specs, rep,
+                                   acc_specs),
+            out_specs=(lab_specs, acc_specs)))
+        sm_tile_fn = None     # built lazily: needs the plan's pytree specs
+        finalize_fn = jax.jit(smap(
+            _finalize, in_specs=(acc_specs,), out_specs=(rep, rep)))
+        init1_fn = jax.jit(smap(
+            _init1_tile, in_specs=(x_spec, rep, acc_specs),
+            out_specs=(lab_specs, acc_specs)))
+
+        sweep_model_fn = jax.jit(functools.partial(
+            gibbs.sweep_model, prior=prior, family=family, alpha=cfg.alpha))
+        plan_fn = jax.jit(lambda m: splitmerge.plan_split_merge(
+            _move_key(m), m, prior, family, cfg.alpha, cfg.subreset_every))
+        advance_fn = jax.jit(
+            lambda m: (m._replace(it=m.it + 1), m.summarize()))
+
+        # ---- initialization: two streamed passes ----------------------
+        key = jax.random.key(cfg.seed)
+        acc = zeros_acc()
+        acc = stream(
+            lambda i, off, length, xt, pt, a:
+                init1_fn(xt, np.uint32(off), a),
+            acc, point_pass=False)
+        stats0, _ = finalize_fn(acc)
+        means0 = jax.jit(family.cluster_means)(stats0)
+        v0 = jax.jit(functools.partial(
+            splitmerge.hyperplane_vecs, k_max=k_max, d=d,
+            dtype=jnp.float32))(jax.random.fold_in(key, 1))
+        _init2 = jax.jit(smap(
+            _init2_tile, in_specs=(rep, rep, x_spec, *lab_specs, rep,
+                                   acc_specs),
+            out_specs=(lab_specs, acc_specs)))
+        acc = zeros_acc()
+        acc = stream(
+            lambda i, off, length, xt, pt, a:
+                _init2(means0, v0, xt, *pt, np.uint32(off), a),
+            acc, point_pass=True)
+        stats, substats = finalize_fn(acc)
+        model = jax.jit(functools.partial(
+            _init_model, prior=prior, family=family, cfg=cfg,
+            k_max=k_max))(key, stats, substats)
+
+        # ---- iteration loop: ModelState is the only persistent state ---
+        set_stats_fn = jax.jit(
+            lambda m, s, ss: m._replace(stats=s, substats=ss))
+        apply_plan_fn = jax.jit(
+            lambda m, plan, s, ss: m._replace(
+                active=plan.merge.new_active, stuck=plan.stuck,
+                stats=s, substats=ss))
+
+        hist_rows: List[Dict[str, np.ndarray]] = []
+        times: List[float] = []
+        # persistent device buffers: double-buffered (x + label) tiles,
+        # the model (x2: pre/post update), and the suff-stat accumulator
+        tile_bytes = max(
+            length * (d * 4 + 2 * 4) * shards for _, length in tiles)
+        est_peak = (2 * _tree_bytes(model) + _tree_bytes(zeros_acc())
+                    + 2 * tile_bytes)
+        for it in range(iters):
+            t0 = time.perf_counter()
+            model = sweep_model_fn(model)
+            acc = zeros_acc()
+            acc = stream(
+                lambda i, off, length, xt, pt, a:
+                    sweep_tile_fn(model, xt, *pt, np.uint32(off), a),
+                acc, point_pass=True)
+            model = set_stats_fn(model, *finalize_fn(acc))
+            if it >= cfg.burnout:
+                plan = plan_fn(model)
+                if sm_tile_fn is None:
+                    plan_specs = jax.tree.map(lambda _: rep, plan)
+                    sm_tile_fn = jax.jit(smap(
+                        _sm_tile,
+                        in_specs=(plan_specs, x_spec, *lab_specs, rep,
+                                  acc_specs),
+                        out_specs=(lab_specs, acc_specs)))
+                acc = zeros_acc()
+                acc = stream(
+                    lambda i, off, length, xt, pt, a:
+                        sm_tile_fn(plan, xt, *pt, np.uint32(off), a),
+                    acc, point_pass=True)
+                model = apply_plan_fn(model, plan, *finalize_fn(acc))
+            model, summary = advance_fn(model)
+            summary = jax.device_get(summary)
+            hist_rows.append(summary)
+            times.append(time.perf_counter() - t0)
+            if verbose:
+                print(f"iter {it + 1:4d}  K={int(summary['k'])}  "
+                      f"{times[-1] * 1e3:.1f} ms/iter")
+
+        history = {
+            k: np.asarray([row[k] for row in hist_rows])
+            for k in _HIST_KEYS} if hist_rows else {
+            k: np.zeros((0,)) for k in _HIST_KEYS}
+        device_bytes = {
+            "mode": "tiled",
+            "tile_size": tiles[0][1],
+            "est_peak_bytes": int(est_peak),
+            "peak_bytes_in_use": _measured_peak(),
+        }
+        return FitResult(
+            state=model, labels=labels_h[:n].copy(), k=int(model.k_hat),
+            history=history, iter_times_s=times, device_bytes=device_bytes)

@@ -11,11 +11,15 @@ Merges: active clusters are paired by a *random disjoint matching*
 more than two clusters may merge simultaneously; accepted pairs merge with
 the old clusters becoming the l/r sub-clusters of the merged one (eq. 21).
 
-All decision math is replicated O(K); label rewrites happen on the shards.
-The post-move stats consistency pass (core/sampler._split_merge) runs
-through the same label-indexed ``family.stats_from_labels`` path as the
-sweep — sub-cluster stats in one pass, cluster stats as their fold — so
-splits/merges never materialize dense responsibilities either.
+The move is split along the model/point boundary (core/state.py):
+``plan_split_merge`` does ALL decision math — replicated O(K), no per-point
+input beyond the sufficient statistics — and packs the result into a
+``SplitMergePlan``; ``split_merge_tile`` applies the plan to one tile of
+points (label rewrites + hyperplane sub-label re-init + suff-stat fold).
+The resident path runs the tile body once over the whole local shard; the
+tiled driver streams it. The post-move stats consistency pass runs through
+the same label-indexed ``family.stats_from_labels`` block fold as the sweep
+— splits/merges never materialize dense responsibilities either.
 """
 from __future__ import annotations
 
@@ -25,7 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import gammaln
 
-from repro.core.state import DPMMState
+from repro.core.gibbs import accumulate_substats
 
 
 class SplitDecision(NamedTuple):
@@ -41,6 +45,20 @@ class MergeDecision(NamedTuple):
     new_active: jax.Array   # (K,) bool
 
 
+class SplitMergePlan(NamedTuple):
+    """Everything a point tile needs to apply one split/merge move:
+    the two decisions plus the replicated O(K d) hyperplane geometry.
+    Computed once per iteration by ``plan_split_merge``."""
+    split: SplitDecision
+    merge: MergeDecision
+    means_split: jax.Array   # (K, d) cluster means after splits (stats1)
+    means_merge: jax.Array   # (K, d) cluster means after merges (stats2)
+    vecs_split: jax.Array    # (K, d) hyperplane normals for split re-init
+    vecs_reset: jax.Array    # (K, d) hyperplane normals for stuck reset
+    reset: jax.Array         # (K,) bool — re-draw sub-labels this iter
+    stuck: jax.Array         # (K,) int32 — updated stuck counters
+
+
 def log_hastings_split(prior, family, stats, substats, alpha: float):
     """log H_split per cluster (paper eq. 12 / 20)."""
     n = stats.n
@@ -54,20 +72,26 @@ def log_hastings_split(prior, family, stats, substats, alpha: float):
             - gammaln(jnp.maximum(n, 1e-6)) - logm_c)
 
 
-def propose_splits(key: jax.Array, state: DPMMState, prior, family,
-                   alpha: float) -> SplitDecision:
-    k_max = state.active.shape[0]
-    k_h, = jax.random.split(key, 1)
-    log_h = log_hastings_split(prior, family, state.stats, state.substats,
-                               alpha)
-    nl = state.substats.n[:, 0]
-    nr = state.substats.n[:, 1]
-    valid = state.active & (nl >= 1.0) & (nr >= 1.0)
+def propose_splits(key: jax.Array, active: jax.Array, stats, substats,
+                   prior, family, alpha: float) -> SplitDecision:
+    k_max = active.shape[0]
+    # NOTE(chain regression): this used to be `k_h, = jax.random.split(key,
+    # 1)` — a one-way split where every other key derivation in the sampler
+    # uses fold_in. Normalizing to fold_in changes the uniform draws below,
+    # so split decisions — and therefore whole chains — differ from
+    # pre-tiled-data-plane versions for the same seed. Tests assert
+    # seed-relative properties (NMI/K ranges, run-vs-run bitwise equality),
+    # not golden labels, so none carry stale goldens.
+    k_h = jax.random.fold_in(key, 0)
+    log_h = log_hastings_split(prior, family, stats, substats, alpha)
+    nl = substats.n[:, 0]
+    nr = substats.n[:, 1]
+    valid = active & (nl >= 1.0) & (nr >= 1.0)
     u = jax.random.uniform(k_h, (k_max,), minval=1e-12)
     accept = valid & (jnp.log(u) < log_h)
 
     # prefix-sum slot allocation over free slots
-    free = ~state.active
+    free = ~active
     priority = jnp.where(free, jnp.arange(k_max), k_max + jnp.arange(k_max))
     free_order = jnp.argsort(priority)              # free slot ids first
     rank = jnp.cumsum(accept.astype(jnp.int32)) - 1
@@ -76,7 +100,7 @@ def propose_splits(key: jax.Array, state: DPMMState, prior, family,
     dest = free_order[jnp.clip(rank, 0, k_max - 1)]
     dest = jnp.where(accept, dest, jnp.arange(k_max))
 
-    new_active = state.active | jax.ops.segment_sum(
+    new_active = active | jax.ops.segment_sum(
         accept.astype(jnp.int32), dest, num_segments=k_max).astype(bool)
     return SplitDecision(accept=accept, dest=dest.astype(jnp.int32),
                          new_active=new_active)
@@ -172,9 +196,17 @@ def propose_merges(key: jax.Array, active: jax.Array, stats, prior, family,
     keep0 = jnp.zeros(iu.shape, bool)
     _, keep = jax.lax.fori_loop(0, iu.shape[0], body, (taken0, keep0))
 
-    into = jnp.arange(k_max, dtype=jnp.int32)
-    into = into.at[ju].set(jnp.where(keep, iu.astype(jnp.int32),
-                                     ju.astype(jnp.int32)))
+    # into[j] = i for the (unique, by the matching) kept pair owning j as
+    # its second endpoint. NOT a .at[ju].set scatter: ju holds every pair's
+    # second endpoint so indices repeat, and scatter order with duplicate
+    # indices is implementation-defined — a kept pair's destination could
+    # be clobbered by a later non-kept identity update, stranding the
+    # absorbed cluster's points on an inactive slot. segment_sum of the
+    # (at most one) kept delta per endpoint is order-free.
+    delta = jax.ops.segment_sum(
+        jnp.where(keep, iu.astype(jnp.int32) - ju.astype(jnp.int32), 0),
+        ju, num_segments=k_max)
+    into = (jnp.arange(k_max, dtype=jnp.int32) + delta).astype(jnp.int32)
     merged = jnp.zeros((k_max,), bool)
     merged = merged.at[iu].max(keep)
     merged = merged.at[ju].max(keep)
@@ -197,22 +229,29 @@ def apply_merge_to_stats(stats, dec: MergeDecision):
     return jax.tree.map(upd, stats)
 
 
-def hyperplane_bits(key: jax.Array, x: jax.Array, labels: jax.Array,
-                    means: jax.Array, feat_axis=None) -> jax.Array:
+def hyperplane_vecs(key: jax.Array, k_max: int, d: int,
+                    dtype=jnp.float32) -> jax.Array:
+    """(K, d) random unit normals — the replicated half of the hyperplane
+    sub-label init, drawn once per move so every tile slices the same
+    geometry."""
+    v = jax.random.normal(key, (k_max, d), dtype=dtype)
+    return v / jnp.linalg.norm(v, axis=-1, keepdims=True)
+
+
+def hyperplane_bits(x: jax.Array, labels: jax.Array, means: jax.Array,
+                    v: jax.Array, feat_axis=None) -> jax.Array:
     """Sub-label init by a random hyperplane through each cluster's mean.
 
     Newly-born clusters get 'two new sub-clusters'; a hyperplane split is a
     valid (auxiliary-variable) initialization that starts the sub-cluster
     Gibbs from a *separable* configuration, so split proposals become
     acceptable in O(10) sweeps instead of O(100) (EXPERIMENTS §Paper-claims
-    ablation). The MH correction (eq. 20) is unchanged.
+    ablation). The MH correction (eq. 20) is unchanged. Pure per-point given
+    the replicated (means, v) — tile/shard oblivious.
     """
-    k_max, d = means.shape
-    v = jax.random.normal(key, (k_max, d), dtype=x.dtype)
-    v = v / jnp.linalg.norm(v, axis=-1, keepdims=True)
     if feat_axis is not None:
         # x holds a local feature slice; means/v are full-d (replicated,
-        # same key on every shard). Slice them and psum the projection.
+        # same on every shard). Slice them and psum the projection.
         i = jax.lax.axis_index(feat_axis)
         dl = x.shape[1]
         means = jax.lax.dynamic_slice_in_dim(means, i * dl, dl, axis=-1)
@@ -242,3 +281,68 @@ def relabel_after_merge(labels: jax.Array, sublabels: jax.Array,
     zb = jnp.where(was_merged, dec.side[labels], sublabels)
     z = dec.into[labels]
     return z.astype(jnp.int32), zb.astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Model-side plan / tile-side apply
+# ---------------------------------------------------------------------------
+def plan_split_merge(key: jax.Array, model, prior, family, alpha: float,
+                     subreset_every: int) -> SplitMergePlan:
+    """All split/merge decision math — replicated O(K), zero per-point
+    input. ``key`` is the per-iteration move key (sampler derives it from
+    (model.key, model.it))."""
+    k_s, k_m, k_b = jax.random.split(key, 3)
+
+    dec_s = propose_splits(k_s, model.active, model.stats, model.substats,
+                           prior, family, alpha)
+    stats1 = apply_split_to_stats(family, model.stats, model.substats, dec_s)
+    dec_m = propose_merges(k_m, dec_s.new_active, stats1, prior, family,
+                           alpha)
+
+    # sub-cluster reset: clusters whose split keeps being rejected re-draw
+    # their sub-labels from a fresh hyperplane (escapes sub-Gibbs local
+    # modes; the reference DPMMSubClusters does the same). The MH target is
+    # untouched — sub-labels are auxiliary proposal state.
+    stuck = jnp.where(dec_s.accept | dec_m.merged | ~model.active,
+                      0, model.stuck + 1)
+    reset = stuck >= subreset_every
+    stuck = jnp.where(reset, 0, stuck).astype(jnp.int32)
+    stats2 = apply_merge_to_stats(stats1, dec_m)
+
+    means1 = family.cluster_means(stats1)
+    k_max, d = means1.shape
+    return SplitMergePlan(
+        split=dec_s, merge=dec_m,
+        means_split=means1, means_merge=family.cluster_means(stats2),
+        vecs_split=hyperplane_vecs(k_b, k_max, d, means1.dtype),
+        vecs_reset=hyperplane_vecs(jax.random.fold_in(k_b, 1), k_max, d,
+                                   means1.dtype),
+        reset=reset, stuck=stuck)
+
+
+def split_merge_tile(plan: SplitMergePlan, x: jax.Array, point, acc,
+                     family, use_pallas: bool = False, feat_axis=None):
+    """Apply a planned move to one tile of points: the three relabel /
+    hyperplane passes fused into a single pass over the tile, plus the
+    consistency suff-stat fold (paper §4.4: 'processing accepted
+    splits/merges requires updating the sufficient statistics')."""
+    labels, sublabels = point.labels, point.sublabels
+    # provisional relabel (moves r-halves to their new slots) ...
+    labels_mid = jnp.where(
+        plan.split.accept[labels] & (sublabels == 1),
+        plan.split.dest[labels], labels).astype(jnp.int32)
+    # ... then hyperplane sub-label init around the *post-split* means
+    bits = hyperplane_bits(x, labels_mid, plan.means_split, plan.vecs_split,
+                           feat_axis)
+    labels1, sublabels1 = relabel_after_split(labels, sublabels, plan.split,
+                                              bits)
+    labels2, sublabels2 = relabel_after_merge(labels1, sublabels1,
+                                              plan.merge)
+    bits2 = hyperplane_bits(x, labels2, plan.means_merge, plan.vecs_reset,
+                            feat_axis)
+    sublabels2 = jnp.where(plan.reset[labels2], bits2, sublabels2)
+
+    k_max = plan.reset.shape[0]
+    acc = accumulate_substats(family, x, point.valid, labels2, sublabels2,
+                              k_max, acc, use_pallas)
+    return point._replace(labels=labels2, sublabels=sublabels2), acc

@@ -1,9 +1,25 @@
-"""DPMM sampler state: a static-capacity pytree (DESIGN §6).
+"""DPMM sampler state, split along the paper's data plane (DESIGN §6).
 
 Chang & Fisher III's chain has unbounded K; under XLA every per-cluster
 tensor is ``(K_max, ...)`` with an ``active`` mask. Sub-cluster quantities
 carry an extra axis of size 2 (l/r), mirroring the paper's augmented space
 (§2.3): every cluster k owns sub-clusters (k,l) and (k,r).
+
+The state is split into the two pieces the paper's §4.3 distribution story
+actually distinguishes:
+
+ - ``ModelState`` — everything O(K_max): weights, params, sufficient
+   statistics, the PRNG key and iteration counter. Replicated on every
+   device; this is the *only* state the iteration loop has to carry, and
+   the only state that ever crosses the wire (as the psum of stats).
+ - ``PointState`` — everything O(N): labels, sub-labels and the padding
+   mask. Sharded over the data axes, and in tiled/out-of-core mode it
+   lives with its tile on the host (data/source.py): only the current
+   tile's slice is ever device-resident.
+
+Per-point randomness is counter-based on the *global* point index
+(kernels/prng.py), so any (model, point-tile) pairing reproduces the same
+chain regardless of sharding or tiling.
 """
 from __future__ import annotations
 
@@ -13,7 +29,8 @@ import jax
 import jax.numpy as jnp
 
 
-class DPMMState(NamedTuple):
+class ModelState(NamedTuple):
+    """Replicated O(K_max) model-side state."""
     key: jax.Array            # PRNG key (replicated)
     it: jax.Array             # iteration counter ()
     active: jax.Array         # (K,) bool
@@ -24,17 +41,15 @@ class DPMMState(NamedTuple):
     subparams: Any            # component params, batch (K, 2)
     stats: Any                # component suff-stats, batch (K,)
     substats: Any             # component suff-stats, batch (K, 2)
-    labels: jax.Array         # (N_local,) int32  -- data-sharded
-    sublabels: jax.Array      # (N_local,) int32 in {0, 1} -- data-sharded
 
     @property
     def k_hat(self) -> jax.Array:
         return jnp.sum(self.active.astype(jnp.int32))
 
     def summarize(self) -> dict:
-        """Replicated scalar diagnostics, collected on-device per step by
-        the chunked scan driver (core/sampler.py) so the host syncs once
-        per chunk instead of once per iteration."""
+        """Replicated scalar diagnostics, collected per step by the drivers
+        (core/sampler.py): on device by the resident chunked scan (one host
+        sync per chunk), on host once per iteration by the tiled driver."""
         return {
             "k": self.k_hat,
             "max_cluster": jnp.max(
@@ -44,6 +59,13 @@ class DPMMState(NamedTuple):
         }
 
 
-def summarize(state: DPMMState) -> dict:
+class PointState(NamedTuple):
+    """Sharded O(N) per-point state; in tiled mode, one tile's slice."""
+    labels: jax.Array         # (N_local,) int32
+    sublabels: jax.Array      # (N_local,) int32 in {0, 1}
+    valid: jax.Array          # (N_local,) float32 padding mask
+
+
+def summarize(model: ModelState) -> dict:
     """Replicated scalar diagnostics for logging / history scans."""
-    return state.summarize()
+    return model.summarize()

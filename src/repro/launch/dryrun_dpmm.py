@@ -26,7 +26,7 @@ from repro.configs import DPMMConfig
 from repro.core.distributed import shard_map
 from repro.core.family import get_family, state_partition_specs
 from repro.core.sampler import dpmm_step
-from repro.core.state import DPMMState
+from repro.core.state import ModelState, PointState
 from repro.launch.mesh import make_production_mesh, mesh_chips
 from repro.roofline.analysis import analyze, save_json
 
@@ -81,7 +81,7 @@ def main(argv=None):
     substats_s = jax.eval_shape(lambda: family.empty_stats((k, 2), d))
     params_s = jax.eval_shape(family.expected_params, prior, stats_s)
     subparams_s = jax.eval_shape(family.expected_params, prior, substats_s)
-    state = DPMMState(
+    model = ModelState(
         key=jax.eval_shape(lambda: jax.random.key(0)),
         it=jax.ShapeDtypeStruct((), jnp.int32),
         active=jax.ShapeDtypeStruct((k,), bool),
@@ -91,18 +91,19 @@ def main(argv=None):
         params=params_s,
         subparams=subparams_s,
         stats=stats_s,
-        substats=substats_s,
+        substats=substats_s)
+    point = PointState(
         labels=jax.ShapeDtypeStruct((n,), jnp.int32),
-        sublabels=jax.ShapeDtypeStruct((n,), jnp.int32))
+        sublabels=jax.ShapeDtypeStruct((n,), jnp.int32),
+        valid=jax.ShapeDtypeStruct((n,), f32))
     xs = jax.ShapeDtypeStruct((n, d), f32)
-    valid = jax.ShapeDtypeStruct((n,), f32)
 
     step = jax.jit(shard_map(
         functools.partial(dpmm_step, **kwargs), mesh=mesh,
-        in_specs=(state_specs, x_spec, P(axes)),
+        in_specs=(*state_specs, x_spec),
         out_specs=state_specs))
     with mesh:
-        lowered = step.lower(state, xs, valid)
+        lowered = step.lower(model, point, xs)
         compiled = lowered.compile()
 
     # MODEL_FLOPS: the O(N K T) loglik/suffstat passes (T = d^2 Gaussian,

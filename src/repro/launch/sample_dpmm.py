@@ -51,10 +51,16 @@ def main(argv=None):
                     help="component family: any registry name "
                          "(gaussian, diag_gaussian, multinomial, poisson) "
                          "or the reference CLI's capitalized aliases")
-    ap.add_argument("--data-path", default="", help=".npy (N, d) input")
+    ap.add_argument("--data-path", default="", help=".npy (N, d) input; "
+                    "with --tile-size it is memory-mapped, never fully "
+                    "loaded (out-of-core)")
     ap.add_argument("--params-path", "--params_path", default="")
     ap.add_argument("--result-path", "--result_path", default="")
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--tile-size", "--tile_size", type=int, default=None,
+                    help="stream points through tiles of this many rows "
+                         "per shard (out-of-core data plane; device memory "
+                         "becomes O(k_max + tile_size)). Default: resident")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -70,11 +76,17 @@ def main(argv=None):
         burnout=overrides.get("burnout", 15),
         log_every=overrides.get("log_every", 10),
         use_pallas=args.use_pallas or overrides.get("use_pallas", False),
+        tile_size=(args.tile_size if args.tile_size is not None
+                   else overrides.get("tile_size")),
         seed=args.seed,
     )
 
     if args.data_path:
-        x = np.load(args.data_path)
+        if cfg.tile_size is not None:
+            from repro.data.source import HostTiledSource
+            x = HostTiledSource.from_npy(args.data_path)
+        else:
+            x = np.load(args.data_path)
         gt = None
     elif cfg.component in ("gaussian", "diag_gaussian"):
         x, gt = generate_gmm(args.n, args.d, args.k, seed=args.seed)
@@ -83,15 +95,23 @@ def main(argv=None):
     else:
         x, gt = generate_mnmm(args.n, args.d, args.k, seed=args.seed)
 
-    print(f"DPMM fit: N={x.shape[0]} d={x.shape[1]} component="
-          f"{cfg.component} alpha={cfg.alpha} iters={cfg.iters}")
+    from repro.data.source import as_source
+    source = as_source(x)
+    print(f"DPMM fit: N={source.n} d={source.d} component="
+          f"{cfg.component} alpha={cfg.alpha} iters={cfg.iters} "
+          f"tile_size={cfg.tile_size}")
     t0 = time.time()
     model = DPMM(cfg)
-    result = model.fit(x, verbose=args.verbose)
+    result = model.fit(source, verbose=args.verbose)
     wall = time.time() - t0
     nmi = result.nmi(gt) if gt is not None else float("nan")
     print(f"done in {wall:.1f}s: K={result.k} NMI={nmi:.4f} "
           f"mean iter {np.mean(result.iter_times_s[1:])*1e3:.1f} ms")
+    mem = result.device_bytes or {}
+    print(f"device memory [{mem.get('mode')}]: "
+          f"est_peak={mem.get('est_peak_bytes', 0)/2**20:.2f} MiB"
+          + (f"  measured_peak={mem['peak_bytes_in_use']/2**20:.2f} MiB"
+             if mem.get("peak_bytes_in_use") else ""))
 
     if args.result_path:
         weights = np.exp(np.asarray(result.state.logweights))
@@ -102,6 +122,7 @@ def main(argv=None):
             "k": result.k,
             "nmi": nmi,
             "iter_times_s": result.iter_times_s,
+            "device_bytes": result.device_bytes,
             "config": dataclasses.asdict(cfg),
         }
         with open(args.result_path, "w") as f:

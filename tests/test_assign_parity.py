@@ -253,11 +253,11 @@ def test_sweep_jaxpr_has_no_all_k_subcluster_loglik(name):
     valid = jnp.ones((n,), bool)
     cfg = DPMMConfig(component=name, init_clusters=3, k_max=k_max)
     prior = fam.build_prior(cfg, x)
-    state = _init_local(jax.random.key(0), x, valid, prior=prior,
-                        family=fam, cfg=cfg, axes=(), k_max=k_max)
+    model, point = _init_local(jax.random.key(0), x, valid, prior=prior,
+                               family=fam, cfg=cfg, axes=(), k_max=k_max)
     jaxpr = jax.make_jaxpr(
-        lambda s, xx, vv: gibbs.sweep(s, xx, vv, prior, fam, 10.0, ()))(
-            state, x, valid)
+        lambda m, p, xx: gibbs.sweep(m, p, xx, prior, fam, 10.0, ()))(
+            model, point, x)
     shapes = {tuple(a.shape) for a in _walk_avals(jaxpr.jaxpr)
               if hasattr(a, "shape")}
     assert (n, k_max, 2) not in shapes, (

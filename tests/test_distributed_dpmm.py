@@ -68,12 +68,12 @@ def test_only_suffstats_cross_shards(data):
         functools.partial(_init_local, **kwargs),
         mesh=mesh, in_specs=(rep, shard_spec, shard_spec),
         out_specs=state_specs))
-    state = init(jax.random.key(0), xs, valid)
+    model_state, point_state = init(jax.random.key(0), xs, valid)
     step = jax.jit(shard_map(
         functools.partial(dpmm_step, **kwargs), mesh=mesh,
-        in_specs=(state_specs, shard_spec, shard_spec),
+        in_specs=(*state_specs, shard_spec),
         out_specs=state_specs))
-    hlo = step.lower(state, xs, valid).compile().as_text()
+    hlo = step.lower(model_state, point_state, xs).compile().as_text()
 
     n_local = x.shape[0] // jax.device_count()
     d = x.shape[1]

@@ -1,0 +1,178 @@
+"""Property tests for the split/merge decision math (paper §4.1/§4.3).
+
+``propose_merges`` thins all-pairs MH acceptances to a *disjoint matching*
+by descending log-H priority (no three clusters may merge in one step).
+These tests verify the thinning against an independent numpy greedy oracle
+on randomized stats/masks, and that the decision fields are mutually
+consistent.
+
+Chain-regression note: ``propose_splits`` now derives its uniform draws
+via ``jax.random.fold_in(key, 0)`` instead of the old one-way
+``jax.random.split(key, 1)`` — the only split() oddity in otherwise
+fold_in-based key plumbing. Chains therefore differ from pre-tiled-data-
+plane versions at the same seed. No test in this repo pins golden labels
+(they assert run-vs-run equality or NMI/K ranges), so no goldens needed
+updating; if you bisect a chain change to that commit, this is why.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import DPMMConfig
+from repro.core import splitmerge
+from repro.core.family import get_family
+from repro.core.splitmerge import _pair_log_h, propose_merges
+
+
+def _random_case(seed, k_max=12, d=3):
+    """Random stats with overlapping clusters (so merges actually fire)
+    and a random active mask."""
+    rng = np.random.default_rng(seed)
+    fam = get_family("gaussian")
+    n = 600
+    # overlapping blobs: many pairs have log_H_merge > 0
+    centers = rng.normal(0, 1.0, (k_max, d))
+    labels = rng.integers(0, k_max, n)
+    x = jnp.asarray(centers[labels] + rng.normal(0, 1.0, (n, d)),
+                    jnp.float32)
+    resp = jax.nn.one_hot(jnp.asarray(labels), k_max, dtype=jnp.float32)
+    active = jnp.asarray(rng.random(k_max) < 0.7)
+    # inactive clusters keep junk stats on purpose: decisions must mask them
+    stats = fam.stats_from_points(x, resp)
+    prior = fam.build_prior(DPMMConfig(), x)
+    return fam, prior, stats, active
+
+
+def _recompute_acceptance(key, fam, prior, stats, active, alpha):
+    """The pre-thinning acceptance set, recomputed exactly as
+    propose_merges draws it (same key, same order)."""
+    k_max = active.shape[0]
+    iu, ju = np.triu_indices(k_max, k=1)
+    log_h = np.asarray(_pair_log_h(prior, fam, stats, alpha,
+                                   jnp.asarray(iu), jnp.asarray(ju)))
+    u = np.asarray(jax.random.uniform(key, iu.shape, minval=1e-12))
+    pair_valid = np.asarray(active)[iu] & np.asarray(active)[ju]
+    accept = pair_valid & (np.log(u) < log_h)
+    return iu, ju, log_h, accept
+
+
+def _greedy_matching(iu, ju, log_h, accept, k_max):
+    """Independent oracle: keep accepted pairs in descending log_h, skip
+    any pair with an already-claimed endpoint."""
+    taken = np.zeros(k_max, bool)
+    keep = np.zeros(len(iu), bool)
+    for p in np.argsort(np.where(accept, -log_h, np.inf), kind="stable"):
+        if not accept[p]:
+            continue
+        a, b = iu[p], ju[p]
+        if not taken[a] and not taken[b]:
+            taken[a] = taken[b] = True
+            keep[p] = True
+    return keep
+
+
+ALPHA = 10.0
+SEEDS = list(range(8))
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_kept_set_is_a_matching(seed):
+    """No cluster participates in two merges (paper §4.3: at most two
+    clusters merge into one per step)."""
+    fam, prior, stats, active = _random_case(seed)
+    key = jax.random.key(100 + seed)
+    dec = propose_merges(key, active, stats, prior, fam, ALPHA)
+    merged = np.asarray(dec.merged)
+    into = np.asarray(dec.into)
+    side = np.asarray(dec.side)
+    k_max = merged.shape[0]
+    # every absorbed cluster names a distinct kept partner, and that
+    # partner is merged with side 0 and absorbs exactly one cluster
+    absorbed = np.where(side == 1)[0]
+    kept = into[absorbed]
+    assert len(set(kept)) == len(kept), "a cluster absorbed two others"
+    assert not np.isin(kept, absorbed).any(), "an absorbed cluster absorbs"
+    for b in absorbed:
+        assert merged[b] and merged[into[b]] and side[into[b]] == 0
+        assert into[into[b]] == into[b], "kept cluster must map to itself"
+    # merged is exactly the union of kept and absorbed endpoints
+    assert set(np.where(merged)[0]) == set(absorbed) | set(kept)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_thinning_matches_descending_logh_oracle(seed):
+    """The kept matching equals the greedy descending-log-H oracle —
+    priority order is respected, not just any maximal matching."""
+    fam, prior, stats, active = _random_case(seed)
+    key = jax.random.key(100 + seed)
+    dec = propose_merges(key, active, stats, prior, fam, ALPHA)
+    k_max = np.asarray(active).shape[0]
+    iu, ju, log_h, accept = _recompute_acceptance(
+        key, fam, prior, stats, active, ALPHA)
+    assert accept.any(), "degenerate case: no accepted pairs at all"
+    keep = _greedy_matching(iu, ju, log_h, accept, k_max)
+    exp_into = np.arange(k_max)
+    exp_into[ju[keep]] = iu[keep]
+    exp_side = np.zeros(k_max, np.int32)
+    exp_side[ju[keep]] = 1
+    exp_merged = np.zeros(k_max, bool)
+    exp_merged[iu[keep]] = True
+    exp_merged[ju[keep]] = True
+    assert np.array_equal(np.asarray(dec.merged), exp_merged)
+    assert np.array_equal(np.asarray(dec.into), exp_into)
+    assert np.array_equal(np.asarray(dec.side), exp_side)
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_new_active_into_side_consistent(seed):
+    """new_active = active minus absorbed; into is identity off the
+    matching and endpoint-consistent on it; inactive clusters never
+    participate."""
+    fam, prior, stats, active = _random_case(seed)
+    key = jax.random.key(100 + seed)
+    dec = propose_merges(key, active, stats, prior, fam, ALPHA)
+    active = np.asarray(active)
+    merged = np.asarray(dec.merged)
+    into = np.asarray(dec.into)
+    side = np.asarray(dec.side)
+    new_active = np.asarray(dec.new_active)
+    absorbed = side == 1
+    assert np.array_equal(new_active, active & ~absorbed)
+    assert not merged[~active].any(), "inactive cluster merged"
+    assert np.array_equal(into[~merged], np.arange(len(into))[~merged])
+    assert (side[~merged] == 0).all()
+    # labels relabeled through the decision stay on active clusters
+    labels = jnp.asarray(np.where(active)[0][
+        np.random.default_rng(seed).integers(0, active.sum(), 200)],
+        dtype=jnp.int32)
+    sublabels = jnp.zeros_like(labels)
+    z, zb = splitmerge.relabel_after_merge(labels, sublabels, dec)
+    assert new_active[np.asarray(z)].all()
+    # absorbed points land on side 1, kept points on side 0
+    was = merged[np.asarray(labels)]
+    assert np.array_equal(np.asarray(zb)[was],
+                          side[np.asarray(labels)[was]])
+
+
+@pytest.mark.parametrize("n_active", [0, 1])
+def test_no_valid_pairs_is_identity(n_active):
+    """With fewer than two active clusters there is no valid pair, so the
+    decision must be the exact identity on the active mask — junk stats in
+    inactive slots must not leak through."""
+    rng = np.random.default_rng(0)
+    fam = get_family("gaussian")
+    k_max, d = 8, 2
+    x = jnp.asarray(rng.normal(0, 1, (400, d)), jnp.float32)
+    resp = jax.nn.one_hot(
+        jnp.asarray(rng.integers(0, k_max, 400)), k_max, dtype=jnp.float32)
+    stats = fam.stats_from_points(x, resp)
+    prior = fam.build_prior(DPMMConfig(), x)
+    active = jnp.arange(k_max) < n_active
+    dec = propose_merges(jax.random.key(1), active, stats, prior, fam,
+                         ALPHA)
+    assert not np.asarray(dec.merged).any()
+    assert np.array_equal(np.asarray(dec.into), np.arange(k_max))
+    assert (np.asarray(dec.side) == 0).all()
+    assert np.array_equal(np.asarray(dec.new_active), np.asarray(active))

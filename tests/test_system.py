@@ -62,6 +62,44 @@ def test_params_path_override(tmp_path):
     assert payload["config"]["iters"] == 5
 
 
+def test_cli_tiled_out_of_core(tmp_path):
+    """--tile-size streams a memory-mapped .npy through the tiled data
+    plane; the result JSON records the device-memory accounting."""
+    rng = np.random.default_rng(0)
+    pts = np.concatenate([rng.normal(-8, 1, (1500, 2)),
+                          rng.normal(8, 1, (1500, 2))]).astype(np.float32)
+    data = tmp_path / "points.npy"
+    np.save(data, pts)
+    out = tmp_path / "result.json"
+    res = _run_cli(["--data-path", str(data), "--tile-size", "1024",
+                    "--iters", "12", "--result-path", str(out)])
+    assert res.returncode == 0, res.stderr[-2000:]
+    payload = json.loads(out.read_text())
+    assert len(payload["labels"]) == 3000
+    assert payload["config"]["tile_size"] == 1024
+    assert payload["device_bytes"]["mode"] == "tiled"
+    assert payload["device_bytes"]["est_peak_bytes"] > 0
+
+
+def test_dpmm_config_validation():
+    """Bad knobs fail loudly at construction, not deep inside a trace."""
+    with pytest.raises(ValueError, match="tile_size"):
+        DPMMConfig(tile_size=0)
+    with pytest.raises(ValueError, match="tile_size"):
+        DPMMConfig(tile_size=-5)
+    with pytest.raises(ValueError, match="log_every"):
+        DPMMConfig(log_every=0)
+    with pytest.raises(ValueError, match="init_clusters"):
+        DPMMConfig(init_clusters=0)
+    with pytest.raises(ValueError, match="k_max"):
+        DPMMConfig(init_clusters=9, k_max=8)
+    with pytest.raises(ValueError, match="iters"):
+        DPMMConfig(iters=-1)
+    # the defaults and a valid tiled config construct fine
+    DPMMConfig()
+    DPMMConfig(tile_size=4096, log_every=1, init_clusters=3)
+
+
 def test_serve_generator_runs():
     """Batched generation through the serving engine (decode path)."""
     import dataclasses

@@ -1,0 +1,172 @@
+"""Tiled data plane (ISSUE 3): streaming points through host tiles is a
+pure performance knob. Full ``DPMM.fit`` with ``HostTiledSource`` /
+``cfg.tile_size`` must produce labels, history, and sufficient statistics
+*bitwise* identical to the resident plane (params to float32-ULP — see
+``_assert_bitwise``), for every registered family, at multiple tile
+sizes, with and without data sharding.
+
+Why bitwise is achievable: per-point draws are counter-based on the global
+point index (kernels/prng.py) and suff-stats fold in fixed
+STATS_BLOCK-aligned blocks in global point order (core/gibbs.py), so the
+float addition sequence is identical no matter how points are tiled."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import DPMMConfig
+from repro.core.distributed import make_data_mesh, tile_plan
+from repro.core.gibbs import STATS_BLOCK
+from repro.core.sampler import DPMM
+from repro.data.source import HostTiledSource, ResidentSource, as_source
+from repro.data.synthetic import generate_gmm, generate_mnmm, generate_pmm
+
+ALL = ("gaussian", "diag_gaussian", "multinomial", "poisson")
+# two tile sizes, both exercising multiple tiles at N=3000 on one shard
+TILES = (STATS_BLOCK, 2 * STATS_BLOCK)
+
+
+def _data(name, n=3000, d=4, k=4):
+    if name in ("gaussian", "diag_gaussian"):
+        return generate_gmm(n, d, k, seed=0, sep=10.0)
+    if name == "poisson":
+        return generate_pmm(n, d, k, seed=0)
+    return generate_mnmm(n, 16, k, seed=0)
+
+
+def _cfg(name, **kw):
+    return DPMMConfig(component=name, alpha=10.0, iters=18, k_max=16,
+                      burnout=4, **kw)
+
+
+def _assert_bitwise(a, b, what):
+    """Labels, history, and sufficient statistics must match BITWISE:
+    they are folds of per-point work whose addition order the tiled plane
+    reproduces exactly. Model params are a deterministic function of
+    (stats, key) — same draws from the same bits — but the O(K) posterior
+    sampling (cholesky/gamma/normal transforms) is compiled into different
+    executables on the two planes, and XLA's fusion/FMA choices are not
+    bit-stable across program contexts; they are checked to float32 ULP
+    tolerance instead."""
+    assert np.array_equal(a.labels, b.labels), f"{what}: labels differ"
+    for key in a.history:
+        assert np.array_equal(a.history[key], b.history[key]), (
+            f"{what}: history[{key}] differs")
+    for name in ("stats", "substats"):
+        for la, lb in zip(jax.tree_util.tree_leaves(getattr(a.state, name)),
+                          jax.tree_util.tree_leaves(getattr(b.state, name))):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), (
+                f"{what}: {name} differ")
+    for la, lb in zip(jax.tree_util.tree_leaves(a.state.params),
+                      jax.tree_util.tree_leaves(b.state.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{what}: params diverged "
+                                           "beyond compilation-level ULPs")
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_tiled_matches_resident_all_families(name):
+    """Resident vs two tile sizes, single data shard: bitwise identical."""
+    x, gt = _data(name)
+    resident = DPMM(_cfg(name)).fit(x)
+    assert resident.k >= 2            # a non-trivial chain: splits happened
+    for tile in TILES:
+        tiled = DPMM(_cfg(name, tile_size=tile)).fit(x)
+        _assert_bitwise(resident, tiled, f"{name} tile={tile}")
+
+
+@pytest.mark.parametrize("name", ("gaussian", "multinomial"))
+def test_tiled_matches_resident_sharded(name):
+    """Same with the data sharded across all devices: tiles stream per
+    shard, the psum-folded stats and chains still match bitwise."""
+    if jax.device_count() < 2:
+        pytest.skip("needs >1 device (conftest sets 4 virtual CPU devices)")
+    x, _ = _data(name)
+    mesh = make_data_mesh(jax.device_count())
+    resident = DPMM(_cfg(name), mesh=mesh).fit(x)
+    for tile in TILES:
+        tiled = DPMM(_cfg(name, tile_size=tile), mesh=mesh).fit(x)
+        _assert_bitwise(resident, tiled, f"{name} sharded tile={tile}")
+    # and across planes AND meshes at once: 1-dev resident == N-dev tiled
+    # on labels/history (the chain). Stats/params may differ in final ULPs
+    # across MESH sizes — a psum over 4 devices reduces in a different
+    # order than over 1 — which is the pre-existing cross-mesh contract;
+    # the bitwise-everything guarantee is per-mesh across planes.
+    single = DPMM(_cfg(name), mesh=make_data_mesh(1)).fit(x)
+    tiled = DPMM(_cfg(name, tile_size=TILES[0]), mesh=mesh).fit(x)
+    assert np.array_equal(single.labels, tiled.labels)
+    for key in single.history:
+        assert np.array_equal(single.history[key], tiled.history[key])
+
+
+def test_memmap_source_out_of_core(tmp_path):
+    """HostTiledSource over an np.memmap: the array is never materialized
+    in one piece, and the chain matches the resident fit bitwise."""
+    x, gt = generate_gmm(4000, 3, 5, seed=1, sep=10.0)
+    path = tmp_path / "points.npy"
+    np.save(path, x.astype(np.float32))
+    source = HostTiledSource.from_npy(str(path))
+    assert isinstance(source._x, np.memmap)
+    mesh = make_data_mesh(1)    # one shard so tiles are genuinely partial
+    tiled = DPMM(_cfg("gaussian", tile_size=STATS_BLOCK),
+                 mesh=mesh).fit(source)
+    resident = DPMM(_cfg("gaussian"), mesh=mesh).fit(x)
+    _assert_bitwise(resident, tiled, "memmap")
+    assert tiled.nmi(gt) > 0.9
+    assert tiled.device_bytes["mode"] == "tiled"
+    # the out-of-core promise at test scale: the tiled fit's persistent
+    # device footprint stays below the resident plane's
+    assert (tiled.device_bytes["est_peak_bytes"]
+            < resident.device_bytes["est_peak_bytes"])
+
+
+def test_tiled_feature_sharded_identical():
+    """Tiling composes with feature sharding (2x2 mesh): x tiles are
+    sharded on both axes, stats gather along features — still bitwise."""
+    from jax.sharding import Mesh
+
+    if jax.device_count() < 4:
+        pytest.skip("needs 4 devices")
+    x, _ = generate_mnmm(2000, 32, 5, seed=1)
+    mesh22 = Mesh(np.array(jax.devices()[:4]).reshape(2, 2),
+                  ("data", "model"))
+    cfg = _cfg("multinomial", shard_features=True)
+    resident = DPMM(cfg, mesh=mesh22).fit(x)
+    tiled = DPMM(_cfg("multinomial", shard_features=True,
+                      tile_size=STATS_BLOCK // 2), mesh=mesh22).fit(x)
+    _assert_bitwise(resident, tiled, "feature-sharded tiled")
+
+
+def test_tile_plan_alignment():
+    """Tiles are STATS_BLOCK-aligned with one ragged shard tail; layout
+    (n_local) is the resident padded layout regardless of tile size."""
+    n_local, tiles = tile_plan(5000, 1, STATS_BLOCK)
+    assert n_local == 5000
+    assert tiles[:-1] == [(i * STATS_BLOCK, STATS_BLOCK)
+                          for i in range(len(tiles) - 1)]
+    off, length = tiles[-1]
+    assert off % STATS_BLOCK == 0 and off + length == n_local
+    # tile_size rounds UP to the alignment so block boundaries never move
+    n_local2, tiles2 = tile_plan(5000, 1, STATS_BLOCK + 1)
+    assert n_local2 == n_local
+    assert tiles2[0] == (0, 2 * STATS_BLOCK)
+    # sharded: every shard holds ceil(n / shards) rows, like shard_points
+    n_local4, tiles4 = tile_plan(5000, 4, STATS_BLOCK)
+    assert n_local4 == 1250
+    assert tiles4 == [(0, STATS_BLOCK), (STATS_BLOCK, 1250 - STATS_BLOCK)]
+    # tiles larger than the shard clip to a single whole-shard tile
+    assert tile_plan(5000, 4, 10 * STATS_BLOCK)[1] == [(0, 1250)]
+
+
+def test_resident_source_roundtrip():
+    x = np.arange(12, dtype=np.float32).reshape(6, 2)
+    src = as_source(x)
+    assert isinstance(src, ResidentSource)
+    assert src.resident() is not None
+    # read_block pads rows past N with zeros (the sharded layout's tail)
+    block = src.read_block(4, 8)
+    assert block.shape == (4, 2)
+    assert np.array_equal(block[:2], x[4:])
+    assert (block[2:] == 0).all()
+    assert np.allclose(src.column_mean(), x.mean(axis=0))
