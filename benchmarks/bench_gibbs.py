@@ -9,14 +9,18 @@ chunked scan driver at the default `log_every` AND at `log_every=1`
 (per-iteration host sync — the pre-scan-driver behaviour), so driver perf
 regressions and host-sync overhead are both visible in the log.
 
-`--hotpath` starts the perf trajectory for the fused assignment +
-label-indexed suff-stat sweep: steady-state ms/iter and peak device memory
-(via `jax.local_devices()[0].memory_stats()` where the backend reports it)
-for the jnp reference path vs the fused Pallas path, persisted to
-BENCH_gibbs.json so CI can track the numbers per PR. On non-TPU backends
-the fused leg is skipped by default (interpret-mode Pallas executes the
-kernel body in Python — not a performance measurement); `--force-fused`
-runs it anyway for plumbing checks.
+`--hotpath` tracks the perf trajectory of the fused sweep: steady-state
+ms/iter and peak memory (device `memory_stats()` where the backend reports
+it, else process peak RSS — `peak_bytes_source` records which) for the jnp
+reference path vs the fused Pallas path, persisted to BENCH_gibbs.json so
+CI can track the numbers per PR. On non-TPU backends the *timed* Pallas
+leg is skipped (interpret-mode Pallas executes the kernel body in Python —
+not a performance measurement; `--force-fused` overrides), but two CPU-
+runnable legs always execute: an interpret-mode smoke fit that runs the
+one-read megakernel end-to-end and checks its chain bitwise against the
+reference, and a paired jitted-sweep microbench of the one-read blocked
+reference body vs the pre-fusion three-pass body at d>=16 (the
+`x_hbm_reads_per_sweep` 3 -> 1 claim, measured).
 """
 from __future__ import annotations
 
@@ -113,10 +117,12 @@ def _hbm_intermediate_floats(n: int, k: int, d: int) -> dict:
 
 
 def _hotpath_leg(use_pallas: bool, iters: int) -> dict:
-    """One measured leg; run in its OWN process so memory_stats()'s
-    process-lifetime peak_bytes_in_use is per-path, not a running max
-    over whichever leg happened to run first."""
+    """One measured leg; run in its OWN process so the process-lifetime
+    memory peak (device memory_stats or RSS) is per-path, not a running
+    max over whichever leg happened to run first."""
     import jax
+
+    from repro.core.sampler import _measured_peak
 
     n, d, k = HOTPATH_N, HOTPATH_D, HOTPATH_K
     x, gt = generate_gmm(n, d, k, seed=0, sep=8.0)
@@ -127,16 +133,97 @@ def _hotpath_leg(use_pallas: bool, iters: int) -> dict:
         return DPMM(cfg).fit(x)
 
     fit()                                # process warm-up, discarded...
-    mem0 = jax.local_devices()[0].memory_stats() or {}
-    base = mem0.get("peak_bytes_in_use")  # ...but it sets the same peak
+    base, _ = _measured_peak()           # ...but it sets the same peak
     r = fit()
-    mem = jax.local_devices()[0].memory_stats() or {}
+    peak, src = _measured_peak()
     row = {"path": "fused" if use_pallas else "reference",
            "backend": jax.default_backend(),
            "ms_per_iter": float(np.mean(r.iter_times_s[1:]) * 1e3),
            "K_found": r.k, "nmi": round(r.nmi(gt), 4),
-           "peak_bytes_in_use": mem.get("peak_bytes_in_use"),
+           "peak_bytes_in_use": peak,
+           "peak_bytes_source": src,
            "warmup_peak_bytes_in_use": base}
+    print(_ROW_MARK + json.dumps(row), flush=True)
+    return row
+
+
+def _hotpath_interp_smoke(iters: int) -> dict:
+    """Tiny-N interpret-mode smoke leg: actually EXECUTES the one-read
+    Pallas megakernel on this backend (interpret mode off-TPU) through a
+    full fit and checks its chain bitwise against the jnp reference fit —
+    so CI exercises the kernel path everywhere, while the timed fused leg
+    stays TPU-only. Not a performance measurement."""
+    import jax
+
+    n, d, k = 2048, 8, 4
+    x, gt = generate_gmm(n, d, k, seed=0, sep=8.0)
+
+    def fit(use_pallas):
+        cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=16, burnout=3,
+                         use_pallas=use_pallas)
+        return DPMM(cfg).fit(x)
+
+    fused = fit(True)
+    ref = fit(False)
+    same = bool(
+        np.array_equal(fused.labels, ref.labels)
+        and all(np.array_equal(fused.history[key], ref.history[key])
+                for key in fused.history))
+    row = {"path": "fused_interpret_smoke",
+           "backend": jax.default_backend(),
+           "N": n, "d": d, "iters": iters,
+           "interpret_mode": jax.default_backend() != "tpu",
+           "K_found": fused.k, "nmi": round(fused.nmi(gt), 4),
+           "chain_identical_to_reference": same}
+    print(_ROW_MARK + json.dumps(row), flush=True)
+    return row
+
+
+def _hotpath_sweep_pair(reps: int = 15) -> dict:
+    """Paired jitted-sweep microbench at d>=16: the one-read blocked
+    reference body vs the pre-fusion three-pass body (same chain, bitwise
+    — tests/test_fused_sweep.py), isolating the HBM-traffic cut from
+    fit-level noise. Runs on any backend."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gibbs
+    from repro.core.family import get_family
+    from repro.core.sampler import _init_local
+
+    n, d, k_max = HOTPATH_N, HOTPATH_D, HOTPATH_KMAX
+    fam = get_family("gaussian")
+    x, _ = generate_gmm(n, d, HOTPATH_K, seed=0, sep=8.0)
+    x = jnp.asarray(x)
+    valid = jnp.ones((n,), jnp.float32)
+    cfg = DPMMConfig(alpha=10.0, init_clusters=HOTPATH_K, k_max=k_max)
+    prior = fam.build_prior(cfg, x)
+    model, point = _init_local(jax.random.key(0), x, valid, prior=prior,
+                               family=fam, cfg=cfg, axes=(), k_max=k_max)
+    gidx = jnp.arange(n, dtype=jnp.uint32)
+
+    def make(fused):
+        def sweep(m, xx, p):
+            acc = gibbs.empty_substats(fam, k_max, d)
+            return gibbs.sweep_tile(m, xx, p, gidx, acc, fam, fused=fused)
+        return jax.jit(sweep).lower(model, x, point).compile()
+
+    def median_ms(fn):
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(model, x, point))
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts) * 1e3)
+
+    f3, ff = make(False), make(True)
+    ms3, msf = median_ms(f3), median_ms(ff)
+    row = {"path": "reference_sweep_pair", "backend": jax.default_backend(),
+           "N": n, "d": d, "k_max": k_max,
+           "ms_per_sweep_three_pass": ms3, "ms_per_sweep_fused": msf,
+           "fused_speedup": round(ms3 / msf, 3)}
     print(_ROW_MARK + json.dumps(row), flush=True)
     return row
 
@@ -183,6 +270,10 @@ def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
         rows.append({"path": "fused", "skipped":
                      f"interpret-mode Pallas on backend={backend!r} is "
                      "Python-speed; measure on TPU (or --force-fused)"})
+    # CPU-runnable legs: megakernel executed end-to-end (interpret) with a
+    # bitwise chain check, and the paired one-read-vs-three-pass sweep
+    rows.append(leg("interp-smoke"))
+    rows.append(leg("sweep-pair"))
     payload = {
         "bench": "gibbs_hotpath",
         "backend": backend,
@@ -192,6 +283,12 @@ def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
                    "iters": iters},
         "hbm_intermediate_floats_per_sweep": _hbm_intermediate_floats(
             HOTPATH_N, HOTPATH_KMAX, HOTPATH_D),
+        # full passes of x streamed from HBM per sweep (steps e + f + the
+        # suff-stat fold): the seed and the pre-PR-4 reference each read
+        # every tile three times; the one-read bodies read it once on both
+        # paths (enforced structurally by tests/test_fused_sweep.py)
+        "x_hbm_reads_per_sweep": {"seed": 3, "pre_pr4_reference": 3,
+                                  "fused_reference": 1, "fused_pallas": 1},
         "results": rows,
     }
     with open(out_path, "w") as f:
@@ -216,9 +313,14 @@ def main(argv=None):
     ap.add_argument("--out-dir", default="experiments")
     ap.add_argument("--out-json", default="BENCH_gibbs.json")
     ap.add_argument("--_hotpath-leg", dest="hotpath_leg", default=None,
-                    choices=["reference", "fused"], help=argparse.SUPPRESS)
+                    choices=["reference", "fused", "interp-smoke",
+                             "sweep-pair"], help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
-    if args.hotpath_leg:
+    if args.hotpath_leg == "interp-smoke":
+        _hotpath_interp_smoke(min(args.iters or 8, 8))
+    elif args.hotpath_leg == "sweep-pair":
+        _hotpath_sweep_pair()
+    elif args.hotpath_leg:
         _hotpath_leg(args.hotpath_leg == "fused", args.iters or 30)
     elif args.hotpath:
         run_hotpath(args.iters or 30, out_path=args.out_json,

@@ -5,11 +5,13 @@ per iteration vs device count at fixed work per device.
 
 Results persist to BENCH_scaling.json (same schema spirit as
 BENCH_gibbs.json) so CI tracks the trajectory per PR. `--oocore` runs the
-out-of-core leg on its own (seconds-scale, CI-friendly): ms/iter and peak
+CI-friendly seconds-scale slice: the out-of-core leg (ms/iter and peak
 device bytes vs `tile_size` at fixed N — peak memory falls roughly
 linearly with tile size while ms/iter stays flat, because tiling only
-changes *where* points wait, not what math runs (chains are bitwise
-identical across planes; tests/test_tiled_parity.py).
+changes *where* points wait, not what math runs; chains are bitwise
+identical across planes, tests/test_tiled_parity.py) PLUS a small default
+N-sweep so the `scaling` field records ms/iter vs N on every CI run, not
+only under the full grid.
 """
 from __future__ import annotations
 
@@ -79,6 +81,30 @@ def run(out_dir: str = "experiments",
     return t
 
 
+SMOKE_NS = (10_000, 20_000, 40_000)
+
+
+def run_scaling_smoke(iters: int = 10):
+    """The CI-mode N-sweep: ms/iter vs N at fixed (d, K) — expect ~linear.
+
+    A reduced slice of the full `run()` sweep so BENCH_scaling.json's
+    `scaling` field is populated on every CI run (it used to be null
+    outside the long-form grid).
+    """
+    rows = []
+    prev = None
+    for n in SMOKE_NS:
+        ms, _ = _ms_per_iter(n, 8, 8, iters=iters)
+        row = {"axis": "N", "value": n, "ms_per_iter": ms,
+               "ratio_vs_prev": round(ms / prev, 3) if prev else None,
+               "mode": "ci_smoke"}
+        prev = ms
+        rows.append(row)
+        print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
+              flush=True)
+    return rows
+
+
 def run_oocore(iters: int = 12, n: int = OOCORE_N, d: int = OOCORE_D):
     """The out-of-core leg: resident vs streamed tiles at fixed N.
 
@@ -111,6 +137,7 @@ def run_oocore(iters: int = 12, n: int = OOCORE_N, d: int = OOCORE_D):
             "ms_per_iter": ms,
             "est_peak_device_bytes": peak,
             "peak_bytes_in_use": r.device_bytes["peak_bytes_in_use"],
+            "peak_bytes_source": r.device_bytes["peak_bytes_source"],
             "resident_footprint_ratio": round(peak / resident_peak, 4),
             "K_found": r.k,
             "nmi": round(r.nmi(gt), 4),
@@ -149,7 +176,9 @@ def main(argv=None):
     ap.add_argument("--out-json", default="BENCH_scaling.json")
     args = ap.parse_args(argv)
     if args.oocore:
-        _write_json(args.out_json, oocore=run_oocore(iters=args.iters))
+        _write_json(args.out_json,
+                    scaling=run_scaling_smoke(iters=args.iters),
+                    oocore=run_oocore(iters=args.iters))
     else:
         run(out_dir=args.out_dir, out_json=args.out_json,
             oocore_iters=args.iters)

@@ -106,18 +106,37 @@ def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
     return DiagStats(n=n2, sx=sf2[..., :d], sxx=sf2[..., d:])
 
 
+def _pack_linear(params: DiagParams, d: int):
+    """(w, const) of the expanded-quadratic linear form (cf. ``loglik``)."""
+    prec = jnp.exp(params.log_prec)
+    w = jnp.concatenate([prec * params.mu, -0.5 * prec], axis=-1)
+    const = (0.5 * jnp.sum(params.log_prec, axis=-1)
+             - 0.5 * jnp.sum(prec * params.mu * params.mu, axis=-1)
+             - 0.5 * d * LOG_2PI)
+    return w, const
+
+
 def assign_pack(x: jax.Array, params: DiagParams):
     """Linear-likelihood packing for the fused assignment kernels:
     expanding (x - mu)^2 turns the quadratic into
     [x, x^2] @ [prec*mu, -prec/2]_b + const_b (cf. ``loglik``)."""
-    prec = jnp.exp(params.log_prec)
     feats = jnp.concatenate([x, x * x], axis=-1)
-    w = jnp.concatenate([prec * params.mu, -0.5 * prec], axis=-1)
+    return (feats,) + _pack_linear(params, x.shape[-1])
+
+
+def sweep_pack(x: jax.Array, params: DiagParams, subparams: DiagParams):
+    """One-read sweep packing (kernels/sweep.py): the [x, x^2] feature
+    block is computed ONCE and shared by steps (e)/(f) and the stat fold
+    (it is exactly the moment feature map of ``stats_from_labels``)."""
+    feats = jnp.concatenate([x, x * x], axis=-1)
     d = x.shape[-1]
-    const = (0.5 * jnp.sum(params.log_prec, axis=-1)
-             - 0.5 * jnp.sum(prec * params.mu * params.mu, axis=-1)
-             - 0.5 * d * LOG_2PI)
-    return feats, w, const
+    return (feats,) + _pack_linear(params, d) + _pack_linear(subparams, d)
+
+
+def stats_from_moments(n2: jax.Array, sf2: jax.Array) -> DiagStats:
+    """Sub-cluster stats from the fused sweep's folded [x, x^2] moments."""
+    d = sf2.shape[-1] // 2
+    return DiagStats(n=n2, sx=sf2[..., :d], sxx=sf2[..., d:])
 
 
 def posterior(prior: NIGPrior, stats: DiagStats):

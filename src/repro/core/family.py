@@ -19,6 +19,13 @@ everything the skeleton needs from an observation model:
    jnp reference fallbacks (``labels_stats_ref``, chunked own-cluster
    gather) — neither path materializes an (N, K, 2) sub-cluster loglik or
    a dense (N, K, 2) responsibility tensor,
+ - the ONE-READ sweep (``sweep`` dispatch): steps (e) + (f) + the
+   suff-stat fold run while each point block is resident, so a sweep
+   reads every tile of x from HBM exactly once. ``sweep_fast`` is the
+   per-family Pallas megakernel hook (kernels/sweep.py, packed via the
+   modules' ``sweep_pack``); ``sweep_ref`` is the blocked jnp scan — both
+   fold stat partials per STATS_BLOCK left-to-right and reproduce the
+   three-pass chain bitwise,
  - the feature-sharding contract (DESIGN §10): ``feature_shardable``
    families declare which stats fields carry a feature axis
    (``feature_stat_fields``, all-gathered after the data-axis psum) and how
@@ -56,6 +63,65 @@ from repro.kernels import prng
 # the inactive-cluster assignment mask — single-sourced from the fused
 # kernels so reference and in-kernel masking can never drift
 from repro.kernels.assign import NEG_INF  # noqa: F401  (re-exported)
+# granularity of the suff-stat fold (canonical home: kernels/sweep.py;
+# core/gibbs.py re-exports it) — the one-read blocked passes below fold
+# stat partials per STATS_BLOCK points, left to right in point order
+from repro.kernels.sweep import STATS_BLOCK
+
+
+def _add_tree(a: Any, b: Any) -> Any:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def fold_blocked(family: "ComponentFamily", k_max: int, body, x: jax.Array,
+                 valid: jax.Array, extras: Tuple, acc,
+                 use_pallas: bool = False):
+    """Run a per-point ``body`` over fixed STATS_BLOCK point blocks and
+    fold each block's sub-cluster stat partial into ``acc`` — the one-read
+    pass shape shared by the fused sweep (``ComponentFamily.sweep_ref``)
+    and the fused split/merge apply (``splitmerge.split_merge_tile``).
+
+    ``body(x_blk, valid_blk, *extras_blk) -> (labels_blk, sublabels_blk)``
+    runs while the block is resident; its labels feed the stat partial
+    immediately, so each block of ``x`` is consumed exactly once per pass
+    (one ``lax.scan`` body — nothing re-reads x afterwards). Partials are
+    added left to right in global point order, per STATS_BLOCK — the exact
+    float addition sequence of ``gibbs.accumulate_substats`` — so chains
+    stay bitwise identical to the three-pass formulation on every plane,
+    tile size, and sharding. Only a shard's ragged tail (< STATS_BLOCK)
+    runs outside the scan; it folds last either way.
+    """
+    n = x.shape[0]
+    nb, rem = divmod(n, STATS_BLOCK)
+    outs = []
+    if nb:
+        blk = lambda a: a[:nb * STATS_BLOCK].reshape(
+            (nb, STATS_BLOCK) + a.shape[1:])
+
+        def step(a, args):
+            xb, vb = args[0], args[1]
+            lab, sub = body(xb, vb, *args[2:])
+            p = family.stats_from_labels(xb, vb, lab, sub, k_max,
+                                         use_pallas=use_pallas)
+            return _add_tree(a, p), (lab, sub)
+
+        acc, (labs, subs) = jax.lax.scan(
+            step, acc, (blk(x), blk(valid)) + tuple(blk(e) for e in extras))
+        outs.append((labs.reshape(-1), subs.reshape(-1)))
+    if rem:
+        tail = slice(nb * STATS_BLOCK, None)
+        xb, vb = x[tail], valid[tail]
+        lab, sub = body(xb, vb, *(e[tail] for e in extras))
+        p = family.stats_from_labels(xb, vb, lab, sub, k_max,
+                                     use_pallas=use_pallas)
+        acc = _add_tree(acc, p)
+        outs.append((lab, sub))
+    if len(outs) == 1:
+        labels, sublabels = outs[0]
+    else:
+        labels = jnp.concatenate([o[0] for o in outs])
+        sublabels = jnp.concatenate([o[1] for o in outs])
+    return labels, sublabels, acc
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +155,12 @@ class ComponentFamily:
     assign_pack: Optional[Callable[[jax.Array, Any], Tuple]] = None
     assign_fast: Optional[Callable[..., Optional[jax.Array]]] = None
     sub_assign_fast: Optional[Callable[..., Optional[jax.Array]]] = None
+    # one-read fused sweep (steps e + f + stat fold in ONE pass over x,
+    # kernels/sweep.py): returns (labels, sublabels, per-STATS_BLOCK stat
+    # partials) or None outside the kernel's VMEM envelope; the ``sweep``
+    # dispatch method folds the partials and falls back to ``sweep_ref``
+    # (the blocked jnp scan) when absent/guarded out.
+    sweep_fast: Optional[Callable[..., Optional[Tuple]]] = None
     # optional accelerated loglik (Pallas on TPU; paper §4.2 'Kernel #1/#2')
     loglik_fast: Optional[Callable[[jax.Array, Any], jax.Array]] = None
     # feature-sharding contract (DESIGN §10); shardable families' loglik and
@@ -105,6 +177,62 @@ class ComponentFamily:
         if use_pallas and self.loglik_fast is not None:
             return self.loglik_fast(x, params)
         return self.loglik_ref(x, params)
+
+    # -- one-read fused sweep (steps e + f + stat fold, ONE pass over x) --
+    def sweep(self, x: jax.Array, valid: jax.Array, params: Any,
+              subparams: Any, logw: jax.Array, sublogw: jax.Array,
+              active: jax.Array, gidx: jax.Array, key_z: jax.Array,
+              key_zb: jax.Array, k_max: int, acc,
+              use_pallas: bool = False, feat_axis=None
+              ) -> Tuple[jax.Array, jax.Array, Any]:
+        """Steps (e)+(f)+suff-stat fold with x consumed exactly once.
+
+        Dispatch: the ``sweep_fast`` megakernel (Pallas, kernels/sweep.py)
+        when available and inside its VMEM envelope, else ``sweep_ref``
+        (one ``lax.scan`` over STATS_BLOCK blocks running assign /
+        sub_assign / stats_from_labels while the block is resident). Both
+        paths fold stat partials per STATS_BLOCK left-to-right and draw
+        noise from the counter-based PRNG, so they produce the same chain
+        as the pre-fusion three-pass formulation, bit for bit.
+
+        ``key_z``/``key_zb``: raw (2,) uint32 key words
+        (``prng.key_words``). Returns ``(labels, sublabels, acc')``.
+        """
+        if use_pallas and feat_axis is None and self.sweep_fast is not None:
+            out = self.sweep_fast(x, valid, params, subparams, logw,
+                                  sublogw, active, gidx, key_z, key_zb,
+                                  k_max)
+            if out is not None:
+                labels, sublabels, partials = out
+                acc, _ = jax.lax.scan(
+                    lambda a, p: (_add_tree(a, p), None), acc, partials)
+                return labels, sublabels, acc
+        return self.sweep_ref(x, valid, params, subparams, logw, sublogw,
+                              active, gidx, key_z, key_zb, k_max, acc,
+                              use_pallas=use_pallas, feat_axis=feat_axis)
+
+    def sweep_ref(self, x: jax.Array, valid: jax.Array, params: Any,
+                  subparams: Any, logw: jax.Array, sublogw: jax.Array,
+                  active: jax.Array, gidx: jax.Array, key_z: jax.Array,
+                  key_zb: jax.Array, k_max: int, acc,
+                  use_pallas: bool = False, feat_axis=None
+                  ) -> Tuple[jax.Array, jax.Array, Any]:
+        """Blocked one-read sweep reference: e + f + stat fold per
+        STATS_BLOCK block inside one scan body. Per-block math is exactly
+        ``assign``/``sub_assign``/``stats_from_labels`` (counter-based
+        noise, same op order), so the chain matches the three-pass body
+        bitwise while x streams through the scan once."""
+        def body(xb, vb, gb):
+            del vb                      # assignment ignores the pad mask
+            lab = self.assign(xb, params, logw, active, gb, key_z,
+                              use_pallas=use_pallas, feat_axis=feat_axis)
+            sub = self.sub_assign(xb, subparams, sublogw, lab, gb, key_zb,
+                                  use_pallas=use_pallas,
+                                  feat_axis=feat_axis)
+            return lab, sub
+
+        return fold_blocked(self, k_max, body, x, valid, (gidx,), acc,
+                            use_pallas=use_pallas)
 
     # -- fused sweep hot path (steps e/f + suff-stats) --------------------
     def assign(self, x: jax.Array, params: Any, logw: jax.Array,
@@ -393,6 +521,40 @@ def _gauss_labels_stats_fast(x, valid, labels, sublabels, k_max):
     return None if out is None else niw.GaussStats(*out)
 
 
+def _linear_sweep_fast(mod):
+    """One-read megakernel hook for linear-likelihood families: the
+    module's ``sweep_pack`` builds the shared feature block once; its
+    ``stats_from_moments`` unpacks the folded (nsb, K, 2, d') moment
+    partials into the family's stats pytree."""
+    def hook(x, valid, params, subparams, logw, sublogw, active, gidx,
+             key_z, key_zb, k_max):
+        from repro.kernels import ops
+        feats, w, const, subw, subconst = mod.sweep_pack(x, params,
+                                                         subparams)
+        out = ops.sweep_linear_pallas(feats, w, const, logw, active, subw,
+                                      subconst, sublogw, valid, gidx,
+                                      key_z, key_zb)
+        if out is None:
+            return None
+        labels, sublabels, n2, sf2 = out
+        return labels, sublabels, mod.stats_from_moments(n2, sf2)
+    return hook
+
+
+def _gauss_sweep_fast(x, valid, params, subparams, logw, sublogw, active,
+                      gidx, key_z, key_zb, k_max):
+    if params.mu.ndim != 2 or subparams.mu.ndim != 3:
+        return None
+    from repro.kernels import ops
+    mu, f, ld, smu, sf, sld = niw.sweep_pack(params, subparams)
+    out = ops.sweep_gauss_pallas(x, mu, f, ld, logw, active, smu, sf, sld,
+                                 sublogw, valid, gidx, key_z, key_zb)
+    if out is None:
+        return None
+    labels, sublabels, n2, sx2, sxx2 = out
+    return labels, sublabels, niw.stats_from_moments(n2, sx2, sxx2)
+
+
 def _moments_labels_fast(feats, valid, labels, sublabels, k_max):
     from repro.kernels import ops
     return ops.moments_labels_pallas(feats, labels, sublabels, valid, k_max)
@@ -423,11 +585,13 @@ GAUSSIAN = register_family(_module_family(
     niw, name="gaussian", loglik_fast=_gauss_loglik_fast,
     assign_fast=_gauss_assign_fast, sub_assign_fast=_gauss_sub_assign_fast,
     labels_stats_fast=_gauss_labels_stats_fast,
+    sweep_fast=_gauss_sweep_fast,
     feature_shardable=False, mean_field="sx"))
 
 MULTINOMIAL = register_family(_module_family(
     multinomial, name="multinomial",
     labels_stats_fast=_mult_labels_stats_fast,
+    sweep_fast=_linear_sweep_fast(multinomial),
     feature_shardable=True, feature_stat_fields=("counts",),
     slice_params=lambda p, s, n: multinomial.MultParams(
         logtheta=_slice_last(p.logtheta, s, n)),
@@ -436,6 +600,7 @@ MULTINOMIAL = register_family(_module_family(
 POISSON = register_family(_module_family(
     poisson, name="poisson",
     labels_stats_fast=_pois_labels_stats_fast,
+    sweep_fast=_linear_sweep_fast(poisson),
     feature_shardable=True, feature_stat_fields=("sx",),
     slice_params=lambda p, s, n: poisson.PoisParams(
         log_rate=_slice_last(p.log_rate, s, n)),
@@ -445,6 +610,7 @@ DIAG_GAUSSIAN = register_family(_module_family(
     diag_gaussian, name="diag_gaussian",
     loglik_fast=_diag_gauss_loglik_fast,
     labels_stats_fast=_diag_labels_stats_fast,
+    sweep_fast=_linear_sweep_fast(diag_gaussian),
     feature_shardable=True, feature_stat_fields=("sx", "sxx"),
     slice_params=lambda p, s, n: diag_gaussian.DiagParams(
         mu=_slice_last(p.mu, s, n), log_prec=_slice_last(p.log_prec, s, n)),

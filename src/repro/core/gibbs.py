@@ -22,10 +22,12 @@ right in global point order: any tile size that is a multiple of
 same float addition sequence as the resident single-tile pass.
 
 The hot path itself lives behind the ``ComponentFamily`` dispatch
-(core/family.py): ``family.assign`` (step e), ``family.sub_assign``
-(step f, own-cluster only) and ``family.stats_from_labels``. This module
-never materializes dense responsibilities or an (N, K, 2) sub-cluster
-log-likelihood — step (f) costs O(N T), not O(N K T), on every path.
+(core/family.py): ``family.sweep`` runs steps (e) + (f) + the stat fold in
+ONE pass over the tile (Pallas megakernel, kernels/sweep.py, or the
+blocked scan reference), so each tile of x is read from HBM exactly once
+per sweep. This module never materializes dense responsibilities or an
+(N, K, 2) sub-cluster log-likelihood — step (f) costs O(N T), not
+O(N K T), on every path.
 """
 from __future__ import annotations
 
@@ -35,24 +37,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.family import NEG_INF  # noqa: F401  (re-export: sampler)
+from repro.core.family import fold_blocked
 from repro.core.state import ModelState, PointState
 from repro.kernels import prng
-
-# Granularity of the suff-stat fold. Tiles are STATS_BLOCK-aligned (except
-# a shard's ragged tail), so the accumulation order — and therefore every
-# float in the chain — is identical for all tile sizes, including the
-# resident whole-shard "tile". Changing this constant changes chains.
-STATS_BLOCK = 1024
+# Granularity of the suff-stat fold (canonical home: kernels/sweep.py,
+# where the one-read megakernels emit per-block stat partials). Tiles are
+# STATS_BLOCK-aligned (except a shard's ragged tail), so the accumulation
+# order — and therefore every float in the chain — is identical for all
+# tile sizes, including the resident whole-shard "tile". Changing this
+# constant changes chains.
+from repro.kernels.sweep import STATS_BLOCK  # noqa: F401  (re-exported)
 
 
 def psum_tree(tree: Any, axes: Tuple[str, ...]):
     if not axes:
         return tree
     return jax.tree.map(lambda a: jax.lax.psum(a, axes), tree)
-
-
-def add_tree(a: Any, b: Any):
-    return jax.tree.map(jnp.add, a, b)
 
 
 def global_indices(n_local: int, axes: Tuple[str, ...],
@@ -123,27 +123,16 @@ def accumulate_substats(family, x: jax.Array, valid: jax.Array,
     of the resulting stats — is invariant to how points are tiled, as long
     as tile boundaries are STATS_BLOCK-aligned (the last tile of a shard
     may be ragged; its trailing partial block folds last either way).
+
+    Delegates to ``family.fold_blocked`` — the ONE implementation of the
+    chain-critical blocked fold (the labels here are already known, so
+    the per-block body is the identity) — rather than duplicating its
+    scan/tail logic.
     """
-    n = x.shape[0]
-    nb, rem = divmod(n, STATS_BLOCK)
-    if nb:
-        blk = lambda a: a[:nb * STATS_BLOCK].reshape(
-            (nb, STATS_BLOCK) + a.shape[1:])
-
-        def body(a, args):
-            xb, vb, lb, sb = args
-            p = family.stats_from_labels(xb, vb, lb, sb, k_max,
-                                         use_pallas=use_pallas)
-            return add_tree(a, p), None
-
-        acc, _ = jax.lax.scan(
-            body, acc, (blk(x), blk(valid), blk(labels), blk(sublabels)))
-    if rem:
-        tail = slice(nb * STATS_BLOCK, None)
-        p = family.stats_from_labels(x[tail], valid[tail], labels[tail],
-                                     sublabels[tail], k_max,
-                                     use_pallas=use_pallas)
-        acc = add_tree(acc, p)
+    _, _, acc = fold_blocked(family, k_max,
+                             lambda xb, vb, lb, sb: (lb, sb),
+                             x, valid, (labels, sublabels), acc,
+                             use_pallas=use_pallas)
     return acc
 
 
@@ -211,30 +200,43 @@ def sweep_model(model: ModelState, prior, family, alpha: float
 
 def sweep_tile(model: ModelState, x: jax.Array, point: PointState,
                gidx: jax.Array, acc, family,
-               use_pallas: bool = False, feat_axis=None
-               ) -> Tuple[PointState, Any]:
-    """Steps (e)/(f) + suff-stat fold for one tile of points.
+               use_pallas: bool = False, feat_axis=None, *,
+               fused: bool = True) -> Tuple[PointState, Any]:
+    """Steps (e)/(f) + suff-stat fold for one tile of points, reading each
+    block of x from HBM exactly ONCE (``ComponentFamily.sweep``: the
+    Pallas megakernel or the blocked scan reference — e, f, and the stat
+    partial all run while the block is resident).
 
     ``gidx`` carries the tile's global point indices; all randomness is
     counter-based on them, so this body is oblivious to which tile (or
-    shard) it is running on.
+    shard) it is running on. ``fused=False`` runs the pre-fusion
+    three-pass body — kept as the parity oracle (tests/benchmarks): both
+    produce bitwise-identical chains, the fused body just streams x once
+    instead of three times.
     """
     _, _, _, _, k_z, k_zb = sweep_keys(model)
-
-    # (e) cluster assignments: z_i ~ pi_k f(x_i; theta_k)  over *existing* k
-    # — the O(N K T) hot spot, fused through the family dispatch
-    labels = family.assign(x, model.params, model.logweights, model.active,
-                           gidx, prng.key_words(k_z), use_pallas=use_pallas,
-                           feat_axis=feat_axis)
-
-    # (f) sub-cluster assignments under the point's OWN cluster only: O(N T)
-    sublabels = family.sub_assign(x, model.subparams, model.sub_logweights,
-                                  labels, gidx, prng.key_words(k_zb),
-                                  use_pallas=use_pallas, feat_axis=feat_axis)
-
     k_max = model.active.shape[0]
-    acc = accumulate_substats(family, x, point.valid, labels, sublabels,
-                              k_max, acc, use_pallas)
+
+    if not fused:
+        # (e) cluster assignments over *existing* k — pass 1 over x
+        labels = family.assign(x, model.params, model.logweights,
+                               model.active, gidx, prng.key_words(k_z),
+                               use_pallas=use_pallas, feat_axis=feat_axis)
+        # (f) sub-assignment under the OWN cluster only — pass 2 over x
+        sublabels = family.sub_assign(
+            x, model.subparams, model.sub_logweights, labels, gidx,
+            prng.key_words(k_zb), use_pallas=use_pallas,
+            feat_axis=feat_axis)
+        # suff-stat fold — pass 3 over x
+        acc = accumulate_substats(family, x, point.valid, labels,
+                                  sublabels, k_max, acc, use_pallas)
+        return point._replace(labels=labels, sublabels=sublabels), acc
+
+    labels, sublabels, acc = family.sweep(
+        x, point.valid, model.params, model.subparams, model.logweights,
+        model.sub_logweights, model.active, gidx, prng.key_words(k_z),
+        prng.key_words(k_zb), k_max, acc, use_pallas=use_pallas,
+        feat_axis=feat_axis)
     return point._replace(labels=labels, sublabels=sublabels), acc
 
 

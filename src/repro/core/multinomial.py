@@ -85,6 +85,21 @@ def assign_pack(x: jax.Array, params: MultParams):
                                          x.dtype)
 
 
+def sweep_pack(x: jax.Array, params: MultParams, subparams: MultParams):
+    """One-read sweep packing (kernels/sweep.py): the shared feature block
+    (here x itself — it is also the stat feature map) plus the (K, d') and
+    (K, 2, d') linear forms for steps (e)/(f)."""
+    feats, w, const = assign_pack(x, params)
+    _, subw, subconst = assign_pack(x, subparams)
+    return feats, w, const, subw, subconst
+
+
+def stats_from_moments(n2: jax.Array, sf2: jax.Array) -> MultStats:
+    """Sub-cluster stats from the fused sweep's folded moments: the stat
+    features are x itself, so the moment sums ARE the counts."""
+    return MultStats(n=n2, counts=sf2)
+
+
 def log_marginal(prior: MultPrior, stats: MultStats) -> jax.Array:
     """Dirichlet-multinomial marginal (multinomial coefficients dropped).
 

@@ -136,6 +136,21 @@ def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
                       sxx=sxx2.reshape(k_max, 2, d, d))
 
 
+def sweep_pack(params: GaussParams, subparams: GaussParams):
+    """One-read sweep packing (kernels/sweep.py): the Gaussian megakernel
+    takes the raw whitening fields — (K, d[,d]) cluster params and the
+    (K, 2, d[,d]) sub-cluster block — with x itself as the resident
+    feature block (the stat fold consumes the same x for its moments)."""
+    return (params.mu, params.chol_prec, params.logdet_prec,
+            subparams.mu, subparams.chol_prec, subparams.logdet_prec)
+
+
+def stats_from_moments(n2: jax.Array, sx2: jax.Array,
+                       sxx2: jax.Array) -> GaussStats:
+    """Sub-cluster stats from the fused sweep's folded moment partials."""
+    return GaussStats(n=n2, sx=sx2, sxx=sxx2)
+
+
 def posterior(prior: NIWPrior, stats: GaussStats):
     """NIW posterior hyper-parameters given sufficient statistics."""
     n = stats.n[..., None]

@@ -85,6 +85,19 @@ def assign_pack(x: jax.Array, params: PoisParams):
             -jnp.sum(jnp.exp(params.log_rate), axis=-1))
 
 
+def sweep_pack(x: jax.Array, params: PoisParams, subparams: PoisParams):
+    """One-read sweep packing (kernels/sweep.py): x is both the assign
+    feature block and the stat feature map."""
+    feats, w, const = assign_pack(x, params)
+    _, subw, subconst = assign_pack(x, subparams)
+    return feats, w, const, subw, subconst
+
+
+def stats_from_moments(n2: jax.Array, sf2: jax.Array) -> PoisStats:
+    """Sub-cluster stats from the fused sweep's folded moments."""
+    return PoisStats(n=n2, sx=sf2)
+
+
 def log_marginal(prior: PoisPrior, stats: PoisStats) -> jax.Array:
     """Negative-binomial marginal (log x! terms dropped):
 

@@ -162,8 +162,9 @@ class FitResult:
     iter_times_s: List[float]
     # accounting of what the fit kept device-resident (see README
     # 'Memory model'): est_peak_bytes is the analytic per-run peak over
-    # persistent device buffers; backends with memory_stats() also report
-    # measured peak_bytes_in_use (None on CPU).
+    # persistent device buffers; peak_bytes_in_use is the measured peak —
+    # device.memory_stats() where the backend reports it, else the
+    # process's peak RSS — with its origin in peak_bytes_source.
     device_bytes: Optional[Dict[str, Any]] = None
 
     def nmi(self, true_labels: np.ndarray, n_true: Optional[int] = None):
@@ -179,9 +180,25 @@ class FitResult:
                          jnp.asarray(self.labels), n_true, k_max))
 
 
-def _measured_peak() -> Optional[int]:
+def _measured_peak() -> Tuple[Optional[int], str]:
+    """(peak bytes, source): the backend's ``peak_bytes_in_use`` where
+    ``device.memory_stats()`` reports it (TPU/GPU), else the process's
+    peak RSS (``ru_maxrss``; on CPU the 'device' IS host memory) — so
+    memory claims are measurable everywhere. RSS is a process-lifetime
+    high-water mark that includes host-side buffers and cannot be reset
+    between fits; the source is recorded next to the number so consumers
+    (FitResult.device_bytes, BENCH_*.json) can tell which they got.
+    """
     stats = jax.local_devices()[0].memory_stats() or {}
-    return stats.get("peak_bytes_in_use")
+    peak = stats.get("peak_bytes_in_use")
+    if peak is not None:
+        return int(peak), "device.memory_stats"
+    try:
+        import resource
+        rss_kib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+        return int(rss_kib) * 1024, "process_peak_rss"
+    except Exception:                         # non-POSIX: no measurement
+        return None, "unavailable"
 
 
 class DPMM:
@@ -297,12 +314,14 @@ class DPMM:
                 if hist_chunks else np.zeros((0,)))
             for k in _HIST_KEYS}
         labels = np.asarray(jax.device_get(point.labels))[:n]
+        peak, peak_src = _measured_peak()
         device_bytes = {
             "mode": "resident",
             "est_peak_bytes": (_tree_bytes(xs) + _tree_bytes(valid)
                                + 2 * _tree_bytes(point)
                                + 2 * _tree_bytes(model)),
-            "peak_bytes_in_use": _measured_peak(),
+            "peak_bytes_in_use": peak,
+            "peak_bytes_source": peak_src,
         }
         return FitResult(
             state=model, labels=labels, k=int(model.k_hat),
@@ -321,7 +340,9 @@ class DPMM:
         n, d = source.n, source.d
         shards = n_data_shards(mesh)
         n_local, tiles = tile_plan(n, shards, cfg.tile_size)
-        if shards * n_local > 2 ** 32:
+        if shards * n_local >= 2 ** 32:
+            # >=, not >: at exactly 2**32 rows jnp.uint32(n) wraps to 0 in
+            # the tile validity mask, which would silently zero all stats
             raise ValueError(
                 f"N={n} ({shards * n_local} rows padded) exceeds the "
                 "uint32 global point-index space: counter-based draws "
@@ -330,7 +351,7 @@ class DPMM:
                 "uint64 first.")
         use_pallas = cfg.use_pallas
 
-        model_specs, point_specs = state_partition_specs(family, P(axes))
+        model_specs, _ = state_partition_specs(family, P(axes))
         x_spec = P(axes, feat_axis)
         rep = P()
 
@@ -555,11 +576,13 @@ class DPMM:
             k: np.asarray([row[k] for row in hist_rows])
             for k in _HIST_KEYS} if hist_rows else {
             k: np.zeros((0,)) for k in _HIST_KEYS}
+        peak, peak_src = _measured_peak()
         device_bytes = {
             "mode": "tiled",
             "tile_size": tiles[0][1],
             "est_peak_bytes": int(est_peak),
-            "peak_bytes_in_use": _measured_peak(),
+            "peak_bytes_in_use": peak,
+            "peak_bytes_source": peak_src,
         }
         return FitResult(
             state=model, labels=labels_h[:n].copy(), k=int(model.k_hat),

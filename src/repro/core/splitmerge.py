@@ -29,6 +29,7 @@ import jax
 import jax.numpy as jnp
 from jax.scipy.special import gammaln
 
+from repro.core.family import fold_blocked
 from repro.core.gibbs import accumulate_substats
 
 
@@ -320,13 +321,10 @@ def plan_split_merge(key: jax.Array, model, prior, family, alpha: float,
         reset=reset, stuck=stuck)
 
 
-def split_merge_tile(plan: SplitMergePlan, x: jax.Array, point, acc,
-                     family, use_pallas: bool = False, feat_axis=None):
-    """Apply a planned move to one tile of points: the three relabel /
-    hyperplane passes fused into a single pass over the tile, plus the
-    consistency suff-stat fold (paper §4.4: 'processing accepted
-    splits/merges requires updating the sufficient statistics')."""
-    labels, sublabels = point.labels, point.sublabels
+def _apply_plan_block(plan: SplitMergePlan, x: jax.Array,
+                      labels: jax.Array, sublabels: jax.Array, feat_axis):
+    """The per-point relabel + hyperplane math of one planned move, on one
+    resident block of points — shared by the fused and three-pass tiles."""
     # provisional relabel (moves r-halves to their new slots) ...
     labels_mid = jnp.where(
         plan.split.accept[labels] & (sublabels == 1),
@@ -341,8 +339,35 @@ def split_merge_tile(plan: SplitMergePlan, x: jax.Array, point, acc,
     bits2 = hyperplane_bits(x, labels2, plan.means_merge, plan.vecs_reset,
                             feat_axis)
     sublabels2 = jnp.where(plan.reset[labels2], bits2, sublabels2)
+    return labels2, sublabels2
 
+
+def split_merge_tile(plan: SplitMergePlan, x: jax.Array, point, acc,
+                     family, use_pallas: bool = False, feat_axis=None, *,
+                     fused: bool = True):
+    """Apply a planned move to one tile of points: relabels, both
+    hyperplane sub-label re-inits, AND the consistency suff-stat fold
+    (paper §4.4: 'processing accepted splits/merges requires updating the
+    sufficient statistics') run per STATS_BLOCK block while the block is
+    resident — one read of x per move, the same one-read pass shape as
+    the fused sweep (``family.fold_blocked``). ``fused=False`` keeps the
+    pre-fusion whole-tile-then-fold body as the parity oracle; chains are
+    bitwise identical either way.
+    """
     k_max = plan.reset.shape[0]
-    acc = accumulate_substats(family, x, point.valid, labels2, sublabels2,
-                              k_max, acc, use_pallas)
+    labels, sublabels = point.labels, point.sublabels
+    if not fused:
+        labels2, sublabels2 = _apply_plan_block(plan, x, labels, sublabels,
+                                                feat_axis)
+        acc = accumulate_substats(family, x, point.valid, labels2,
+                                  sublabels2, k_max, acc, use_pallas)
+        return point._replace(labels=labels2, sublabels=sublabels2), acc
+
+    def body(xb, vb, lb, sb):
+        del vb                        # relabel math ignores the pad mask
+        return _apply_plan_block(plan, xb, lb, sb, feat_axis)
+
+    labels2, sublabels2, acc = fold_blocked(
+        family, k_max, body, x, point.valid, (labels, sublabels), acc,
+        use_pallas=use_pallas)
     return point._replace(labels=labels2, sublabels=sublabels2), acc

@@ -2,6 +2,11 @@
 
     loglik.py     — (N, K) Gaussian log-likelihood (`dcolwise_dot_all`)
     suffstats.py  — per-cluster sufficient statistics (masked matmuls)
+    assign.py     — fused assignment steps (e)/(f) (flash-style argmax)
+    sweep.py      — ONE-READ sweep megakernels: e + f + stat fold per
+                    resident block; x touches HBM once per sweep (also
+                    the canonical home of STATS_BLOCK, the fold unit)
+    prng.py       — counter-based Threefry-2x32 (bitwise = jax PRNG)
     matmul.py     — blocked matmul ('Kernel #1'; ops.matmul_auto = the
                     paper's d*N size-based auto-selection vs XLA dot)
 

@@ -23,6 +23,7 @@ from repro.kernels import loglik as _loglik
 from repro.kernels import matmul as _matmul
 from repro.kernels import ref
 from repro.kernels import suffstats as _suffstats
+from repro.kernels import sweep as _sweep
 
 # the paper's measured CUDA crossover; bench_kernels re-measures per host
 MATMUL_CROSSOVER = 640_000
@@ -117,6 +118,46 @@ def sub_assign_gauss_pallas(x, mu, chol_prec, logdet_prec, sublogw, labels,
     return _assign.sub_assign_gauss(x, mu, chol_prec, logdet_prec, sublogw,
                                     labels, gidx, key_data,
                                     interpret=_interpret())
+
+
+def sweep_linear_pallas(feats, w, const, logw, active, subw, subconst,
+                        sublogw, valid, gidx, key_z, key_zb):
+    """One-read fused sweep (kernels/sweep.py) for linear families.
+
+    Returns ``(labels, sublabels, n2, sf2)`` with per-STATS_BLOCK stat
+    partials, or ``None`` outside the VMEM envelope (caller falls back to
+    the blocked jnp reference).
+    """
+    k = w.shape[0]
+    # resident (K, d') + (K, 2, d') weights, the (bn, K) one-hot gather and
+    # the (bn, 2K) segment one-hot, plus the (2K, d') stat partial tile
+    resident = (w.size + subw.size + 128 * k * 3 + 2 * k * feats.shape[1]
+                ) * 4
+    if feats.shape[1] > 2 * MAX_KERNEL_D or resident > SUB_PARAMS_VMEM_BYTES:
+        return None
+    return _sweep.sweep_linear(feats, w, const, logw, active, subw,
+                               subconst, sublogw, valid, gidx, key_z,
+                               key_zb, interpret=_interpret())
+
+
+def sweep_gauss_pallas(x, mu, chol_prec, logdet_prec, logw, active, sub_mu,
+                       sub_chol_prec, sub_logdet_prec, sublogw, valid, gidx,
+                       key_z, key_zb):
+    """One-read fused sweep for the full-covariance Gaussian, or ``None``
+    outside the VMEM envelope."""
+    d = x.shape[1]
+    k = mu.shape[0]
+    bn = 128
+    # resident (K, d, d) + (K, 2, d, d) factors, the (2K, d, d) stat
+    # partial, and the (bn, K, d)/(2K, bn, d)/(bn, 2, d, d) intermediates
+    resident = (3 * k * d * d + 2 * k * d * d
+                + 6 * bn * k * d + 2 * bn * d * d) * 4
+    if d > MAX_KERNEL_D or resident > SUB_PARAMS_VMEM_BYTES:
+        return None
+    return _sweep.sweep_gauss(x, mu, chol_prec, logdet_prec, logw, active,
+                              sub_mu, sub_chol_prec, sub_logdet_prec,
+                              sublogw, valid, gidx, key_z, key_zb,
+                              interpret=_interpret())
 
 
 def suffstats_labels_pallas(x, labels, sublabels, valid, k: int):

@@ -1,0 +1,336 @@
+"""Pallas TPU megakernels for the ONE-READ fused sweep (steps e + f +
+suff-stat fold in a single pass over x).
+
+After the assignment fusion (kernels/assign.py) and the label-indexed
+suff-stats (kernels/suffstats.py), the sweep was still three separate
+passes over the point tile — step (e), step (f), and the stat fold each
+streamed every byte of ``x`` (or its ``assign_pack`` features) from HBM
+once per iteration, and the linear families recomputed the feature
+transform in each pass. These kernels collapse the three into one
+``pallas_call`` whose only large operand is ``x``: while a point block is
+resident in VMEM it is
+
+ 1. assigned (step e: loglik + log pi + counter-based Threefry Gumbel,
+    running argmax over the *resident* (K, ...) parameter block),
+ 2. sub-assigned under its OWN cluster only (step f: one-hot MXU gather /
+    vector ``take`` of the (K, 2, ...) sub-params), and
+ 3. folded into the sub-cluster stat accumulators held in VMEM
+
+— labels, sub-labels, and the folded stat partials stream out; the block
+of ``x`` is never touched again. HBM traffic per sweep drops from three
+reads of x to one.
+
+The stat accumulators are emitted as per-``STATS_BLOCK`` partial blocks
+(out tiles revisited for the ``STATS_BLOCK/bn`` grid steps inside each
+stats block, re-initialized at each block boundary), NOT as one grand
+total: the caller folds the partials left-to-right, which reproduces the
+exact float addition sequence of the reference fold
+(``core/gibbs.accumulate_substats``) for every tile size and sharding —
+the bitwise-chain contract extends to the megakernels.
+
+Every arithmetic expression mirrors the corresponding three-pass kernel
+(``assign_linear``/``assign_gauss``, ``sub_assign_*``,
+``suffstats_labels``/``moments_labels``) op for op, so interpret-mode
+chains match the three-pass Pallas chains bitwise.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels import prng
+from repro.kernels.assign import LOG_2PI, NEG_INF, _pad_dim
+
+# Granularity of the suff-stat fold — the system-wide contract (re-exported
+# by core/gibbs.py): partial stats are produced per STATS_BLOCK points and
+# added left to right in global point order on EVERY path, so the float
+# addition sequence — hence every bit of the chain — is invariant to tile
+# size and sharding. Changing this constant changes chains.
+STATS_BLOCK = 1024
+
+
+def _pad_points(arrs, bn: int):
+    out = []
+    for a in arrs:
+        out.append(_pad_dim(a, 0, (-a.shape[0]) % bn))
+    return out
+
+
+def _assign_block(feats, w, const, logw, active, gidx, kz):
+    """Step (e) on a resident block: (bn,) labels, linear-likelihood form.
+
+    Same op order as kernels/assign._assign_linear_kernel (ll + logpi,
+    mask, + Gumbel, first-max argmax) with the full (K, d') weight block
+    resident instead of streamed cluster tiles — per-element arithmetic
+    is identical, so interpret-mode labels match bitwise.
+    """
+    ll = (jnp.dot(feats, w.T, preferred_element_type=jnp.float32)
+          + const[None, :])
+    t = ll + logw[None, :]
+    t = jnp.where(active[None, :] != 0, t, NEG_INF)
+    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
+    t = t + prng.gumbel(kz, gidx[:, None], cid)
+    return jnp.argmax(t, axis=1).astype(jnp.int32)
+
+
+def _sub_assign_block(feats, subw, subconst, sublogw, lab, gidx, kzb):
+    """Step (f) on a resident block: one-hot MXU gather of the own-cluster
+    (2, d') sub-params — mirrors kernels/assign._sub_assign_linear_kernel."""
+    k, _, dp = subw.shape
+    onehot = (lab[:, None]
+              == jax.lax.broadcasted_iota(jnp.int32, (lab.shape[0], k), 1)
+              ).astype(jnp.float32)
+    own_w = jnp.dot(onehot, subw.reshape(k, 2 * dp),
+                    preferred_element_type=jnp.float32).reshape(-1, 2, dp)
+    own_const = jnp.dot(onehot, subconst,
+                        preferred_element_type=jnp.float32)
+    own_logw = jnp.dot(onehot, sublogw,
+                       preferred_element_type=jnp.float32)
+    ll = jnp.einsum("nd,nsd->ns", feats, own_w,
+                    preferred_element_type=jnp.float32) + own_const
+    t = ll + own_logw
+    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
+    t = t + prng.gumbel(kzb, gidx[:, None], cid)
+    return jnp.argmax(t, axis=1).astype(jnp.int32)
+
+
+def _seg_onehot(lab, sub, valid, s: int):
+    """(bn, 2K) one-hot over segments s = 2*label + sublabel, in VMEM —
+    mirrors kernels/suffstats._tile_resp with the full segment range."""
+    seg = lab * 2 + sub
+    col = jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], s), 1)
+    return (seg[:, None] == col).astype(jnp.float32) * valid[:, None]
+
+
+# ---------------------------------------------------------------------------
+# Linear-likelihood families (multinomial / poisson / diag-Gaussian):
+# the stat features ARE the assign_pack features (x, or [x, x^2]), so the
+# whole sweep shares one resident feature block.
+# ---------------------------------------------------------------------------
+def _sweep_linear_kernel(spb, feats_ref, w_ref, const_ref, logw_ref,
+                         act_ref, subw_ref, subconst_ref, sublogw_ref,
+                         valid_ref, gidx_ref, kz_ref, kzb_ref,
+                         lab_ref, sub_ref, n_ref, sf_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i % spb == 0)
+    def _init():                    # new STATS_BLOCK: fresh partial
+        n_ref[...] = jnp.zeros_like(n_ref)
+        sf_ref[...] = jnp.zeros_like(sf_ref)
+
+    feats = feats_ref[...]                               # the ONE x read
+    gidx = gidx_ref[...]
+    lab = _assign_block(feats, w_ref[...], const_ref[...], logw_ref[...],
+                        act_ref[...], gidx, kz_ref[...])
+    sub = _sub_assign_block(feats, subw_ref[...], subconst_ref[...],
+                            sublogw_ref[...], lab, gidx, kzb_ref[...])
+    lab_ref[...] = lab
+    sub_ref[...] = sub
+    r = _seg_onehot(lab, sub, valid_ref[...], n_ref.shape[1])
+    n_ref[...] += jnp.sum(r, axis=0)[None, :]
+    sf_ref[...] += jnp.dot(r.T, feats,
+                           preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def sweep_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
+                 logw: jax.Array, active: jax.Array, subw: jax.Array,
+                 subconst: jax.Array, sublogw: jax.Array, valid: jax.Array,
+                 gidx: jax.Array, key_z: jax.Array, key_zb: jax.Array, *,
+                 bn: int = 128, interpret: bool = False
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """One-read fused sweep for linear-likelihood families.
+
+    feats: (N, d') assign_pack features (shared by steps e/f AND the stat
+    fold); w: (K, d'); const/logw: (K,); active: (K,) bool/int;
+    subw: (K, 2, d'); subconst/sublogw: (K, 2); valid: (N,); gidx: (N,)
+    uint32; key_z/key_zb: (2,) uint32.
+
+    Returns ``(labels (N,), sublabels (N,), n2 (nsb, K, 2),
+    sf2 (nsb, K, 2, d'))`` where the trailing pair are per-STATS_BLOCK
+    stat partials to be folded left-to-right by the caller.
+    """
+    assert STATS_BLOCK % bn == 0, "bn must divide the stats fold block"
+    n, dp = feats.shape
+    k = w.shape[0]
+    s = 2 * k
+    feats, valid, gidx = _pad_points(
+        (feats, jnp.asarray(valid, jnp.float32),
+         gidx.astype(jnp.uint32)), bn)
+    gn = feats.shape[0] // bn
+    spb = STATS_BLOCK // bn
+    nsb = -(-gn // spb)
+    active = active.astype(jnp.int32)
+
+    labels, sublabels, n2, sf2 = pl.pallas_call(
+        functools.partial(_sweep_linear_kernel, spb),
+        grid=(gn,),                      # sequential: partials fold in order
+        in_specs=[
+            pl.BlockSpec((bn, dp), lambda i: (i, 0)),
+            pl.BlockSpec((k, dp), lambda i: (0, 0)),     # resident VMEM
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, 2, dp), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            # revisited for the spb steps inside each stats block
+            pl.BlockSpec((1, s), lambda i: (i // spb, 0)),
+            pl.BlockSpec((1, s, dp), lambda i: (i // spb, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((feats.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((feats.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((nsb, s), jnp.float32),
+            jax.ShapeDtypeStruct((nsb, s, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(feats, w, const, logw, active, subw, subconst, sublogw, valid, gidx,
+      key_z, key_zb)
+    return (labels[:n], sublabels[:n], n2.reshape(nsb, k, 2),
+            sf2.reshape(nsb, k, 2, dp))
+
+
+# ---------------------------------------------------------------------------
+# Full-covariance Gaussian: whitening-Mahalanobis assignment, vector-gather
+# sub-assignment, second-moment stat fold — one resident x block.
+# ---------------------------------------------------------------------------
+def _sweep_gauss_kernel(spb, x_ref, mu_ref, f_ref, ld_ref, logw_ref,
+                        act_ref, smu_ref, sfchol_ref, sld_ref, sublogw_ref,
+                        valid_ref, gidx_ref, kz_ref, kzb_ref,
+                        lab_ref, sub_ref, n_ref, sx_ref, sxx_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i % spb == 0)
+    def _init():
+        n_ref[...] = jnp.zeros_like(n_ref)
+        sx_ref[...] = jnp.zeros_like(sx_ref)
+        sxx_ref[...] = jnp.zeros_like(sxx_ref)
+
+    x = x_ref[...]                                       # the ONE x read
+    gidx = gidx_ref[...]
+    k, d = mu_ref.shape
+
+    # step (e): mirror of kernels/assign._assign_gauss_kernel with the
+    # full (K, d, d) Cholesky block resident
+    diff = x[:, None, :] - mu_ref[...][None, :, :]       # (bn, K, d)
+    y = jax.lax.dot_general(
+        diff.transpose(1, 0, 2), f_ref[...],
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)              # (K, bn, d)
+    maha = jnp.sum(y * y, axis=-1)                       # (K, bn)
+    ll = (0.5 * (ld_ref[...][:, None] - maha) - 0.5 * d * LOG_2PI).T
+    t = ll + logw_ref[...][None, :]
+    t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
+    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
+    t = t + prng.gumbel(kz_ref[...], gidx[:, None], cid)
+    lab = jnp.argmax(t, axis=1).astype(jnp.int32)
+
+    # step (f): mirror of kernels/assign._sub_assign_gauss_kernel
+    mu_own = jnp.take(smu_ref[...], lab, axis=0)         # (bn, 2, d)
+    f_own = jnp.take(sfchol_ref[...], lab, axis=0)       # (bn, 2, d, d)
+    ld_own = jnp.take(sld_ref[...], lab, axis=0)         # (bn, 2)
+    logw_own = jnp.take(sublogw_ref[...], lab, axis=0)
+    diff2 = x[:, None, :] - mu_own
+    y2 = jnp.einsum("nsd,nsde->nse", diff2, f_own,
+                    preferred_element_type=jnp.float32)
+    maha2 = jnp.sum(y2 * y2, axis=-1)
+    ll2 = 0.5 * (ld_own - maha2) - 0.5 * d * LOG_2PI
+    t2 = ll2 + logw_own
+    cid2 = jax.lax.broadcasted_iota(jnp.uint32, t2.shape, 1)
+    t2 = t2 + prng.gumbel(kzb_ref[...], gidx[:, None], cid2)
+    sub = jnp.argmax(t2, axis=1).astype(jnp.int32)
+    lab_ref[...] = lab
+    sub_ref[...] = sub
+
+    # stat fold: mirror of kernels/suffstats._suffstats_labels_kernel
+    r = _seg_onehot(lab, sub, valid_ref[...], n_ref.shape[1])
+    n_ref[...] += jnp.sum(r, axis=0)[None, :]
+    sx_ref[...] += jnp.dot(r.T, x,
+                           preferred_element_type=jnp.float32)[None]
+    xw = r.T[:, :, None] * x[None, :, :]                 # (2K, bn, d)
+    sxx_ref[...] += jax.lax.dot_general(
+        xw.transpose(0, 2, 1), jnp.broadcast_to(x, (r.shape[1],) + x.shape),
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)[None]
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def sweep_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
+                logdet_prec: jax.Array, logw: jax.Array, active: jax.Array,
+                sub_mu: jax.Array, sub_chol_prec: jax.Array,
+                sub_logdet_prec: jax.Array, sublogw: jax.Array,
+                valid: jax.Array, gidx: jax.Array, key_z: jax.Array,
+                key_zb: jax.Array, *, bn: int = 128,
+                interpret: bool = False
+                ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
+                           jax.Array]:
+    """One-read fused sweep for the full-covariance Gaussian.
+
+    x: (N, d); mu: (K, d); chol_prec: (K, d, d); logdet_prec/logw: (K,);
+    sub_*: the (K, 2, ...) sub-cluster analogues; valid: (N,);
+    gidx: (N,) uint32. Returns ``(labels, sublabels, n2 (nsb, K, 2),
+    sx2 (nsb, K, 2, d), sxx2 (nsb, K, 2, d, d))`` with per-STATS_BLOCK
+    stat partials.
+    """
+    assert STATS_BLOCK % bn == 0, "bn must divide the stats fold block"
+    n, d = x.shape
+    k = mu.shape[0]
+    s = 2 * k
+    x, valid, gidx = _pad_points(
+        (x, jnp.asarray(valid, jnp.float32), gidx.astype(jnp.uint32)), bn)
+    gn = x.shape[0] // bn
+    spb = STATS_BLOCK // bn
+    nsb = -(-gn // spb)
+    active = active.astype(jnp.int32)
+
+    labels, sublabels, n2, sx2, sxx2 = pl.pallas_call(
+        functools.partial(_sweep_gauss_kernel, spb),
+        grid=(gn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((k, d), lambda i: (0, 0)),
+            pl.BlockSpec((k, d, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k,), lambda i: (0,)),
+            pl.BlockSpec((k, 2, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((k, 2, d, d), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((k, 2), lambda i: (0, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((2,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((1, s), lambda i: (i // spb, 0)),
+            pl.BlockSpec((1, s, d), lambda i: (i // spb, 0, 0)),
+            pl.BlockSpec((1, s, d, d), lambda i: (i // spb, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
+            jax.ShapeDtypeStruct((nsb, s), jnp.float32),
+            jax.ShapeDtypeStruct((nsb, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((nsb, s, d, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, mu, chol_prec, logdet_prec, logw, active, sub_mu, sub_chol_prec,
+      sub_logdet_prec, sublogw, valid, gidx, key_z, key_zb)
+    return (labels[:n], sublabels[:n], n2.reshape(nsb, k, 2),
+            sx2.reshape(nsb, k, 2, d), sxx2.reshape(nsb, k, 2, d, d))
