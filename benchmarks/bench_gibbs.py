@@ -119,10 +119,15 @@ def _hbm_intermediate_floats(n: int, k: int, d: int) -> dict:
 def _hotpath_leg(use_pallas: bool, iters: int) -> dict:
     """One measured leg; run in its OWN process so the process-lifetime
     memory peak (device memory_stats or RSS) is per-path, not a running
-    max over whichever leg happened to run first."""
+    max over whichever leg happened to run first. Within the process the
+    warm-up fit still raises the RSS high-water mark before the timed
+    fit, so the timed fit's RSS is recorded as a per-leg *delta* against
+    a baseline taken after warm-up (``peak_rss_delta_bytes``) and the
+    source field says whether the absolute number is leg-accurate
+    (``process_peak_rss``) or inherited (``process_peak_rss_stale``)."""
     import jax
 
-    from repro.core.sampler import _measured_peak
+    from repro.core.sampler import _measured_peak, _rss_peak_bytes
 
     n, d, k = HOTPATH_N, HOTPATH_D, HOTPATH_K
     x, gt = generate_gmm(n, d, k, seed=0, sep=8.0)
@@ -134,14 +139,18 @@ def _hotpath_leg(use_pallas: bool, iters: int) -> dict:
 
     fit()                                # process warm-up, discarded...
     base, _ = _measured_peak()           # ...but it sets the same peak
+    rss_before = _rss_peak_bytes()
     r = fit()
-    peak, src = _measured_peak()
+    peak, src = _measured_peak(rss_before)
+    delta = (max(peak - rss_before, 0)
+             if src.startswith("process_peak_rss") else None)
     row = {"path": "fused" if use_pallas else "reference",
            "backend": jax.default_backend(),
            "ms_per_iter": float(np.mean(r.iter_times_s[1:]) * 1e3),
            "K_found": r.k, "nmi": round(r.nmi(gt), 4),
            "peak_bytes_in_use": peak,
            "peak_bytes_source": src,
+           "peak_rss_delta_bytes": delta,
            "warmup_peak_bytes_in_use": base}
     print(_ROW_MARK + json.dumps(row), flush=True)
     return row
@@ -165,10 +174,17 @@ def _hotpath_interp_smoke(iters: int) -> dict:
 
     fused = fit(True)
     ref = fit(False)
+    # the CHAIN is bitwise: labels and the integer-derived history traces.
+    # The "score" trace is a float32 diagnostic recomputed inside each
+    # program; Pallas-vs-jnp programs fuse its log-marginal sum
+    # differently, so it carries compilation-level ULPs (checked to
+    # tolerance, not bit equality — same contract as cross-plane params).
     same = bool(
         np.array_equal(fused.labels, ref.labels)
         and all(np.array_equal(fused.history[key], ref.history[key])
-                for key in fused.history))
+                for key in fused.history if key != "score")
+        and np.allclose(fused.history["score"], ref.history["score"],
+                        rtol=1e-3, atol=1.0))
     row = {"path": "fused_interpret_smoke",
            "backend": jax.default_backend(),
            "N": n, "d": d, "iters": iters,

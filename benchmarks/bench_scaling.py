@@ -137,7 +137,13 @@ def run_oocore(iters: int = 12, n: int = OOCORE_N, d: int = OOCORE_D):
             "ms_per_iter": ms,
             "est_peak_device_bytes": peak,
             "peak_bytes_in_use": r.device_bytes["peak_bytes_in_use"],
+            # source is leg-accurate now: the resident baseline fit sets
+            # the process RSS high-water mark, so the later tiled fits in
+            # this same process report 'process_peak_rss_stale' plus their
+            # own per-leg delta instead of re-claiming the resident peak
             "peak_bytes_source": r.device_bytes["peak_bytes_source"],
+            "peak_rss_delta_bytes": r.device_bytes.get(
+                "peak_rss_delta_bytes"),
             "resident_footprint_ratio": round(peak / resident_peak, 4),
             "K_found": r.k,
             "nmi": round(r.nmi(gt), 4),

@@ -1,0 +1,137 @@
+"""DPMM serving throughput: queries/sec through the precompiled engine.
+
+Fits a small DPGMM, round-trips it through the real checkpoint path
+(core/checkpoint.py — so the bench exercises exactly what production
+serving would load), then measures steady-state throughput of
+``DPMMEngine.query`` at several batch sizes, plus the sampled-assignment
+path. Persists BENCH_serve.json next to BENCH_gibbs.json /
+BENCH_scaling.json so CI's regression gate (benchmarks/check_regression.py)
+tracks serving perf per PR.
+
+An accuracy invariant rides along: the engine's soft-assignment
+log-probs are recomputed directly from ``family.loglik`` + the
+renormalized log-weights and compared to f32 ULPs
+(``soft_matches_loglik`` in the JSON) — the serving path must never
+drift from the sampler's likelihood.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import platform
+import tempfile
+import time
+
+import numpy as np
+
+SERVE_N, SERVE_D, SERVE_K = 20_000, 8, 8
+BATCH_SIZES = (256, 2048, 8192)
+N_QUERIES = 32_768
+
+
+def _build_engine_ckpt(iters: int, tmpdir: str) -> str:
+    from repro.configs import DPMMConfig
+    from repro.core.checkpoint import save_model
+    from repro.core.sampler import DPMM
+    from repro.data.synthetic import generate_gmm
+
+    x, _ = generate_gmm(SERVE_N, SERVE_D, SERVE_K, seed=0, sep=8.0)
+    cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=32, burnout=5)
+    result = DPMM(cfg).fit(x, n_chains=2).select_best()
+    path = os.path.join(tmpdir, "bench_serve_ckpt.npz")
+    save_model(path, result.state, "gaussian")
+    return path
+
+
+def _soft_matches_loglik(engine, xq: np.ndarray) -> bool:
+    """Recompute the soft assignment directly from family.loglik with
+    eager jnp ops (same algorithm, different executable than the engine's
+    compiled step) — must agree to f32 ULPs, labels exactly."""
+    import jax.numpy as jnp
+    from jax.scipy.special import logsumexp
+
+    from repro.core.family import NEG_INF
+
+    res = engine.query(xq)
+    ll = engine.family.loglik(jnp.asarray(xq), engine.model.params)
+    logits = jnp.where(engine.model.active[None, :],
+                       ll + engine.logweights[None, :], NEG_INF)
+    lp = np.asarray(logits - logsumexp(logits, axis=-1, keepdims=True))
+    finite = np.isfinite(lp)
+    return bool(
+        np.allclose(res.logprobs[finite], lp[finite], rtol=1e-5, atol=1e-5)
+        and np.array_equal(res.labels, np.asarray(logits).argmax(axis=1)))
+
+
+def run(iters: int = 20, reps: int = 10,
+        out_json: str = "BENCH_serve.json") -> dict:
+    import jax
+
+    from repro.serve.dpmm import DPMMEngine
+
+    rng = np.random.default_rng(1)
+    xq = rng.standard_normal((N_QUERIES, SERVE_D)).astype(np.float32)
+
+    with tempfile.TemporaryDirectory() as tmpdir:
+        ckpt = _build_engine_ckpt(iters, tmpdir)
+        rows = []
+        invariant = None
+        for batch in BATCH_SIZES:
+            t0 = time.perf_counter()
+            engine = DPMMEngine.from_checkpoint(ckpt, batch_size=batch)
+            build_s = time.perf_counter() - t0
+            if invariant is None:        # once; batch-size independent
+                invariant = _soft_matches_loglik(engine, xq[:4096])
+            engine.query(xq[:batch])                    # steady-state
+            times = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                engine.query(xq)
+                times.append(time.perf_counter() - t0)
+            dt = float(np.median(times))
+            t0 = time.perf_counter()
+            engine.sample(xq, seed=0)
+            dt_sample = time.perf_counter() - t0
+            row = {
+                "batch_size": batch,
+                "n_queries": N_QUERIES,
+                "queries_per_s": round(N_QUERIES / dt, 1),
+                "ms_per_request": round(dt * 1e3, 3),
+                "sampled_queries_per_s": round(N_QUERIES / dt_sample, 1),
+                "engine_build_s": round(build_s, 3),
+            }
+            rows.append(row)
+            print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
+                  flush=True)
+
+    payload = {
+        "bench": "serve",
+        "backend": jax.default_backend(),
+        "host": platform.platform(),
+        "config": {"component": "gaussian", "fit_N": SERVE_N,
+                   "d": SERVE_D, "K_true": SERVE_K, "k_max": 32,
+                   "fit_iters": iters, "n_queries": N_QUERIES},
+        "results": rows,
+        "invariants": {"soft_matches_loglik": invariant,
+                       "engine_from_checkpoint": True},
+    }
+    with open(out_json, "w") as f:
+        json.dump(payload, f, indent=2)
+        f.write("\n")
+    print(f"[bench_serve] wrote {out_json}")
+    return payload
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--iters", type=int, default=20,
+                    help="fit iterations for the served model")
+    ap.add_argument("--reps", type=int, default=10)
+    ap.add_argument("--out-json", default="BENCH_serve.json")
+    args = ap.parse_args(argv)
+    run(iters=args.iters, reps=args.reps, out_json=args.out_json)
+
+
+if __name__ == "__main__":
+    main()

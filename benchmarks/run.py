@@ -8,6 +8,7 @@ Sections:
   kernels    — §4.2: two-kernel auto-selection crossover (C5)
   real_data  — Figs 8-9: real-shaped datasets (structural analogue)
   roofline   — §Roofline table from the dry-run artifacts
+  serve      — DPMMEngine throughput (queries/sec -> BENCH_serve.json)
 """
 from __future__ import annotations
 
@@ -21,18 +22,19 @@ def main(argv=None) -> None:
                     help="paper-scale sweeps (hours)")
     ap.add_argument("--only", default="",
                     help="comma list: gibbs,scaling,kernels,real_data,"
-                         "roofline")
+                         "roofline,serve")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
     from benchmarks import (bench_gibbs, bench_kernels, bench_real_data,
-                            bench_roofline, bench_scaling)
+                            bench_roofline, bench_scaling, bench_serve)
     sections = [
         ("gibbs", lambda: bench_gibbs.run(full=args.full)),
         ("scaling", bench_scaling.run),
         ("kernels", bench_kernels.run),
         ("real_data", lambda: bench_real_data.run(quick=not args.full)),
         ("roofline", bench_roofline.run),
+        ("serve", bench_serve.run),
     ]
     for name, fn in sections:
         if only and name not in only:

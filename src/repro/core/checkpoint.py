@@ -1,0 +1,91 @@
+"""ModelState checkpointing: npz round-trip with bitwise-resume parity.
+
+The ``ModelState`` *is* the whole chain state: every per-point quantity
+(labels, sub-labels) is recomputed from the model at the start of each
+sweep, and all randomness derives from ``(state.key, state.it)`` via
+``fold_in`` — so checkpointing the O(K_max) model alone is enough to
+resume a fit bitwise-identically (``DPMM.fit(x, iters, init_state=m)``;
+verified in tests/test_multichain.py). A multi-chain state (leading chain
+axis on every leaf, ``fit(..., n_chains=C)``) round-trips the same way.
+
+Format: a plain ``np.savez`` archive — one entry per pytree leaf in
+flatten order, plus metadata (format version, family name, PRNG impl).
+The pytree *structure* is not serialized; it is rebuilt from the family's
+``param_struct``/``stats_struct`` templates, so a checkpoint is portable
+across processes and jax versions as long as the family definition
+matches (the leaf count is checked and mismatches fail loudly). The PRNG
+key is stored as its raw ``key_data`` words and re-wrapped on load —
+typed key arrays are not npz-serializable.
+
+This is also the hand-off format to the serving path: ``DPMMEngine``
+(serve/dpmm.py) loads a checkpoint and answers queries from it.
+"""
+from __future__ import annotations
+
+import io
+from typing import Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.family import ComponentFamily, get_family
+from repro.core.state import ModelState
+
+FORMAT_VERSION = 1
+_META = ("__version__", "__family__", "__impl__")
+
+
+def _template(family: ComponentFamily) -> ModelState:
+    """A placeholder ModelState with the family's exact pytree structure
+    (leaf values are irrelevant — only the treedef is used)."""
+    return ModelState(
+        key=0, it=0, active=0, logweights=0, sub_logweights=0, stuck=0,
+        params=family.param_struct(), subparams=family.param_struct(),
+        stats=family.stats_struct(), substats=family.stats_struct())
+
+
+def _key_impl(key: jax.Array) -> str:
+    try:
+        return str(jax.random.key_impl(key))
+    except Exception:
+        return "threefry2x32"
+
+
+def save_model(path: Union[str, io.IOBase], model: ModelState,
+               family: Union[str, ComponentFamily]) -> None:
+    """Write ``model`` (single- or multi-chain) to ``path`` as npz."""
+    name = family if isinstance(family, str) else family.name
+    get_family(name)                     # fail early on unknown family
+    raw = model._replace(key=jax.random.key_data(model.key))
+    leaves, _ = jax.tree_util.tree_flatten(raw)
+    arrs = {f"leaf_{i:04d}": np.asarray(jax.device_get(leaf))
+            for i, leaf in enumerate(leaves)}
+    np.savez(path, __version__=np.int64(FORMAT_VERSION),
+             __family__=np.str_(name),
+             __impl__=np.str_(_key_impl(model.key)), **arrs)
+
+
+def load_model(path: Union[str, io.IOBase]
+               ) -> Tuple[ModelState, ComponentFamily]:
+    """Read a checkpoint; returns ``(model, family)``. Leaves come back
+    bit-for-bit (npz stores raw array bytes)."""
+    with np.load(path, allow_pickle=False) as z:
+        version = int(z["__version__"])
+        if version > FORMAT_VERSION:
+            raise ValueError(
+                f"checkpoint format v{version} is newer than this code "
+                f"(v{FORMAT_VERSION})")
+        family = get_family(str(z["__family__"]))
+        impl = str(z["__impl__"])
+        treedef = jax.tree_util.tree_structure(_template(family))
+        names = sorted(k for k in z.files if k not in _META)
+        if len(names) != treedef.num_leaves:
+            raise ValueError(
+                f"checkpoint has {len(names)} leaves but family "
+                f"{family.name!r} expects {treedef.num_leaves} — family "
+                "definition drifted since this checkpoint was written")
+        leaves = [jnp.asarray(z[k]) for k in names]
+    model = jax.tree_util.tree_unflatten(treedef, leaves)
+    return model._replace(
+        key=jax.random.wrap_key_data(model.key, impl=impl)), family

@@ -28,12 +28,30 @@ and suff-stats fold in fixed STATS_BLOCK-aligned blocks (core/gibbs.py),
 the two planes produce bitwise-identical chains — tile size, like shard
 count, is a pure performance knob.
 
+**Multi-chain fits** (``fit(..., n_chains=C)``): both drivers carry an
+optional leading *chain axis* on the (ModelState, PointState) pair. The C
+chains run inside the same jitted chunk via ``jax.lax.map`` over that
+axis, sharing ONE device-resident copy of x (the points are closed over,
+never duplicated per chain, and in tiled mode each streamed tile is
+uploaded once and consumed by every chain) and syncing with the host once
+per chunk total — not once per chain. ``lax.map`` (not ``vmap``) is the
+batching transform on purpose: it traces the *identical* unbatched chain
+body per slice, so chain c of an ``n_chains=C`` fit is **bitwise
+identical** to an independent single-chain fit with
+``key=fold_in(key(seed), c)`` — vmap's batched reductions reassociate
+float additions and break the repo's bitwise-chain contract (measured:
+ULP drift in stats by iteration 1). Cross-chain diagnostics ride on the
+result: ``FitResult.rhat`` (split-R-hat over history traces),
+``FitResult.select_best`` (max posterior ``score``), and per-chain views
+via ``FitResult.chain(c)``.
+
 Example (paper §3.4.1 analogue):
     >>> from repro.core.sampler import DPMM
     >>> from repro.configs import DPMMConfig
     >>> model = DPMM(DPMMConfig(alpha=10., iters=100))
     >>> result = model.fit(x)          # x: (N, d) np.ndarray or DataSource
     >>> result.labels, result.k, result.nmi(gt)
+    >>> best = model.fit(x, n_chains=4).select_best()   # parallel chains
 """
 from __future__ import annotations
 
@@ -45,6 +63,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.scipy.special import gammaln
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DPMMConfig
@@ -58,7 +77,50 @@ from repro.core.metrics import ari, nmi
 from repro.core.state import ModelState, PointState
 from repro.data.source import DataSource, as_source
 
-_HIST_KEYS = ("k", "max_cluster", "min_cluster")
+_HIST_KEYS = ("k", "max_cluster", "min_cluster", "score")
+
+
+def chain_score(model: ModelState, prior, family, alpha: float) -> jax.Array:
+    """Collapsed log posterior density of the chain's clustering (up to a
+    data-independent constant): the CRP EPPF plus the per-cluster marginal
+    likelihoods, ``sum_k [log alpha + lgamma(N_k) + log m(prior, S_k)]``
+    over active clusters. O(K) — no per-point input. This is the ranking
+    used by ``FitResult.select_best`` and the 'score' history trace R-hat
+    diagnoses (inactive slots are masked BEFORE the sum, so their
+    unnormalized stats never contribute NaNs)."""
+    logm = family.log_marginal(prior, model.stats)
+    act = model.active
+    occ = jnp.where(act, jnp.maximum(model.stats.n, 1.0), 1.0)
+    return (jnp.sum(jnp.where(act, logm, 0.0))
+            + model.k_hat.astype(jnp.float32) * jnp.log(jnp.float32(alpha))
+            + jnp.sum(jnp.where(act, gammaln(occ), 0.0))
+            ).astype(jnp.float32)
+
+
+def _summaries(model: ModelState, prior, family, alpha: float) -> dict:
+    """Per-step history row: the replicated scalar diagnostics plus the
+    posterior 'score' trace (chain_score)."""
+    s = model.summarize()
+    s["score"] = chain_score(model, prior, family, alpha)
+    return s
+
+
+def _chain_keys(key: jax.Array, n_chains: int) -> jax.Array:
+    """(C,) per-chain base keys: ``fold_in(key, c)``. vmap over the
+    integer chain ids is exact (threefry is integer math), so chain c's
+    key is bit-for-bit the key an independent single-chain fit gets from
+    ``fold_in(key, c)``."""
+    return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        key, jnp.arange(n_chains))
+
+
+def _chain_map(f):
+    """lax.map ``f`` over a leading chain axis of every argument — the
+    multi-chain batching transform. The mapped body is the *same traced
+    jaxpr* as the unbatched one, which is what keeps per-chain results
+    bitwise identical to independent single-chain fits (vmap would batch
+    the float reductions and reassociate them)."""
+    return lambda *args: jax.lax.map(lambda s: f(*s), args)
 
 
 def _init_local(key, x, valid, *, prior, family, cfg, axes, k_max,
@@ -147,6 +209,30 @@ def dpmm_step(model: ModelState, point: PointState, x, *, prior, family,
     return model._replace(it=model.it + 1), point
 
 
+def _peak_fields(rss_baseline: Optional[int]) -> Dict[str, Any]:
+    """The measured-peak entries of ``FitResult.device_bytes``. When the
+    measurement is the RSS fallback, also record the high-water *delta*
+    over this fit (``peak_rss_delta_bytes``) — the leg-accurate number
+    when several fits share one process (a later fit that never exceeds
+    an earlier one's peak reports delta 0 and source
+    ``process_peak_rss_stale`` instead of silently re-reporting the old
+    peak as its own)."""
+    peak, src = _measured_peak(rss_baseline)
+    fields: Dict[str, Any] = {"peak_bytes_in_use": peak,
+                              "peak_bytes_source": src}
+    if src.startswith("process_peak_rss") and rss_baseline is not None:
+        fields["peak_rss_delta_bytes"] = max(int(peak) - rss_baseline, 0)
+    return fields
+
+
+def _copy_state(state: ModelState) -> ModelState:
+    """Fresh buffers for a caller-provided init_state: the resident
+    chunk donates its state arguments, and without the copy the FIRST
+    chunk would delete the caller's (possibly checkpoint-loaded) arrays
+    out from under them — resuming twice from one state would crash."""
+    return jax.tree.map(jnp.copy, state)
+
+
 def _tree_bytes(tree: Any) -> int:
     return sum(int(np.prod(l.shape)) * l.dtype.itemsize
                for l in jax.tree_util.tree_leaves(tree)
@@ -155,6 +241,11 @@ def _tree_bytes(tree: Any) -> int:
 
 @dataclasses.dataclass
 class FitResult:
+    """Result of ``DPMM.fit``. With ``n_chains=1`` (default) every field
+    is per-run; with C > 1 the state/labels/history carry a leading chain
+    axis ((C, ...) state leaves, (C, N) labels, (C, iters) traces), ``k``
+    is the best-scoring chain's cluster count, and the cross-chain views
+    are ``chain(c)`` / ``select_best()`` / ``rhat(key)``."""
     state: ModelState            # final replicated model-side state
     labels: np.ndarray           # (N,) cluster assignments (unpadded)
     k: int
@@ -166,39 +257,106 @@ class FitResult:
     # device.memory_stats() where the backend reports it, else the
     # process's peak RSS — with its origin in peak_bytes_source.
     device_bytes: Optional[Dict[str, Any]] = None
+    n_chains: int = 1
+    # final chain_score per chain: scalar (C=1) or (C,) — the
+    # select_best ranking; the full trace is history["score"]
+    score: Any = None
+
+    def chain(self, c: int) -> "FitResult":
+        """Single-chain view of chain ``c`` (bitwise — pure slicing)."""
+        if self.n_chains == 1:
+            if c != 0:
+                raise IndexError(f"single-chain result has no chain {c}")
+            return self
+        state_c = jax.tree.map(lambda v: v[c], self.state)
+        return FitResult(
+            state=state_c, labels=self.labels[c],
+            k=int(np.asarray(state_c.active).sum()),
+            history={k: np.asarray(v[c]) for k, v in self.history.items()},
+            iter_times_s=self.iter_times_s,
+            device_bytes=self.device_bytes, n_chains=1,
+            score=float(np.asarray(self.score)[c]))
+
+    def select_best(self) -> "FitResult":
+        """The chain with the highest final posterior ``score``
+        (core/sampler.chain_score) — what a practitioner consumes."""
+        if self.n_chains == 1:
+            return self
+        return self.chain(int(np.argmax(np.asarray(self.score))))
+
+    def rhat(self, key: str = "score") -> float:
+        """Split-R-hat (Gelman et al.) over the per-chain history traces
+        of ``key`` ('score' or 'k' are the useful ones). Values near 1
+        mean the chains agree; > ~1.1 means they found different modes —
+        run longer or take ``select_best()`` with a grain of salt."""
+        if self.n_chains < 2:
+            raise ValueError("rhat needs n_chains >= 2")
+        trace = np.asarray(self.history[key], np.float64)   # (C, T)
+        half = trace.shape[1] // 2
+        if half < 2:
+            raise ValueError("rhat needs >= 4 recorded iterations")
+        x = np.concatenate([trace[:, :half], trace[:, half:2 * half]])
+        n = x.shape[1]
+        w = x.var(axis=1, ddof=1).mean()
+        b = n * x.mean(axis=1).var(ddof=1)
+        if w <= 0.0:
+            return 1.0 if b <= 0.0 else float("inf")
+        return float(np.sqrt(((n - 1) / n * w + b / n) / w))
+
+    def rhats(self) -> Dict[str, float]:
+        return {key: self.rhat(key) for key in ("k", "score")}
 
     def nmi(self, true_labels: np.ndarray, n_true: Optional[int] = None):
+        if self.n_chains > 1:
+            return self.select_best().nmi(true_labels, n_true)
         n_true = n_true or int(true_labels.max()) + 1
         k_max = int(self.state.active.shape[0])
         return float(nmi(jnp.asarray(true_labels),
                          jnp.asarray(self.labels), n_true, k_max))
 
     def ari(self, true_labels: np.ndarray, n_true: Optional[int] = None):
+        if self.n_chains > 1:
+            return self.select_best().ari(true_labels, n_true)
         n_true = n_true or int(true_labels.max()) + 1
         k_max = int(self.state.active.shape[0])
         return float(ari(jnp.asarray(true_labels),
                          jnp.asarray(self.labels), n_true, k_max))
 
 
-def _measured_peak() -> Tuple[Optional[int], str]:
+def _rss_peak_bytes() -> Optional[int]:
+    """Process-lifetime peak RSS in bytes (``ru_maxrss``), or None where
+    unmeasurable (non-POSIX)."""
+    try:
+        import resource
+        return int(resource.getrusage(resource.RUSAGE_SELF).ru_maxrss) * 1024
+    except Exception:
+        return None
+
+
+def _measured_peak(rss_baseline: Optional[int] = None
+                   ) -> Tuple[Optional[int], str]:
     """(peak bytes, source): the backend's ``peak_bytes_in_use`` where
     ``device.memory_stats()`` reports it (TPU/GPU), else the process's
     peak RSS (``ru_maxrss``; on CPU the 'device' IS host memory) — so
     memory claims are measurable everywhere. RSS is a process-lifetime
     high-water mark that includes host-side buffers and cannot be reset
-    between fits; the source is recorded next to the number so consumers
-    (FitResult.device_bytes, BENCH_*.json) can tell which they got.
+    between fits, so a leg that runs after a larger allocation in the same
+    process would silently report that *earlier* peak as its own. Callers
+    that measure a leg pass ``rss_baseline`` (``_rss_peak_bytes()`` taken
+    at leg start); when the high-water mark did not move during the leg
+    the source is reported as ``process_peak_rss_stale`` — the number is a
+    ceiling inherited from earlier work, not this leg's footprint.
     """
     stats = jax.local_devices()[0].memory_stats() or {}
     peak = stats.get("peak_bytes_in_use")
     if peak is not None:
         return int(peak), "device.memory_stats"
-    try:
-        import resource
-        rss_kib = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
-        return int(rss_kib) * 1024, "process_peak_rss"
-    except Exception:                         # non-POSIX: no measurement
+    rss = _rss_peak_bytes()
+    if rss is None:                           # non-POSIX: no measurement
         return None, "unavailable"
+    if rss_baseline is not None and rss <= rss_baseline:
+        return rss, "process_peak_rss_stale"
+    return rss, "process_peak_rss"
 
 
 class DPMM:
@@ -209,17 +367,45 @@ class DPMM:
         self.mesh = mesh
         self.family: ComponentFamily = get_family(cfg.component)
 
-    def fit(self, x, iters: Optional[int] = None,
-            verbose: bool = False) -> FitResult:
+    def fit(self, x, iters: Optional[int] = None, verbose: bool = False,
+            *, n_chains: int = 1, key: Optional[jax.Array] = None,
+            init_state: Optional[ModelState] = None) -> FitResult:
         """Fit to ``x``: an (N, d) array (resident fast path) or any
         ``DataSource`` (e.g. ``HostTiledSource`` over an np.memmap for
         out-of-core data). ``cfg.tile_size`` forces the tiled plane even
-        for resident arrays — chains are bitwise identical either way."""
+        for resident arrays — chains are bitwise identical either way.
+
+        ``n_chains=C`` runs C parallel MCMC chains inside the same jitted
+        chunks, sharing one device copy of x; chain c is bitwise the
+        single-chain fit with ``key=fold_in(key, c)`` (see module
+        docstring). ``key`` overrides ``jax.random.key(cfg.seed)``.
+        ``init_state`` resumes from a checkpointed ``ModelState``
+        (core/checkpoint.py) and runs ``iters`` MORE iterations; because
+        every per-point quantity is recomputed from the model each sweep
+        and all randomness derives from ``(state.key, state.it)``, the
+        resumed chain is bitwise the uninterrupted one.
+        """
         source = as_source(x)
         iters = iters if iters is not None else self.cfg.iters
+        if n_chains < 1:
+            raise ValueError(f"n_chains must be >= 1, got {n_chains}")
+        if key is None:
+            key = jax.random.key(self.cfg.seed)
+        if init_state is not None:
+            want = ((n_chains, self.cfg.k_max) if n_chains > 1
+                    else (self.cfg.k_max,))
+            got = tuple(init_state.active.shape)
+            if got != want:
+                raise ValueError(
+                    f"init_state.active has shape {got}, expected {want} "
+                    f"for n_chains={n_chains}, k_max={self.cfg.k_max} — "
+                    "checkpoint/config/chain-count mismatch")
         if self.cfg.tile_size is None and source.resident() is not None:
-            return self._fit_resident(source, iters, verbose)
-        return self._fit_tiled(source, iters, verbose)
+            return self._fit_resident(source, iters, verbose,
+                                      n_chains=n_chains, key=key,
+                                      init_state=init_state)
+        return self._fit_tiled(source, iters, verbose, n_chains=n_chains,
+                               key=key, init_state=init_state)
 
     def _setup(self, source: DataSource):
         cfg = self.cfg
@@ -241,10 +427,13 @@ class DPMM:
     # ------------------------------------------------------------------
     # Resident plane: device-resident points, chunked on-device scan
     # ------------------------------------------------------------------
-    def _fit_resident(self, source: DataSource, iters: int,
-                      verbose: bool) -> FitResult:
+    def _fit_resident(self, source: DataSource, iters: int, verbose: bool,
+                      n_chains: int = 1, key: Optional[jax.Array] = None,
+                      init_state: Optional[ModelState] = None) -> FitResult:
         cfg = self.cfg
+        multi = n_chains > 1
         mesh, axes, feat_axis, kwargs = self._setup(source)
+        prior, family = kwargs["prior"], kwargs["family"]
         x = source.resident()
         n = x.shape[0]
         # non-separable families keep features replicated even when
@@ -253,24 +442,42 @@ class DPMM:
         shard_spec = P(axes)
         x_in_spec = P(axes, feat_axis)
         rep = P()
-        state_specs = state_partition_specs(self.family, shard_spec)
+        model_specs, point_specs = state_partition_specs(self.family,
+                                                         shard_spec)
+        if multi:
+            # chain axis leads every per-point leaf; replicated O(K)
+            # leaves keep P() (rank-agnostic)
+            point_specs = jax.tree.map(lambda _: P(None, axes), point_specs)
+        state_specs = (model_specs, point_specs)
+
+        def init_body(keys, x, valid):
+            if multi:
+                return jax.lax.map(
+                    lambda k: _init_local(k, x, valid, **kwargs), keys)
+            return _init_local(keys, x, valid, **kwargs)
 
         init = jax.jit(shard_map(
-            functools.partial(_init_local, **kwargs), mesh=mesh,
+            init_body, mesh=mesh,
             in_specs=(rep, x_in_spec, shard_spec), out_specs=state_specs))
 
         def make_chunk(length: int):
             """`length` iterations in one jitted call, history on device.
 
             The scan carries the (model, point) state pair; per-step
-            host-visible output is only the O(1) ``summarize()`` scalars.
-            State buffers are donated, so chunk i+1 reuses chunk i's
-            memory.
+            host-visible output is only the O(1) ``_summaries()`` scalars
+            (per chain when C > 1 — the C chains run under ``lax.map``
+            INSIDE the scan body, sharing the closed-over x). State
+            buffers are donated, so chunk i+1 reuses chunk i's memory.
             """
+            def one(m, p, x):
+                m, p = dpmm_step(m, p, x, **kwargs)
+                return (m, p), _summaries(m, prior, family, cfg.alpha)
+
             def run(model, point, x):
                 def body(mp, _):
-                    m, p = dpmm_step(*mp, x, **kwargs)
-                    return (m, p), m.summarize()
+                    if multi:
+                        return jax.lax.map(lambda s: one(*s, x), mp)
+                    return one(*mp, x)
                 return jax.lax.scan(body, (model, point), None,
                                     length=length)
             hist_specs = {k: rep for k in _HIST_KEYS}
@@ -280,8 +487,23 @@ class DPMM:
                           out_specs=(state_specs, hist_specs)),
                 donate_argnums=(0, 1))
 
-        key = jax.random.key(cfg.seed)
-        model, point = init(key, xs, valid)
+        rss0 = _rss_peak_bytes()
+        if init_state is not None:
+            model = jax.device_put(_copy_state(init_state),
+                                   NamedSharding(mesh, P()))
+            mk_point = jax.jit(shard_map(
+                lambda v: PointState(
+                    labels=jnp.zeros(((n_chains,) if multi else ())
+                                     + v.shape, jnp.int32),
+                    sublabels=jnp.zeros(((n_chains,) if multi else ())
+                                        + v.shape, jnp.int32),
+                    valid=(jnp.broadcast_to(v, (n_chains,) + v.shape)
+                           if multi else v)),
+                mesh=mesh, in_specs=(shard_spec,), out_specs=point_specs))
+            point = mk_point(valid)
+        else:
+            keys = _chain_keys(key, n_chains) if multi else key
+            model, point = init(keys, xs, valid)
 
         chunk = max(1, cfg.log_every)
         lengths = [chunk] * (iters // chunk)
@@ -307,38 +529,68 @@ class DPMM:
             hist_chunks.append(hist)
             done += length
             if verbose:
-                print(f"iter {done:4d}  K={int(hist['k'][-1])}  "
+                ks = np.asarray(hist["k"][-1]).reshape(-1).tolist()
+                print(f"iter {done:4d}  K={ks if len(ks) > 1 else ks[0]}  "
                       f"{dt / length * 1e3:.1f} ms/iter")
         history = {
             k: (np.concatenate([h[k] for h in hist_chunks])
-                if hist_chunks else np.zeros((0,)))
+                if hist_chunks else np.zeros((0,) + ((n_chains,) if multi
+                                                     else ())))
             for k in _HIST_KEYS}
-        labels = np.asarray(jax.device_get(point.labels))[:n]
-        peak, peak_src = _measured_peak()
+        if multi:
+            # (iters, C) per-step stacks -> (C, iters) per-chain traces
+            history = {k: np.ascontiguousarray(v.T)
+                       for k, v in history.items()}
+        labels = np.asarray(jax.device_get(point.labels))[..., :n]
         device_bytes = {
             "mode": "resident",
             "est_peak_bytes": (_tree_bytes(xs) + _tree_bytes(valid)
                                + 2 * _tree_bytes(point)
                                + 2 * _tree_bytes(model)),
-            "peak_bytes_in_use": peak,
-            "peak_bytes_source": peak_src,
+            **_peak_fields(rss0),
         }
-        return FitResult(
-            state=model, labels=labels, k=int(model.k_hat),
-            history=history, iter_times_s=times, device_bytes=device_bytes)
+        return self._result(model, labels, history, times, device_bytes,
+                            n_chains)
+
+    def _result(self, model: ModelState, labels, history, times,
+                device_bytes, n_chains: int) -> FitResult:
+        """Assemble a FitResult; for C > 1, ``k`` is the best chain's."""
+        if n_chains == 1:
+            score = (float(history["score"][-1])
+                     if history["score"].size else None)
+            return FitResult(state=model, labels=labels,
+                             k=int(model.k_hat), history=history,
+                             iter_times_s=times, device_bytes=device_bytes,
+                             score=score)
+        score = (np.asarray(history["score"][:, -1])
+                 if history["score"].size
+                 else np.zeros((n_chains,), np.float32))
+        best = int(np.argmax(score))
+        return FitResult(state=model, labels=labels,
+                         k=int(np.asarray(model.active[best]).sum()),
+                         history=history, iter_times_s=times,
+                         device_bytes=device_bytes, n_chains=n_chains,
+                         score=score)
 
     # ------------------------------------------------------------------
     # Tiled plane: out-of-core points streamed under a resident ModelState
     # ------------------------------------------------------------------
-    def _fit_tiled(self, source: DataSource, iters: int,
-                   verbose: bool) -> FitResult:
+    def _fit_tiled(self, source: DataSource, iters: int, verbose: bool,
+                   n_chains: int = 1, key: Optional[jax.Array] = None,
+                   init_state: Optional[ModelState] = None) -> FitResult:
         cfg = self.cfg
         family = self.family
+        multi = n_chains > 1
         mesh, axes, feat_axis, kwargs = self._setup(source)
         prior = kwargs["prior"]
         k_max = cfg.k_max
         n, d = source.n, source.d
         shards = n_data_shards(mesh)
+        # chain batching: replicated O(K) model math and per-tile bodies
+        # lax.map over the leading chain axis (bitwise per chain; see
+        # module docstring) — identity when C == 1
+        cmap = _chain_map if multi else (lambda f: f)
+        cshape = (n_chains,) if multi else ()
         n_local, tiles = tile_plan(n, shards, cfg.tile_size)
         if shards * n_local >= 2 ** 32:
             # >=, not >: at exactly 2**32 rows jnp.uint32(n) wraps to 0 in
@@ -364,7 +616,7 @@ class DPMM:
         feat_fields = set(family.feature_stat_fields if feat_axis else ())
 
         def leaf_spec(field, leaf):
-            dims = [axes] + [None] * leaf.ndim
+            dims = ([None] if multi else []) + [axes] + [None] * leaf.ndim
             if field in feat_fields:
                 dims[-1] = feat_axis
             return P(*dims)
@@ -375,8 +627,8 @@ class DPMM:
 
         zeros_acc = jax.jit(
             lambda: type(acc_shape)(**{
-                f: jnp.zeros((shards,) + getattr(acc_shape, f).shape,
-                             jnp.float32)
+                f: jnp.zeros(cshape + (shards,)
+                             + getattr(acc_shape, f).shape, jnp.float32)
                 for f in acc_shape._fields}),
             out_shardings=type(acc_shape)(**{
                 f: NamedSharding(mesh, getattr(acc_specs, f))
@@ -386,10 +638,14 @@ class DPMM:
         delocal = lambda acc: jax.tree.map(lambda v: v[None], acc)
 
         # ---- host-side point state and tile transfer ------------------
-        labels_h = np.zeros((shards * n_local,), np.int32)
-        sublabels_h = np.zeros((shards * n_local,), np.int32)
+        # chain axis (when C > 1) leads the host label arrays and every
+        # label tile; x tiles carry NO chain axis — one upload per tile,
+        # consumed by all chains
+        labels_h = np.zeros(cshape + (shards * n_local,), np.int32)
+        sublabels_h = np.zeros(cshape + (shards * n_local,), np.int32)
         x_sharding = NamedSharding(mesh, x_spec)
-        i32_sharding = NamedSharding(mesh, P(axes))
+        lab_spec = P(None, axes) if multi else P(axes)
+        i32_sharding = NamedSharding(mesh, lab_spec)
 
         def put_x_tile(off: int, length: int):
             rows = np.concatenate(
@@ -400,15 +656,15 @@ class DPMM:
 
         def put_label_tile(host, off: int, length: int):
             rows = np.concatenate(
-                [host[s * n_local + off:s * n_local + off + length]
-                 for s in range(shards)])
+                [host[..., s * n_local + off:s * n_local + off + length]
+                 for s in range(shards)], axis=-1)
             return jax.device_put(rows, i32_sharding)
 
         def write_back(host, off: int, length: int, tile_out):
             rows = np.asarray(jax.device_get(tile_out))
             for s in range(shards):
-                host[s * n_local + off:s * n_local + off + length] = (
-                    rows[s * length:(s + 1) * length])
+                host[..., s * n_local + off:s * n_local + off + length] = (
+                    rows[..., s * length:(s + 1) * length])
 
         def stream(pass_fn, carry, point_pass: bool):
             """Run ``pass_fn`` over all tiles with double-buffered
@@ -478,68 +734,103 @@ class DPMM:
             return gibbs.finalize_substats(family, local(acc), axes,
                                            feat_axis)
 
-        lab_specs = (P(axes), P(axes))
+        # chain-mapped wrappers: per-chain tile/model bodies are the exact
+        # single-chain bodies; x_t and the tile offset are closed over
+        # (shared across chains — one upload, C consumers)
+        def _sweep_tile_c(model, x_t, lab, sub, off, acc):
+            return cmap(lambda m, l, s, a: _sweep_tile(m, x_t, l, s, off,
+                                                       a))(model, lab, sub,
+                                                           acc)
+
+        def _sm_tile_c(plan, x_t, lab, sub, off, acc):
+            return cmap(lambda pl, l, s, a: _sm_tile(pl, x_t, l, s, off,
+                                                     a))(plan, lab, sub,
+                                                         acc)
+
+        def _init1_c(x_t, off, acc):
+            return cmap(lambda a: _init1_tile(x_t, off, a))(acc)
+
+        def _init2_c(means0, v0, x_t, lab, sub, off, acc):
+            return cmap(lambda mn, v, l, s, a: _init2_tile(
+                mn, v, x_t, l, s, off, a))(means0, v0, lab, sub, acc)
+
+        lab_specs = (lab_spec, lab_spec)
         smap = functools.partial(shard_map, mesh=mesh)
         sweep_tile_fn = jax.jit(smap(
-            _sweep_tile, in_specs=(model_specs, x_spec, *lab_specs, rep,
-                                   acc_specs),
+            _sweep_tile_c, in_specs=(model_specs, x_spec, *lab_specs, rep,
+                                     acc_specs),
             out_specs=(lab_specs, acc_specs)))
         sm_tile_fn = None     # built lazily: needs the plan's pytree specs
         finalize_fn = jax.jit(smap(
-            _finalize, in_specs=(acc_specs,), out_specs=(rep, rep)))
+            cmap(_finalize), in_specs=(acc_specs,), out_specs=(rep, rep)))
         init1_fn = jax.jit(smap(
-            _init1_tile, in_specs=(x_spec, rep, acc_specs),
+            _init1_c, in_specs=(x_spec, rep, acc_specs),
             out_specs=(lab_specs, acc_specs)))
 
-        sweep_model_fn = jax.jit(functools.partial(
-            gibbs.sweep_model, prior=prior, family=family, alpha=cfg.alpha))
-        plan_fn = jax.jit(lambda m: splitmerge.plan_split_merge(
-            _move_key(m), m, prior, family, cfg.alpha, cfg.subreset_every))
-        advance_fn = jax.jit(
-            lambda m: (m._replace(it=m.it + 1), m.summarize()))
+        sweep_model_fn = jax.jit(cmap(functools.partial(
+            gibbs.sweep_model, prior=prior, family=family,
+            alpha=cfg.alpha)))
+        plan_fn = jax.jit(cmap(lambda m: splitmerge.plan_split_merge(
+            _move_key(m), m, prior, family, cfg.alpha,
+            cfg.subreset_every)))
+        advance_fn = jax.jit(cmap(
+            lambda m: (m._replace(it=m.it + 1),
+                       _summaries(m, prior, family, cfg.alpha))))
 
-        # ---- initialization: two streamed passes ----------------------
-        key = jax.random.key(cfg.seed)
-        acc = zeros_acc()
-        acc = stream(
-            lambda i, off, length, xt, pt, a:
-                init1_fn(xt, np.uint32(off), a),
-            acc, point_pass=False)
-        stats0, _ = finalize_fn(acc)
-        means0 = jax.jit(family.cluster_means)(stats0)
-        v0 = jax.jit(functools.partial(
-            splitmerge.hyperplane_vecs, k_max=k_max, d=d,
-            dtype=jnp.float32))(jax.random.fold_in(key, 1))
-        _init2 = jax.jit(smap(
-            _init2_tile, in_specs=(rep, rep, x_spec, *lab_specs, rep,
-                                   acc_specs),
-            out_specs=(lab_specs, acc_specs)))
-        acc = zeros_acc()
-        acc = stream(
-            lambda i, off, length, xt, pt, a:
-                _init2(means0, v0, xt, *pt, np.uint32(off), a),
-            acc, point_pass=True)
-        stats, substats = finalize_fn(acc)
-        model = jax.jit(functools.partial(
-            _init_model, prior=prior, family=family, cfg=cfg,
-            k_max=k_max))(key, stats, substats)
+        rss0 = _rss_peak_bytes()
+        keys = _chain_keys(key, n_chains) if multi else key
+        if init_state is not None:
+            # resume: the model is the whole chain state (labels are
+            # recomputed from it every sweep), so the two init passes are
+            # skipped and host labels start zeroed
+            model = jax.device_put(_copy_state(init_state),
+                                   NamedSharding(mesh, P()))
+        else:
+            # ---- initialization: two streamed passes ------------------
+            acc = zeros_acc()
+            acc = stream(
+                lambda i, off, length, xt, pt, a:
+                    init1_fn(xt, np.uint32(off), a),
+                acc, point_pass=False)
+            stats0, _ = finalize_fn(acc)
+            means0 = jax.jit(cmap(family.cluster_means))(stats0)
+            v0 = jax.jit(cmap(lambda k: splitmerge.hyperplane_vecs(
+                jax.random.fold_in(k, 1), k_max, d, jnp.float32)))(keys)
+            _init2 = jax.jit(smap(
+                _init2_c, in_specs=(rep, rep, x_spec, *lab_specs, rep,
+                                    acc_specs),
+                out_specs=(lab_specs, acc_specs)))
+            acc = zeros_acc()
+            acc = stream(
+                lambda i, off, length, xt, pt, a:
+                    _init2(means0, v0, xt, *pt, np.uint32(off), a),
+                acc, point_pass=True)
+            stats, substats = finalize_fn(acc)
+            model = jax.jit(cmap(lambda k, s, ss: _init_model(
+                k, s, ss, prior=prior, family=family, cfg=cfg,
+                k_max=k_max)))(keys, stats, substats)
 
         # ---- iteration loop: ModelState is the only persistent state ---
-        set_stats_fn = jax.jit(
-            lambda m, s, ss: m._replace(stats=s, substats=ss))
-        apply_plan_fn = jax.jit(
+        set_stats_fn = jax.jit(cmap(
+            lambda m, s, ss: m._replace(stats=s, substats=ss)))
+        apply_plan_fn = jax.jit(cmap(
             lambda m, plan, s, ss: m._replace(
                 active=plan.merge.new_active, stuck=plan.stuck,
-                stats=s, substats=ss))
+                stats=s, substats=ss)))
 
         hist_rows: List[Dict[str, np.ndarray]] = []
         times: List[float] = []
-        # persistent device buffers: double-buffered (x + label) tiles,
-        # the model (x2: pre/post update), and the suff-stat accumulator
+        # persistent device buffers: double-buffered (x + label) tiles
+        # (labels carry the chain axis; x is shared), the model (x2:
+        # pre/post update), and the suff-stat accumulator
         tile_bytes = max(
-            length * (d * 4 + 2 * 4) * shards for _, length in tiles)
+            length * (d * 4 + n_chains * 2 * 4) * shards
+            for _, length in tiles)
         est_peak = (2 * _tree_bytes(model) + _tree_bytes(zeros_acc())
                     + 2 * tile_bytes)
+        # the split/merge gate runs on the TRUE iteration number (resume:
+        # model.it > 0), matching the resident driver's model.it cond
+        it0 = int(jax.device_get(model.it[0] if multi else model.it))
         for it in range(iters):
             t0 = time.perf_counter()
             model = sweep_model_fn(model)
@@ -549,12 +840,12 @@ class DPMM:
                     sweep_tile_fn(model, xt, *pt, np.uint32(off), a),
                 acc, point_pass=True)
             model = set_stats_fn(model, *finalize_fn(acc))
-            if it >= cfg.burnout:
+            if it0 + it >= cfg.burnout:
                 plan = plan_fn(model)
                 if sm_tile_fn is None:
                     plan_specs = jax.tree.map(lambda _: rep, plan)
                     sm_tile_fn = jax.jit(smap(
-                        _sm_tile,
+                        _sm_tile_c,
                         in_specs=(plan_specs, x_spec, *lab_specs, rep,
                                   acc_specs),
                         out_specs=(lab_specs, acc_specs)))
@@ -569,21 +860,23 @@ class DPMM:
             hist_rows.append(summary)
             times.append(time.perf_counter() - t0)
             if verbose:
-                print(f"iter {it + 1:4d}  K={int(summary['k'])}  "
+                ks = np.asarray(summary["k"]).reshape(-1).tolist()
+                print(f"iter {it0 + it + 1:4d}  "
+                      f"K={ks if len(ks) > 1 else ks[0]}  "
                       f"{times[-1] * 1e3:.1f} ms/iter")
 
         history = {
             k: np.asarray([row[k] for row in hist_rows])
             for k in _HIST_KEYS} if hist_rows else {
-            k: np.zeros((0,)) for k in _HIST_KEYS}
-        peak, peak_src = _measured_peak()
+            k: np.zeros((0,) + cshape) for k in _HIST_KEYS}
+        if multi:
+            history = {k: np.ascontiguousarray(v.T)
+                       for k, v in history.items()}
         device_bytes = {
             "mode": "tiled",
             "tile_size": tiles[0][1],
             "est_peak_bytes": int(est_peak),
-            "peak_bytes_in_use": peak,
-            "peak_bytes_source": peak_src,
+            **_peak_fields(rss0),
         }
-        return FitResult(
-            state=model, labels=labels_h[:n].copy(), k=int(model.k_hat),
-            history=history, iter_times_s=times, device_bytes=device_bytes)
+        return self._result(model, labels_h[..., :n].copy(), history,
+                            times, device_bytes, n_chains)

@@ -61,6 +61,14 @@ def main(argv=None):
                     help="stream points through tiles of this many rows "
                          "per shard (out-of-core data plane; device memory "
                          "becomes O(k_max + tile_size)). Default: resident")
+    ap.add_argument("--n-chains", "--n_chains", type=int, default=1,
+                    help="parallel MCMC chains sharing one device copy of "
+                         "x; the result (and checkpoint) is the best-"
+                         "scoring chain, with split-R-hat printed")
+    ap.add_argument("--checkpoint-path", "--checkpoint_path", default="",
+                    help="write the fitted ModelState npz here "
+                         "(core/checkpoint.py; servable via "
+                         "repro.launch.serve_dpmm)")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -102,11 +110,24 @@ def main(argv=None):
           f"tile_size={cfg.tile_size}")
     t0 = time.time()
     model = DPMM(cfg)
-    result = model.fit(source, verbose=args.verbose)
+    result = model.fit(source, verbose=args.verbose,
+                       n_chains=args.n_chains)
     wall = time.time() - t0
+    if result.n_chains > 1:
+        try:
+            rhats = {k: round(v, 3) for k, v in result.rhats().items()}
+        except ValueError:          # too few iterations for split-R-hat
+            rhats = "n/a (needs >= 4 iters)"
+        print(f"chains: scores={np.round(np.asarray(result.score), 2)} "
+              f"rhat={rhats}")
+        result = result.select_best()
     nmi = result.nmi(gt) if gt is not None else float("nan")
     print(f"done in {wall:.1f}s: K={result.k} NMI={nmi:.4f} "
           f"mean iter {np.mean(result.iter_times_s[1:])*1e3:.1f} ms")
+    if args.checkpoint_path:
+        from repro.core.checkpoint import save_model
+        save_model(args.checkpoint_path, result.state, cfg.component)
+        print(f"wrote checkpoint {args.checkpoint_path}")
     mem = result.device_bytes or {}
     print(f"device memory [{mem.get('mode')}]: "
           f"est_peak={mem.get('est_peak_bytes', 0)/2**20:.2f} MiB"

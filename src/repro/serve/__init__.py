@@ -1,1 +1,5 @@
 from repro.serve.engine import Generator, make_serve_step, serve_step  # noqa: F401
+
+# DPMM serving lives in repro.serve.dpmm (DPMMEngine, ServeResult); it is
+# intentionally NOT imported here so `import repro.serve` for the LM path
+# does not pull in the sampler stack (and vice versa).

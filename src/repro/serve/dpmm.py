@@ -1,0 +1,185 @@
+"""DPMMEngine: serve a fitted DPMM — the paper's model as a product.
+
+The dirichletprocess-style consumption pattern: practitioners don't want
+a trace, they want a fitted model they can *query*. A ``DPMMEngine``
+wraps a final ``ModelState`` (usually ``FitResult.select_best().state``
+from a multi-chain fit, or a checkpoint written by core/checkpoint.py)
+and answers batched queries:
+
+ - ``predict(x)``        — hard cluster assignment, argmax_k p(k | x)
+ - ``predict_logprobs(x)`` — soft assignment: log p(k | x) over the K_max
+   slots (inactive slots are -inf)
+ - ``log_predictive(x)`` — log p(x) under the mixture posterior
+   (the density ranking used e.g. for outlier scoring)
+ - ``sample(x, seed)``   — a posterior *draw* of the assignment, reusing
+   the sampler's fused assignment kernels (``family.assign`` — the exact
+   Gumbel-argmax path the Gibbs sweep runs, counter-based on the query
+   row index)
+
+All of them run through ONE pre-compiled, fixed-batch-size jitted step:
+queries are padded to ``batch_size`` rows and fed through the same
+executable (AOT-compiled at engine construction — no query ever pays a
+trace/compile), so serving latency is flat and predictable. The
+likelihood is ``family.loglik`` — the same dispatch (Pallas
+``loglik_fast`` on TPU, jnp reference elsewhere) the training sweep uses,
+so served soft-assignment log-probs match the sampler's assignment logits
+to the bit on the same backend.
+
+Mixture weights: ``ModelState.logweights`` are the step-(a) Dirichlet
+draw's log pi (already ~normalized over active slots + the alpha slot);
+the engine renormalizes over *active* slots once at construction so
+``predict_logprobs`` is a proper conditional and ``log_predictive``
+integrates to 1.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.checkpoint import load_model
+from repro.core.family import NEG_INF, ComponentFamily, get_family
+from repro.core.state import ModelState
+from repro.kernels import prng
+
+
+class ServeResult(NamedTuple):
+    """One batch of answers (rows past the query count are stripped)."""
+    labels: np.ndarray        # (N,) int32 hard assignment
+    logprobs: np.ndarray      # (N, K_max) float32 log p(k | x)
+    log_predictive: np.ndarray  # (N,) float32 log p(x)
+
+
+class DPMMEngine:
+    """Precompiled query engine over a fitted ``ModelState``.
+
+    ``model`` must be single-chain (no leading chain axis) — take
+    ``FitResult.select_best().state`` first. ``batch_size`` fixes the
+    compiled step's shape; arbitrary query counts are served by padding
+    the ragged tail batch.
+    """
+
+    def __init__(self, model: ModelState,
+                 family: Union[str, ComponentFamily],
+                 batch_size: int = 2048, use_pallas: bool = False,
+                 seed: int = 0):
+        self.family = (get_family(family) if isinstance(family, str)
+                       else family)
+        if model.active.ndim != 1:
+            raise ValueError(
+                f"DPMMEngine expects a single-chain ModelState; got "
+                f"active shape {tuple(model.active.shape)} — select a "
+                "chain first (FitResult.select_best())")
+        if batch_size < 1:
+            raise ValueError(f"batch_size must be >= 1, got {batch_size}")
+        self.model = model
+        self.batch_size = int(batch_size)
+        self.k_max = int(model.active.shape[0])
+        self.d = int(self.family.cluster_means(model.stats).shape[-1])
+        self._key = jax.random.key(seed)
+
+        params, active = model.params, model.active
+        logw = jnp.where(active, model.logweights, NEG_INF)
+        # renormalize over active slots: p(k) must sum to 1 for the
+        # predictive density (the sampler's logweights carry alpha-slot
+        # mass that the restricted sweep never uses)
+        logw = (logw - jax.scipy.special.logsumexp(
+            jnp.where(active, logw, -jnp.inf))).astype(jnp.float32)
+        self.logweights = logw
+
+        def step(x):
+            ll = self.family.loglik(x, params, use_pallas=use_pallas)
+            logits = jnp.where(active[None, :], ll + logw[None, :],
+                               NEG_INF)
+            logpred = jax.scipy.special.logsumexp(logits, axis=-1)
+            return {
+                "labels": jnp.argmax(logits, axis=-1).astype(jnp.int32),
+                "logprobs": logits - logpred[:, None],
+                "log_predictive": logpred,
+            }
+
+        def sample_step(x, key_words, offset):
+            # the sweep's step (e): argmax_k [loglik + log pi + Gumbel],
+            # counter-based on the global row index — the fused
+            # assign/assign_fast kernel path, verbatim
+            gidx = offset + jnp.arange(x.shape[0], dtype=jnp.uint32)
+            return self.family.assign(x, params, logw, active, gidx,
+                                      key_words, use_pallas=use_pallas)
+
+        shape = jax.ShapeDtypeStruct((self.batch_size, self.d),
+                                     jnp.float32)
+        u32 = jax.ShapeDtypeStruct((2,), jnp.uint32)
+        off = jax.ShapeDtypeStruct((), jnp.uint32)
+        # AOT-compile once; queries never trace
+        self._step = jax.jit(step).lower(shape).compile()
+        self._sample_step = jax.jit(sample_step).lower(
+            shape, u32, off).compile()
+
+    @classmethod
+    def from_checkpoint(cls, path: str, batch_size: int = 2048,
+                        use_pallas: bool = False, seed: int = 0
+                        ) -> "DPMMEngine":
+        """Load a core/checkpoint.py npz and build the engine."""
+        model, family = load_model(path)
+        return cls(model, family, batch_size=batch_size,
+                   use_pallas=use_pallas, seed=seed)
+
+    # ------------------------------------------------------------------
+    def _batches(self, x: np.ndarray):
+        x = np.asarray(x, np.float32)
+        if x.ndim != 2 or x.shape[1] != self.d:
+            raise ValueError(f"queries must be (N, {self.d}), got "
+                             f"{x.shape}")
+        n, b = x.shape[0], self.batch_size
+        for start in range(0, n, b):
+            block = x[start:start + b]
+            if block.shape[0] < b:          # ragged tail: pad to shape
+                block = np.concatenate(
+                    [block, np.zeros((b - block.shape[0], self.d),
+                                     np.float32)], axis=0)
+            yield start, min(b, n - start), block
+
+    def query(self, x: np.ndarray) -> ServeResult:
+        """All three answers for (N, d) queries, batched through the
+        precompiled step. N = 0 returns empty answers."""
+        outs: Dict[str, list] = {"labels": [], "logprobs": [],
+                                 "log_predictive": []}
+        for _, used, block in self._batches(x):
+            out = self._step(block)
+            for k, v in out.items():
+                outs[k].append(np.asarray(jax.device_get(v))[:used])
+        if not outs["labels"]:
+            return ServeResult(
+                labels=np.zeros((0,), np.int32),
+                logprobs=np.zeros((0, self.k_max), np.float32),
+                log_predictive=np.zeros((0,), np.float32))
+        return ServeResult(
+            labels=np.concatenate(outs["labels"]),
+            logprobs=np.concatenate(outs["logprobs"]),
+            log_predictive=np.concatenate(outs["log_predictive"]))
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return self.query(x).labels
+
+    def predict_logprobs(self, x: np.ndarray) -> np.ndarray:
+        return self.query(x).logprobs
+
+    def log_predictive(self, x: np.ndarray) -> np.ndarray:
+        return self.query(x).log_predictive
+
+    def sample(self, x: np.ndarray,
+               seed: Optional[int] = None) -> np.ndarray:
+        """Posterior assignment DRAW (not the argmax): the Gibbs sweep's
+        Gumbel-argmax assignment over the fitted components. Each call
+        advances the engine key unless ``seed`` pins it."""
+        key = (jax.random.key(seed) if seed is not None else self._key)
+        if seed is None:
+            self._key = jax.random.fold_in(self._key, 1)
+        words = prng.key_words(key)
+        labels = [np.zeros((0,), np.int32)]
+        for start, used, block in self._batches(x):
+            out = self._sample_step(block, words, np.uint32(start))
+            labels.append(np.asarray(jax.device_get(out))[:used])
+        return np.concatenate(labels)

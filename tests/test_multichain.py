@@ -1,0 +1,208 @@
+"""Multi-chain fits (ISSUE 5): ``fit(n_chains=C)`` is C *independent*
+chains sharing one copy of x — chain c must be BITWISE identical to a
+single-chain fit with ``key=fold_in(key(seed), c)``, on both data planes,
+for every registered family (labels, history, stats, substats — and on
+the same mesh even params, since lax.map re-traces the exact unbatched
+body per chain). Plus the cross-chain diagnostics (rhat / select_best /
+chain views) and the checkpoint/resume contract (core/checkpoint.py):
+save → load → ``fit(init_state=...)`` continues the chain bit for bit.
+"""
+import io
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import DPMMConfig
+from repro.core.checkpoint import load_model, save_model
+from repro.core.distributed import make_data_mesh
+from repro.core.gibbs import STATS_BLOCK
+from repro.core.sampler import DPMM
+from repro.data.synthetic import generate_gmm, generate_mnmm, generate_pmm
+
+ALL = ("gaussian", "diag_gaussian", "multinomial", "poisson")
+C = 2
+ITERS = 12
+
+
+def _data(name, n=2000):
+    if name in ("gaussian", "diag_gaussian"):
+        return generate_gmm(n, 4, 4, seed=0, sep=10.0)[0]
+    if name == "poisson":
+        return generate_pmm(n, 4, 4, seed=0)[0]
+    return generate_mnmm(n, 16, 4, seed=0)[0]
+
+
+def _cfg(name, **kw):
+    return DPMMConfig(component=name, alpha=10.0, iters=ITERS, k_max=16,
+                      burnout=4, **kw)
+
+
+def _leaves(tree):
+    return [np.asarray(leaf) for leaf in jax.tree_util.tree_leaves(tree)]
+
+
+def _assert_chain_bitwise(single, multi_chain_view, what):
+    assert np.array_equal(single.labels, multi_chain_view.labels), (
+        f"{what}: labels differ")
+    for key in single.history:
+        assert np.array_equal(single.history[key],
+                              multi_chain_view.history[key]), (
+            f"{what}: history[{key}] differs")
+    for name in ("stats", "substats", "params"):
+        for la, lb in zip(_leaves(getattr(single.state, name)),
+                          _leaves(getattr(multi_chain_view.state, name))):
+            assert np.array_equal(la, lb), f"{what}: {name} leaf differs"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_chains_match_independent_fits(name):
+    """Resident + tiled: every chain of an n_chains=C fit is bitwise the
+    independent single-chain fit with the corresponding folded key."""
+    x = _data(name)
+    base = jax.random.key(0)
+    singles = [DPMM(_cfg(name)).fit(x, key=jax.random.fold_in(base, c))
+               for c in range(C)]
+    for plane, cfg in (("resident", _cfg(name)),
+                       ("tiled", _cfg(name, tile_size=STATS_BLOCK))):
+        multi = DPMM(cfg).fit(x, n_chains=C)
+        assert multi.n_chains == C
+        assert multi.labels.shape == (C, x.shape[0])
+        assert multi.history["k"].shape == (C, ITERS)
+        for c in range(C):
+            _assert_chain_bitwise(singles[c], multi.chain(c),
+                                  f"{name}/{plane} chain {c}")
+
+
+def test_tiled_chains_partial_tiles():
+    """Multi-chain streaming with genuinely partial tiles (1-device mesh,
+    several tiles per sweep): the chain — labels and history — still
+    matches the resident single-chain fits."""
+    x = _data("gaussian", n=3000)
+    mesh = make_data_mesh(1)
+    base = jax.random.key(0)
+    singles = [DPMM(_cfg("gaussian"), mesh=mesh).fit(
+        x, key=jax.random.fold_in(base, c)) for c in range(C)]
+    multi = DPMM(_cfg("gaussian", tile_size=STATS_BLOCK),
+                 mesh=mesh).fit(x, n_chains=C)
+    for c in range(C):
+        mc = multi.chain(c)
+        assert np.array_equal(singles[c].labels, mc.labels)
+        for key in mc.history:
+            assert np.array_equal(singles[c].history[key],
+                                  mc.history[key])
+
+
+def test_diagnostics_and_views():
+    x = _data("gaussian")
+    multi = DPMM(_cfg("gaussian")).fit(x, n_chains=3)
+    # score ranks chains; select_best is the argmax chain
+    assert multi.score.shape == (3,)
+    best = multi.select_best()
+    assert best.n_chains == 1
+    assert float(best.score) == float(np.max(multi.score))
+    assert best.k == int(np.asarray(best.state.active).sum())
+    # rhat: defined on multi-chain traces only, finite and positive here
+    for key in ("k", "score"):
+        r = multi.rhat(key)
+        assert np.isfinite(r) and r > 0
+    assert set(multi.rhats()) == {"k", "score"}
+    with pytest.raises(ValueError):
+        best.rhat("score")
+    # chain views are self-consistent
+    c1 = multi.chain(1)
+    assert np.array_equal(c1.labels, multi.labels[1])
+    with pytest.raises(IndexError):
+        best.chain(2)
+    # nmi on the multi-chain result silently scores the best chain
+    gt = generate_gmm(2000, 4, 4, seed=0, sep=10.0)[1]
+    assert multi.nmi(gt) == best.nmi(gt)
+
+
+def test_history_score_tracks_final_state():
+    from repro.core.sampler import chain_score
+
+    x, _ = generate_gmm(2000, 4, 4, seed=0, sep=10.0)
+    r = DPMM(_cfg("gaussian")).fit(x)
+    assert r.history["score"].shape == (ITERS,)
+    fam = DPMM(_cfg("gaussian")).family
+    prior = fam.build_prior(_cfg("gaussian"), x.mean(0, keepdims=True))
+    recomputed = float(chain_score(r.state, prior, fam, 10.0))
+    np.testing.assert_allclose(r.history["score"][-1], recomputed,
+                               rtol=1e-5, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint round-trip + bitwise resume
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip_bitwise(tmp_path):
+    x = _data("gaussian")
+    r = DPMM(_cfg("gaussian")).fit(x)
+    path = str(tmp_path / "m.npz")
+    save_model(path, r.state, "gaussian")
+    loaded, family = load_model(path)
+    assert family.name == "gaussian"
+    raw = lambda m: m._replace(key=jax.random.key_data(m.key))
+    for la, lb in zip(_leaves(raw(r.state)), _leaves(raw(loaded))):
+        assert la.dtype == lb.dtype and np.array_equal(la, lb)
+
+
+@pytest.mark.parametrize("tile", (None, STATS_BLOCK))
+def test_resume_is_bitwise(tmp_path, tile):
+    """fit(16) == fit(8) -> save -> load -> fit(8 more), bit for bit —
+    on both planes (the checkpointed ModelState IS the chain state)."""
+    x = _data("gaussian")
+    cfg = _cfg("gaussian", **({"tile_size": tile} if tile else {}))
+    full = DPMM(cfg).fit(x, iters=16)
+    half = DPMM(cfg).fit(x, iters=8)
+    buf = io.BytesIO()
+    save_model(buf, half.state, "gaussian")
+    buf.seek(0)
+    loaded, _ = load_model(buf)
+    resumed = DPMM(cfg).fit(x, iters=8, init_state=loaded)
+    assert np.array_equal(full.labels, resumed.labels)
+    for key in full.history:
+        assert np.array_equal(full.history[key][8:], resumed.history[key])
+    for name in ("stats", "substats", "params"):
+        for la, lb in zip(_leaves(getattr(full.state, name)),
+                          _leaves(getattr(resumed.state, name))):
+            assert np.array_equal(la, lb), f"resume {name} differs"
+    # resuming TWICE from the same loaded state must not crash (the
+    # drivers copy init_state before donating buffers) and must agree
+    again = DPMM(cfg).fit(x, iters=8, init_state=loaded)
+    assert np.array_equal(resumed.labels, again.labels)
+
+
+def test_multichain_checkpoint_resume(tmp_path):
+    x = _data("gaussian")
+    cfg = _cfg("gaussian")
+    full = DPMM(cfg).fit(x, iters=16, n_chains=C)
+    half = DPMM(cfg).fit(x, iters=8, n_chains=C)
+    path = str(tmp_path / "mc.npz")
+    save_model(path, half.state, "gaussian")
+    loaded, _ = load_model(path)
+    resumed = DPMM(cfg).fit(x, iters=8, n_chains=C, init_state=loaded)
+    assert np.array_equal(full.labels, resumed.labels)
+    for key in full.history:
+        assert np.array_equal(full.history[key][:, 8:],
+                              resumed.history[key])
+
+
+def test_checkpoint_and_fit_guardrails(tmp_path):
+    x = _data("gaussian")
+    r = DPMM(_cfg("gaussian")).fit(x, iters=2)
+    path = str(tmp_path / "m.npz")
+    save_model(path, r.state, "gaussian")
+    loaded, _ = load_model(path)
+    with pytest.raises(ValueError, match="unknown component family"):
+        save_model(str(tmp_path / "bad.npz"), r.state, "not_a_family")
+    with pytest.raises(ValueError, match="n_chains"):
+        DPMM(_cfg("gaussian")).fit(x, n_chains=0)
+    # init_state shape vs n_chains/k_max mismatch fails loudly
+    with pytest.raises(ValueError, match="init_state"):
+        DPMM(_cfg("gaussian")).fit(x, iters=2, n_chains=2,
+                                   init_state=loaded)
+    with pytest.raises(ValueError, match="init_state"):
+        DPMM(DPMMConfig(component="gaussian", k_max=32)).fit(
+            x, iters=2, init_state=loaded)

@@ -89,15 +89,23 @@ def test_tiled_matches_resident_sharded(name):
         tiled = DPMM(_cfg(name, tile_size=tile), mesh=mesh).fit(x)
         _assert_bitwise(resident, tiled, f"{name} sharded tile={tile}")
     # and across planes AND meshes at once: 1-dev resident == N-dev tiled
-    # on labels/history (the chain). Stats/params may differ in final ULPs
-    # across MESH sizes — a psum over 4 devices reduces in a different
-    # order than over 1 — which is the pre-existing cross-mesh contract;
+    # on labels/history (the chain). Stats/params — and the "score" trace,
+    # a float function of the psum'd stats — may differ in final ULPs
+    # across MESH sizes: a psum over 4 devices reduces in a different
+    # order than over 1, which is the pre-existing cross-mesh contract;
     # the bitwise-everything guarantee is per-mesh across planes.
     single = DPMM(_cfg(name), mesh=make_data_mesh(1)).fit(x)
     tiled = DPMM(_cfg(name, tile_size=TILES[0]), mesh=mesh).fit(x)
     assert np.array_equal(single.labels, tiled.labels)
     for key in single.history:
-        assert np.array_equal(single.history[key], tiled.history[key])
+        if key == "score":
+            # f32 log-marginal sums amplify the psum-order ULPs through
+            # gammaln/cholesky: ~2e-4 relative across mesh sizes
+            np.testing.assert_allclose(single.history[key],
+                                       tiled.history[key],
+                                       rtol=1e-3, atol=1.0)
+        else:
+            assert np.array_equal(single.history[key], tiled.history[key])
 
 
 def test_memmap_source_out_of_core(tmp_path):
