@@ -20,7 +20,12 @@ runnable legs always execute: an interpret-mode smoke fit that runs the
 one-read megakernel end-to-end and checks its chain bitwise against the
 reference, and a paired jitted-sweep microbench of the one-read blocked
 reference body vs the pre-fusion three-pass body at d>=16 (the
-`x_hbm_reads_per_sweep` 3 -> 1 claim, measured).
+`x_hbm_reads_per_sweep` 3 -> 1 claim, measured). A fourth CPU-runnable
+leg sweeps (k_max, K_active) over the sparse-K grid (`k_sweep` rows):
+per-sweep time of the compacted fused and reference bodies under a
+k_max=512 slab at K_active in {8, 32, 128, 512} vs the small-slab
+anchor (32, 8) — the O(K_active)-not-O(k_max) claim, gated at 1.3x by
+benchmarks/check_regression.py.
 """
 from __future__ import annotations
 
@@ -244,6 +249,79 @@ def _hotpath_sweep_pair(reps: int = 15) -> dict:
     return row
 
 
+K_SWEEP_GRID = [      # (k_max, K_active)
+    (32, 8), (512, 8), (512, 32), (512, 128), (512, 512)]
+
+
+def _hotpath_k_sweep(reps: int = 15) -> dict:
+    """Sparse-K scaling leg (ISSUE 6): per-sweep time vs K_active under a
+    large k_max slab, for the fused one-read body AND the three-pass
+    reference body, both run exactly as the fit driver runs them — the
+    compaction plan built from the active mask, the compact-slab sweep
+    tile, and the scatter back to the dense slab all inside the timed
+    jitted unit. The claim under test: sweep cost is O(K_active), not
+    O(k_max) — a k_max=512 slab with 8 live clusters must cost what a
+    k_max=32 slab with 8 live clusters costs (the 1.3x acceptance gate in
+    benchmarks/check_regression.py). The (512, 512) row is the saturated
+    slab — compaction disabled by the schedule (k_compact >= k_max), the
+    honest dense upper bound. Runs on any backend (jnp bodies)."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import gibbs
+    from repro.core.family import get_family
+    from repro.core.sampler import _init_local, _k_compact
+
+    n, d = 20_000, 8
+    fam = get_family("gaussian")
+    x, _ = generate_gmm(n, d, 8, seed=0, sep=8.0)
+    x = jnp.asarray(x)
+    valid = jnp.ones((n,), jnp.float32)
+    gidx = jnp.arange(n, dtype=jnp.uint32)
+    rows = []
+    for k_max, k_active in K_SWEEP_GRID:
+        cfg = DPMMConfig(alpha=10.0, init_clusters=k_active, k_max=k_max)
+        prior = fam.build_prior(cfg, x)
+        model, point = _init_local(
+            jax.random.key(0), x, valid, prior=prior, family=fam, cfg=cfg,
+            axes=(), k_max=k_max)
+        k_c = _k_compact(k_active, 1, k_max, cfg.k_block)
+
+        def make(fused):
+            def sweep1(m, xx, p):
+                if k_c is None:                      # saturated: dense
+                    acc = gibbs.empty_substats(fam, k_max, d)
+                    return gibbs.sweep_tile(m, xx, p, gidx, acc, fam,
+                                            fused=fused)
+                plan = gibbs.compaction_plan(m.active, k_c)
+                acc = gibbs.empty_substats(fam, k_c, d)
+                pt, acc2 = gibbs.sweep_tile(m, xx, p, gidx, acc, fam,
+                                            fused=fused, plan=plan,
+                                            k_block=cfg.k_block)
+                return pt, gibbs.compact_scatter(plan, k_max, acc2)
+            return jax.jit(sweep1).lower(model, x, point).compile()
+
+        def median_ms(fn):
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn(model, x, point))
+                ts.append(time.perf_counter() - t0)
+            return float(np.median(ts) * 1e3)
+
+        f3, ff = make(False), make(True)
+        row = {"path": "k_sweep", "backend": jax.default_backend(),
+               "N": n, "d": d, "k_max": k_max, "k_active": k_active,
+               "k_compact": k_c,
+               "ms_per_sweep_reference": median_ms(f3),
+               "ms_per_sweep_fused": median_ms(ff)}
+        rows.append(row)
+        print(_ROW_MARK + json.dumps(row), flush=True)
+    return rows
+
+
 def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
                 force_fused: bool = False) -> dict:
     """Reference vs fused steady-state ms/iter + peak memory -> JSON.
@@ -263,33 +341,38 @@ def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
         [os.path.join(root, "src"), root] +
         ([env["PYTHONPATH"]] if env.get("PYTHONPATH") else []))
 
-    def leg(path_name: str) -> dict:
+    def leg(path_name: str) -> list:
         proc = subprocess.run(
             [sys.executable, os.path.abspath(__file__),
              "--_hotpath-leg", path_name, "--iters", str(iters)],
             capture_output=True, text=True, env=env, cwd=root)
+        out = []
         for line in proc.stdout.splitlines():
             if line.startswith(_ROW_MARK):
                 row = json.loads(line[len(_ROW_MARK):])
                 print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
                       flush=True)
-                return row
-        raise RuntimeError(
-            f"hotpath leg {path_name!r} produced no row:\n"
-            f"{proc.stdout[-1000:]}\n{proc.stderr[-2000:]}")
+                out.append(row)
+        if not out:
+            raise RuntimeError(
+                f"hotpath leg {path_name!r} produced no row:\n"
+                f"{proc.stdout[-1000:]}\n{proc.stderr[-2000:]}")
+        return out
 
-    rows = [leg("reference")]
+    rows = leg("reference")
     backend = rows[0].get("backend", "unknown")
     if backend == "tpu" or force_fused:
-        rows.append(leg("fused"))
+        rows += leg("fused")
     else:
         rows.append({"path": "fused", "skipped":
                      f"interpret-mode Pallas on backend={backend!r} is "
                      "Python-speed; measure on TPU (or --force-fused)"})
     # CPU-runnable legs: megakernel executed end-to-end (interpret) with a
-    # bitwise chain check, and the paired one-read-vs-three-pass sweep
-    rows.append(leg("interp-smoke"))
-    rows.append(leg("sweep-pair"))
+    # bitwise chain check, the paired one-read-vs-three-pass sweep, and
+    # the sparse-K scaling grid (cost tracks K_active, not k_max)
+    rows += leg("interp-smoke")
+    rows += leg("sweep-pair")
+    rows += leg("k-sweep")
     payload = {
         "bench": "gibbs_hotpath",
         "backend": backend,
@@ -305,6 +388,11 @@ def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
         # paths (enforced structurally by tests/test_fused_sweep.py)
         "x_hbm_reads_per_sweep": {"seed": 3, "pre_pr4_reference": 3,
                                   "fused_reference": 1, "fused_pallas": 1},
+        # sparse-K acceptance (ISSUE 6): a k_max=512 slab at K_active=8
+        # must sweep within this factor of a k_max=32 slab at K_active=8,
+        # on the fused AND reference bodies (gated by check_regression.py
+        # from the k_sweep rows — cost tracks K_active, not k_max)
+        "k_scaling_budget": 1.3,
         "results": rows,
     }
     with open(out_path, "w") as f:
@@ -330,12 +418,15 @@ def main(argv=None):
     ap.add_argument("--out-json", default="BENCH_gibbs.json")
     ap.add_argument("--_hotpath-leg", dest="hotpath_leg", default=None,
                     choices=["reference", "fused", "interp-smoke",
-                             "sweep-pair"], help=argparse.SUPPRESS)
+                             "sweep-pair", "k-sweep"],
+                    help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
     if args.hotpath_leg == "interp-smoke":
         _hotpath_interp_smoke(min(args.iters or 8, 8))
     elif args.hotpath_leg == "sweep-pair":
         _hotpath_sweep_pair()
+    elif args.hotpath_leg == "k-sweep":
+        _hotpath_k_sweep()
     elif args.hotpath_leg:
         _hotpath_leg(args.hotpath_leg == "fused", args.iters or 30)
     elif args.hotpath:

@@ -20,6 +20,12 @@ compares them against the baselines committed at the repo root
    same-run pair, so it holds regardless of how slow the runner is
    (the *magnitude* of the win swings ~1.2-1.8x with machine load,
    which is why it is gated on sign, not on the baseline value);
+ - **the sparse-K scaling budget**: the ``k_sweep`` rows' within-run
+   pair — a k_max=512 slab at K_active=8 must sweep within the payload's
+   ``k_scaling_budget`` (1.3x) of the k_max=32 slab at K_active=8, on
+   the fused and reference bodies alike (sweep cost is O(K_active), not
+   O(k_max)). Same-machine same-run, so runner class cannot mask or
+   fake it;
  - **any flip of an accounting invariant**: ``x_hbm_reads_per_sweep``
    must stay 1 on both fused paths, the interpret-mode megakernel smoke
    must stay ``chain_identical_to_reference``, every out-of-core leg
@@ -134,6 +140,36 @@ def check_gibbs(gate: Gate, fresh: dict, base: dict) -> None:
                    "(one-read never slower than three-pass)",
                    speedup is not None and speedup >= 1.0,
                    f"got {speedup}")
+    # sparse-K scaling (ISSUE 6): sweep cost tracks K_active, not k_max.
+    # WITHIN-RUN pair — the k_max=512 slab at 8 live clusters vs the
+    # k_max=32 slab at 8 live clusters, same machine same run, so the
+    # gate holds regardless of runner class. Budget from the payload
+    # (1.3x), applied to the fused AND reference bodies.
+    def _krows(payload):
+        return {(r.get("k_max"), r.get("k_active")): r
+                for r in payload.get("results") or []
+                if r.get("path") == "k_sweep"}
+    budget = fresh.get("k_scaling_budget") or 1.3
+    f_k, b_k = _krows(fresh), _krows(base)
+    small, big = f_k.get((32, 8)), f_k.get((512, 8))
+    for metric in ("ms_per_sweep_fused", "ms_per_sweep_reference"):
+        sm, bg = (small or {}).get(metric), (big or {}).get(metric)
+        if sm and bg:
+            gate.invariant(
+                f"k_sweep {metric} (512,8) within {budget}x of (32,8)",
+                bg <= sm * budget, f"ratio {bg / sm:.3f}")
+        else:
+            gate.invariant(f"k_sweep rows present for {metric}", False,
+                           f"missing (32,8)/(512,8) rows (got {sm}, {bg})")
+    # paired vs baseline: every k_sweep row the baseline carries must not
+    # slow down past the wall-clock envelope (baselines predating the
+    # sparse-K grid simply have no rows to pair — nothing to gate)
+    for key in sorted(b_k):
+        frow = f_k.get(key)
+        for metric in ("ms_per_sweep_fused", "ms_per_sweep_reference"):
+            gate.slower(f"k_sweep[k_max={key[0]},K_active={key[1]}] "
+                        f"{metric}",
+                        (frow or {}).get(metric), b_k[key].get(metric))
 
 
 def check_scaling(gate: Gate, fresh: dict, base: dict) -> None:

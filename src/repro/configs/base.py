@@ -160,7 +160,15 @@ class DPMMConfig:
     """
     component: str = "gaussian"       # core.family registry lookup key
     alpha: float = 10.0               # DP concentration
-    k_max: int = 64                   # static capacity (see DESIGN §6)
+    # static capacity (see DESIGN §6) — or the string 'auto' (resident data
+    # plane only): the slab starts at max(8, 2*init_clusters) slots and
+    # doubles at scan-chunk boundaries whenever the live cluster count
+    # crosses half the slab, capped at k_max_cap. k_max becomes a high-water
+    # mark the sampler discovers, not an up-front planning decision. Growth
+    # changes PRNG draw *shapes*, so an 'auto' chain is deterministic but
+    # not bitwise a fixed-k_max chain — pin k_max for golden chains.
+    k_max: object = 64                # int, or the string 'auto'
+    k_max_cap: int = 4096             # growth ceiling for k_max='auto'
     init_clusters: int = 1
     iters: int = 100
     burnout: int = 15                 # no splits/merges before this iter
@@ -187,6 +195,15 @@ class DPMMConfig:
     nig_kappa: float = 1.0
     nig_a0: float = 2.0
     nig_b0: float = 0.5
+    # sparse-K sweeps: gather the K_active live clusters into a compact
+    # slab before each sweep/move so per-iteration cost is O(K_active), not
+    # O(k_max). Pure gather/scatter around an unchanged stat fold — chains
+    # are bitwise identical to the dense-slab chains (tests/test_sparse_k).
+    compact: bool = True
+    k_block: int = 8                  # cluster-tile size the K-blocked
+    #                                   kernels stream through VMEM; per-
+    #                                   grid-step memory is O(k_block), so
+    #                                   k_max no longer has to fit in VMEM
     # distribution
     shard_features: bool = False      # shard d over the model axis (high-d)
     use_pallas: bool = False          # swap in Pallas kernels (TPU)
@@ -207,15 +224,26 @@ class DPMMConfig:
                 raise ValueError(
                     f"DPMMConfig.{name} must be a positive int, got "
                     f"{value!r}")
-        positive("k_max", self.k_max)
+        if self.k_max == "auto":
+            if self.tile_size is not None:
+                raise ValueError(
+                    "DPMMConfig.k_max='auto' requires the resident data "
+                    "plane (tile_size=None): the tiled driver re-traces "
+                    "per iteration and has no chunk boundary to grow at")
+            positive("k_max_cap", self.k_max_cap)
+            cap = self.k_max_cap
+        else:
+            positive("k_max", self.k_max)
+            cap = self.k_max
         positive("init_clusters", self.init_clusters)
         positive("log_every", self.log_every)
+        positive("k_block", self.k_block)
         if self.tile_size is not None:
             positive("tile_size", self.tile_size)
-        if self.init_clusters > self.k_max:
+        if self.init_clusters > cap:
             raise ValueError(
                 f"DPMMConfig.init_clusters ({self.init_clusters}) exceeds "
-                f"k_max ({self.k_max}): the static capacity cannot hold "
+                f"k_max ({cap}): the static capacity cannot hold "
                 "the initial clusters")
         if self.iters < 0 or self.burnout < 0:
             raise ValueError(

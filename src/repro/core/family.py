@@ -75,7 +75,7 @@ def _add_tree(a: Any, b: Any) -> Any:
 
 def fold_blocked(family: "ComponentFamily", k_max: int, body, x: jax.Array,
                  valid: jax.Array, extras: Tuple, acc,
-                 use_pallas: bool = False):
+                 use_pallas: bool = False, label_map=None):
     """Run a per-point ``body`` over fixed STATS_BLOCK point blocks and
     fold each block's sub-cluster stat partial into ``acc`` — the one-read
     pass shape shared by the fused sweep (``ComponentFamily.sweep_ref``)
@@ -90,10 +90,19 @@ def fold_blocked(family: "ComponentFamily", k_max: int, body, x: jax.Array,
     stay bitwise identical to the three-pass formulation on every plane,
     tile size, and sharding. Only a shard's ragged tail (< STATS_BLOCK)
     runs outside the scan; it folds last either way.
+
+    ``label_map`` (optional, (k_dense,) int32) re-indexes labels before
+    the stat fold only — the returned labels stay in ``body``'s space.
+    The active-set compaction uses it to fold a dense-slab relabel pass
+    into a compact (k_max = K_active) ``acc``: per-segment sums are
+    unchanged (same points, same order), so the scattered-back stats are
+    bitwise the dense fold's.
     """
     n = x.shape[0]
     nb, rem = divmod(n, STATS_BLOCK)
     outs = []
+    stat_lab = ((lambda lab: lab) if label_map is None
+                else (lambda lab: label_map[lab]))
     if nb:
         blk = lambda a: a[:nb * STATS_BLOCK].reshape(
             (nb, STATS_BLOCK) + a.shape[1:])
@@ -101,7 +110,7 @@ def fold_blocked(family: "ComponentFamily", k_max: int, body, x: jax.Array,
         def step(a, args):
             xb, vb = args[0], args[1]
             lab, sub = body(xb, vb, *args[2:])
-            p = family.stats_from_labels(xb, vb, lab, sub, k_max,
+            p = family.stats_from_labels(xb, vb, stat_lab(lab), sub, k_max,
                                          use_pallas=use_pallas)
             return _add_tree(a, p), (lab, sub)
 
@@ -112,7 +121,7 @@ def fold_blocked(family: "ComponentFamily", k_max: int, body, x: jax.Array,
         tail = slice(nb * STATS_BLOCK, None)
         xb, vb = x[tail], valid[tail]
         lab, sub = body(xb, vb, *(e[tail] for e in extras))
-        p = family.stats_from_labels(xb, vb, lab, sub, k_max,
+        p = family.stats_from_labels(xb, vb, stat_lab(lab), sub, k_max,
                                      use_pallas=use_pallas)
         acc = _add_tree(acc, p)
         outs.append((lab, sub))
@@ -183,7 +192,8 @@ class ComponentFamily:
               subparams: Any, logw: jax.Array, sublogw: jax.Array,
               active: jax.Array, gidx: jax.Array, key_z: jax.Array,
               key_zb: jax.Array, k_max: int, acc,
-              use_pallas: bool = False, feat_axis=None
+              use_pallas: bool = False, feat_axis=None, slots=None,
+              k_block: Optional[int] = None
               ) -> Tuple[jax.Array, jax.Array, Any]:
         """Steps (e)+(f)+suff-stat fold with x consumed exactly once.
 
@@ -195,13 +205,21 @@ class ComponentFamily:
         noise from the counter-based PRNG, so they produce the same chain
         as the pre-fusion three-pass formulation, bit for bit.
 
+        ``params``/``logw``/... may be a COMPACT slab (K_active rows
+        gathered from the dense k_max slab — core/gibbs.py's compaction);
+        ``slots`` then carries the (K,) uint32 dense slot ids so the
+        Gumbel counters — hence the chain — are bitwise the dense slab's.
+        ``k_block`` overrides the streamed cluster-tile size of the
+        megakernel. Returns ``(labels, sublabels, acc')`` with labels in
+        COMPACT positions (the caller maps them back through the plan).
+
         ``key_z``/``key_zb``: raw (2,) uint32 key words
-        (``prng.key_words``). Returns ``(labels, sublabels, acc')``.
+        (``prng.key_words``).
         """
         if use_pallas and feat_axis is None and self.sweep_fast is not None:
             out = self.sweep_fast(x, valid, params, subparams, logw,
                                   sublogw, active, gidx, key_z, key_zb,
-                                  k_max)
+                                  k_max, slots=slots, k_block=k_block)
             if out is not None:
                 labels, sublabels, partials = out
                 acc, _ = jax.lax.scan(
@@ -209,23 +227,26 @@ class ComponentFamily:
                 return labels, sublabels, acc
         return self.sweep_ref(x, valid, params, subparams, logw, sublogw,
                               active, gidx, key_z, key_zb, k_max, acc,
-                              use_pallas=use_pallas, feat_axis=feat_axis)
+                              use_pallas=use_pallas, feat_axis=feat_axis,
+                              slots=slots)
 
     def sweep_ref(self, x: jax.Array, valid: jax.Array, params: Any,
                   subparams: Any, logw: jax.Array, sublogw: jax.Array,
                   active: jax.Array, gidx: jax.Array, key_z: jax.Array,
                   key_zb: jax.Array, k_max: int, acc,
-                  use_pallas: bool = False, feat_axis=None
+                  use_pallas: bool = False, feat_axis=None, slots=None
                   ) -> Tuple[jax.Array, jax.Array, Any]:
         """Blocked one-read sweep reference: e + f + stat fold per
         STATS_BLOCK block inside one scan body. Per-block math is exactly
         ``assign``/``sub_assign``/``stats_from_labels`` (counter-based
         noise, same op order), so the chain matches the three-pass body
-        bitwise while x streams through the scan once."""
+        bitwise while x streams through the scan once. Accepts the same
+        compact-slab + ``slots`` calling convention as ``sweep``."""
         def body(xb, vb, gb):
             del vb                      # assignment ignores the pad mask
             lab = self.assign(xb, params, logw, active, gb, key_z,
-                              use_pallas=use_pallas, feat_axis=feat_axis)
+                              use_pallas=use_pallas, feat_axis=feat_axis,
+                              slots=slots)
             sub = self.sub_assign(xb, subparams, sublogw, lab, gb, key_zb,
                                   use_pallas=use_pallas,
                                   feat_axis=feat_axis)
@@ -237,20 +258,24 @@ class ComponentFamily:
     # -- fused sweep hot path (steps e/f + suff-stats) --------------------
     def assign(self, x: jax.Array, params: Any, logw: jax.Array,
                active: jax.Array, gidx: jax.Array, key_data: jax.Array,
-               use_pallas: bool = False, feat_axis=None) -> jax.Array:
+               use_pallas: bool = False, feat_axis=None,
+               slots=None) -> jax.Array:
         """Step (e): z_i = argmax_k [loglik + log pi_k + Gumbel] -> (N,).
 
         The Gumbel noise is the counter-based Threefry draw of
         kernels/prng.py keyed on (key, global index, cluster) — identical
         bits in the fused kernel and in this reference path, so both
-        sample the same chain. With ``use_pallas`` the streaming kernel
-        (kernels/assign.py) runs the whole step in VMEM tiles and the
-        (N, K) logits/Gumbel matrices never exist in HBM; otherwise this
-        reference materializes the (N, K) logits once (and nothing else).
+        sample the same chain. The cluster counter is the dense-slab SLOT
+        id: ``slots`` (default ``arange(K)``) lets a compacted caller pass
+        the gathered ids so compact and dense slabs draw identical noise.
+        With ``use_pallas`` the streaming kernel (kernels/assign.py) runs
+        the whole step in VMEM tiles and the (N, K) logits/Gumbel matrices
+        never exist in HBM; otherwise this reference materializes the
+        (N, K) logits once (and nothing else).
         """
         if use_pallas and feat_axis is None:
             fused = self._assign_fused(x, params, logw, active, gidx,
-                                       key_data)
+                                       key_data, slots)
             if fused is not None:
                 return fused
         ll = (self.loglik_sharded(x, params, feat_axis)
@@ -258,18 +283,21 @@ class ComponentFamily:
               else self.loglik(x, params, use_pallas=use_pallas))
         logits = ll + logw[None, :]
         logits = jnp.where(active[None, :], logits, NEG_INF)
-        cid = jnp.arange(logw.shape[0], dtype=jnp.uint32)
+        cid = (jnp.arange(logw.shape[0], dtype=jnp.uint32)
+               if slots is None else slots.astype(jnp.uint32))
         logits = logits + prng.gumbel(key_data, gidx[:, None], cid[None, :])
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
 
-    def _assign_fused(self, x, params, logw, active, gidx, key_data):
+    def _assign_fused(self, x, params, logw, active, gidx, key_data,
+                      slots=None):
         from repro.kernels import ops
         if self.assign_fast is not None:
-            return self.assign_fast(x, params, logw, active, gidx, key_data)
+            return self.assign_fast(x, params, logw, active, gidx, key_data,
+                                    slots)
         if self.assign_pack is not None:
             feats, w, const = self.assign_pack(x, params)
             return ops.assign_linear_pallas(feats, w, const, logw, active,
-                                            gidx, key_data)
+                                            gidx, key_data, slots)
         return None
 
     def sub_assign(self, x: jax.Array, subparams: Any, sublogw: jax.Array,
@@ -497,13 +525,13 @@ def _diag_gauss_loglik_fast(x: jax.Array, params) -> jax.Array:
     return ops.diag_gauss_loglik(x, params, True)
 
 
-def _gauss_assign_fast(x, params, logw, active, gidx, key_data):
+def _gauss_assign_fast(x, params, logw, active, gidx, key_data, slots=None):
     if params.mu.ndim != 2:
         return None
     from repro.kernels import ops
     return ops.assign_gauss_pallas(x, params.mu, params.chol_prec,
                                    params.logdet_prec, logw, active, gidx,
-                                   key_data)
+                                   key_data, slots)
 
 
 def _gauss_sub_assign_fast(x, subparams, sublogw, labels, gidx, key_data):
@@ -527,13 +555,14 @@ def _linear_sweep_fast(mod):
     ``stats_from_moments`` unpacks the folded (nsb, K, 2, d') moment
     partials into the family's stats pytree."""
     def hook(x, valid, params, subparams, logw, sublogw, active, gidx,
-             key_z, key_zb, k_max):
+             key_z, key_zb, k_max, slots=None, k_block=None):
         from repro.kernels import ops
         feats, w, const, subw, subconst = mod.sweep_pack(x, params,
                                                          subparams)
         out = ops.sweep_linear_pallas(feats, w, const, logw, active, subw,
                                       subconst, sublogw, valid, gidx,
-                                      key_z, key_zb)
+                                      key_z, key_zb, slots,
+                                      k_block=k_block or ops.K_BLOCK)
         if out is None:
             return None
         labels, sublabels, n2, sf2 = out
@@ -542,13 +571,14 @@ def _linear_sweep_fast(mod):
 
 
 def _gauss_sweep_fast(x, valid, params, subparams, logw, sublogw, active,
-                      gidx, key_z, key_zb, k_max):
+                      gidx, key_z, key_zb, k_max, slots=None, k_block=None):
     if params.mu.ndim != 2 or subparams.mu.ndim != 3:
         return None
     from repro.kernels import ops
     mu, f, ld, smu, sf, sld = niw.sweep_pack(params, subparams)
     out = ops.sweep_gauss_pallas(x, mu, f, ld, logw, active, smu, sf, sld,
-                                 sublogw, valid, gidx, key_z, key_zb)
+                                 sublogw, valid, gidx, key_z, key_zb, slots,
+                                 k_block=k_block or ops.K_BLOCK)
     if out is None:
         return None
     labels, sublabels, n2, sx2, sxx2 = out

@@ -31,7 +31,7 @@ O(N K T), on every path.
 """
 from __future__ import annotations
 
-from typing import Any, Optional, Tuple
+from typing import Any, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -102,6 +102,59 @@ def sample_subweights(key: jax.Array, active: jax.Array, nkl: jax.Array,
     ga = jnp.maximum(ga, 1e-30)
     logw = jnp.log(ga) - jnp.log(jnp.sum(ga, axis=-1, keepdims=True))
     return jnp.where(active[:, None], logw, jnp.log(0.5))
+
+
+# ---------------------------------------------------------------------------
+# Active-set compaction: sweep cost O(K_active), not O(k_max)
+# ---------------------------------------------------------------------------
+class CompactionPlan(NamedTuple):
+    """Gather/scatter index pair between the dense ``k_max`` slab and a
+    compact ``K_active``-sized slab.
+
+    ``slot_of_compact``: (k_c,) int32 — dense slot id of each compact row,
+    active slots first in ascending slot order (a stable sort), then
+    inactive pad slots. Because the order is the slot order, first-max
+    argmax ties resolve identically on both slabs, and because the Gumbel
+    counters are the SLOT ids (not the compact positions), the compacted
+    sweep is a pure gather/scatter around arithmetic that is bitwise the
+    dense sweep's.
+
+    ``compact_of_slot``: (k_max,) int32 — inverse map (compact position of
+    each dense slot; positions >= k_c for slots outside the plan).
+    """
+    slot_of_compact: jax.Array
+    compact_of_slot: jax.Array
+
+
+def compaction_plan(active: jax.Array, k_c: int) -> CompactionPlan:
+    """Build the compact<->dense index pair from the active mask.
+
+    ``k_c`` (static) must be >= the number of active slots for the compact
+    sweep to be exact — callers either know k_hat (tiled driver, host
+    loop) or guard with ``lax.cond`` on ``k_hat <= k_c`` (resident chunks,
+    where K may grow mid-chunk via splits).
+    """
+    order = jnp.argsort(jnp.logical_not(active), stable=True
+                        ).astype(jnp.int32)
+    return CompactionPlan(slot_of_compact=order[:k_c],
+                          compact_of_slot=jnp.argsort(order
+                                                      ).astype(jnp.int32))
+
+
+def compact_gather(plan: CompactionPlan, tree: Any) -> Any:
+    """Gather the compact rows of a (k_max, ...)-leading pytree."""
+    return jax.tree.map(lambda a: jnp.take(a, plan.slot_of_compact, axis=0),
+                        tree)
+
+
+def compact_scatter(plan: CompactionPlan, k_max: int, tree: Any) -> Any:
+    """Scatter a compact (k_c, ...)-leading pytree back onto the dense
+    slab. Slots outside the plan get zeros — exactly what the dense sweep
+    computes for inactive slots (no points ever assign to them), so the
+    scattered stats are bitwise the dense-slab stats."""
+    return jax.tree.map(
+        lambda a: jnp.zeros((k_max,) + a.shape[1:], a.dtype
+                            ).at[plan.slot_of_compact].set(a), tree)
 
 
 # ---------------------------------------------------------------------------
@@ -201,7 +254,8 @@ def sweep_model(model: ModelState, prior, family, alpha: float
 def sweep_tile(model: ModelState, x: jax.Array, point: PointState,
                gidx: jax.Array, acc, family,
                use_pallas: bool = False, feat_axis=None, *,
-               fused: bool = True) -> Tuple[PointState, Any]:
+               fused: bool = True, plan: Optional[CompactionPlan] = None,
+               k_block: Optional[int] = None) -> Tuple[PointState, Any]:
     """Steps (e)/(f) + suff-stat fold for one tile of points, reading each
     block of x from HBM exactly ONCE (``ComponentFamily.sweep``: the
     Pallas megakernel or the blocked scan reference — e, f, and the stat
@@ -213,43 +267,90 @@ def sweep_tile(model: ModelState, x: jax.Array, point: PointState,
     three-pass body — kept as the parity oracle (tests/benchmarks): both
     produce bitwise-identical chains, the fused body just streams x once
     instead of three times.
+
+    ``plan`` (optional): the active-set compaction. The tile runs on the
+    gathered K_active-row slab — O(N K_active) work instead of
+    O(N k_max) — with the dense SLOT ids as Gumbel counters; ``acc`` must
+    then be compact-shaped (``empty_substats(family, k_c, d)``) and the
+    caller scatters the finalized stats back (``compact_scatter``).
+    Returned labels are ALWAYS dense slot ids, plan or not, so everything
+    downstream (split/merge, scoring, serving) is oblivious to
+    compaction. ``k_block`` tunes the megakernel's streamed cluster tile.
     """
     _, _, _, _, k_z, k_zb = sweep_keys(model)
-    k_max = model.active.shape[0]
+    if plan is None:
+        k_eff = model.active.shape[0]
+        params, subparams = model.params, model.subparams
+        logw, sublogw = model.logweights, model.sub_logweights
+        active, slots = model.active, None
+    else:
+        k_eff = plan.slot_of_compact.shape[0]
+        params = compact_gather(plan, model.params)
+        subparams = compact_gather(plan, model.subparams)
+        logw = compact_gather(plan, model.logweights)
+        sublogw = compact_gather(plan, model.sub_logweights)
+        active = compact_gather(plan, model.active)
+        slots = plan.slot_of_compact.astype(jnp.uint32)
 
     if not fused:
         # (e) cluster assignments over *existing* k — pass 1 over x
-        labels = family.assign(x, model.params, model.logweights,
-                               model.active, gidx, prng.key_words(k_z),
-                               use_pallas=use_pallas, feat_axis=feat_axis)
+        labels = family.assign(x, params, logw, active, gidx,
+                               prng.key_words(k_z), use_pallas=use_pallas,
+                               feat_axis=feat_axis, slots=slots)
         # (f) sub-assignment under the OWN cluster only — pass 2 over x
         sublabels = family.sub_assign(
-            x, model.subparams, model.sub_logweights, labels, gidx,
-            prng.key_words(k_zb), use_pallas=use_pallas,
-            feat_axis=feat_axis)
+            x, subparams, sublogw, labels, gidx, prng.key_words(k_zb),
+            use_pallas=use_pallas, feat_axis=feat_axis)
         # suff-stat fold — pass 3 over x
         acc = accumulate_substats(family, x, point.valid, labels,
-                                  sublabels, k_max, acc, use_pallas)
-        return point._replace(labels=labels, sublabels=sublabels), acc
-
-    labels, sublabels, acc = family.sweep(
-        x, point.valid, model.params, model.subparams, model.logweights,
-        model.sub_logweights, model.active, gidx, prng.key_words(k_z),
-        prng.key_words(k_zb), k_max, acc, use_pallas=use_pallas,
-        feat_axis=feat_axis)
+                                  sublabels, k_eff, acc, use_pallas)
+    else:
+        labels, sublabels, acc = family.sweep(
+            x, point.valid, params, subparams, logw, sublogw, active, gidx,
+            prng.key_words(k_z), prng.key_words(k_zb), k_eff, acc,
+            use_pallas=use_pallas, feat_axis=feat_axis, slots=slots,
+            k_block=k_block)
+    if plan is not None:       # compact positions -> dense slot ids
+        labels = jnp.take(plan.slot_of_compact, labels)
     return point._replace(labels=labels, sublabels=sublabels), acc
 
 
 def sweep(model: ModelState, point: PointState, x: jax.Array, prior, family,
           alpha: float, axes: Tuple[str, ...],
-          use_pallas: bool = False, feat_axis=None
+          use_pallas: bool = False, feat_axis=None, *,
+          k_compact: Optional[int] = None,
+          k_block: Optional[int] = None
           ) -> Tuple[ModelState, PointState]:
     """One restricted Gibbs sweep (steps a-f), whole shard as a single
-    tile. Runs under shard_map; the resident driver's hot loop."""
+    tile. Runs under shard_map; the resident driver's hot loop.
+
+    ``k_compact`` (static): run the tile on a compacted K_active slab of
+    this size. The model-side steps (a)-(d) stay dense (their RNG draw
+    shapes depend on k_max), a ``CompactionPlan`` is emitted from the
+    post-resample active mask, and the finalized stats scatter back to
+    the dense slab — bitwise the dense sweep. If the live cluster count
+    exceeds ``k_compact`` (mid-chunk splits), a ``lax.cond`` falls back
+    to the dense-slab tile.
+    """
     model = sweep_model(model, prior, family, alpha)
     gidx = global_indices(x.shape[0], axes)
-    acc = empty_substats(family, model.active.shape[0], x.shape[-1])
-    point, acc = sweep_tile(model, x, point, gidx, acc, family,
-                            use_pallas=use_pallas, feat_axis=feat_axis)
-    stats, substats = finalize_substats(family, acc, axes, feat_axis)
-    return model._replace(stats=stats, substats=substats), point
+    k_max = model.active.shape[0]
+
+    def run(plan):
+        k_eff = k_max if plan is None else plan.slot_of_compact.shape[0]
+        acc = empty_substats(family, k_eff, x.shape[-1])
+        point2, acc = sweep_tile(model, x, point, gidx, acc, family,
+                                 use_pallas=use_pallas,
+                                 feat_axis=feat_axis, plan=plan,
+                                 k_block=k_block)
+        stats, substats = finalize_substats(family, acc, axes, feat_axis)
+        if plan is not None:
+            stats = compact_scatter(plan, k_max, stats)
+            substats = compact_scatter(plan, k_max, substats)
+        return model._replace(stats=stats, substats=substats), point2
+
+    if k_compact is None or k_compact >= k_max:
+        return run(None)
+    plan = compaction_plan(model.active, k_compact)
+    return jax.lax.cond(model.k_hat <= k_compact,
+                        lambda: run(plan), lambda: run(None))

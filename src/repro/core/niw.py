@@ -86,6 +86,19 @@ def empty_stats(batch_shape: tuple, d: int, dtype=jnp.float32) -> GaussStats:
     )
 
 
+def _outer_flat(x: jax.Array) -> jax.Array:
+    """(N, d) -> (N, d*d) flattened per-point outer products, materialized
+    EXPLICITLY so the second-moment fold is the two-operand contraction
+    ``resp^T @ xx`` whatever the segment-axis width. Folding the 3-operand
+    ``ns,nd,ne->sde`` einsum directly lets XLA pick a width-dependent
+    fused lowering whose reduction bits differ between small and large
+    segment counts — which would break the sparse-K contract (the compact
+    K_active-width fold must be bitwise the dense k_max-width fold, see
+    core/gibbs.compaction_plan). At large widths XLA's own lowering IS
+    this two-step, so dense-slab chains keep their exact bits."""
+    return (x[:, :, None] * x[:, None, :]).reshape(x.shape[0], -1)
+
+
 def stats_from_points(x: jax.Array, resp: jax.Array) -> GaussStats:
     """Stats under a (soft/hard) assignment matrix.
 
@@ -97,7 +110,7 @@ def stats_from_points(x: jax.Array, resp: jax.Array) -> GaussStats:
     bshape = resp.shape[1:]
     r2 = resp.reshape(resp.shape[0], -1)           # (N, prod(B))
     sx = jnp.einsum("nb,nd->bd", r2, x)
-    sxx = jnp.einsum("nb,nd,ne->bde", r2, x, x)
+    sxx = jnp.einsum("nb,nX->bX", r2, _outer_flat(x))
     d = x.shape[-1]
     return GaussStats(n=n, sx=sx.reshape(bshape + (d,)),
                       sxx=sxx.reshape(bshape + (d, d)))
@@ -114,14 +127,15 @@ def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
     One (N, 2K) one-hot over segments s = 2*label + sublabel replaces the
     old resp (N, K) + subresp (N, K, 2) pair — cluster stats are the fold
     over the sub axis (core/gibbs.compute_stats), so clusters and
-    sub-clusters come from ONE einsum pass. The second-moment einsum needs
+    sub-clusters come from ONE einsum pass. The second-moment fold needs
     the one-hot operand (sxx is a masked x^T x — there is no segment-sum
-    form that avoids materializing per-point outer products, which at
-    (N, d, d) would dwarf the (N, 2K) one-hot), and its pairwise
-    contraction still materializes an (N, 2K-or-d, d) temporary — half of
-    what the old two-pass resp+subresp einsums peaked at, but the real
-    fix is the Pallas kernel (kernels/suffstats.py), which builds the
-    one-hot per tile in VMEM and accumulates sxx without any HBM
+    form that avoids per-point outer products); those outer products are
+    materialized explicitly (``_outer_flat``) so the fold is a
+    width-oblivious two-operand gemm — required for sparse-K compaction
+    to be bitwise (see _outer_flat). The (N, d, d) temporary is bounded:
+    this runs per STATS_BLOCK block inside the one-read sweep, and the
+    real fix is the Pallas kernel (kernels/suffstats.py), which builds
+    the one-hot per tile in VMEM and accumulates sxx without any HBM
     temporary. This is the jnp oracle / non-TPU path.
     """
     seg = labels * 2 + sublabels
@@ -129,7 +143,7 @@ def stats_from_labels(x: jax.Array, valid: jax.Array, labels: jax.Array,
           * valid.astype(x.dtype)[:, None])          # (N, 2K)
     n2 = jnp.sum(r2, axis=0)
     sx2 = jnp.einsum("ns,nd->sd", r2, x)
-    sxx2 = jnp.einsum("ns,nd,ne->sde", r2, x, x)
+    sxx2 = jnp.einsum("ns,nX->sX", r2, _outer_flat(x))
     d = x.shape[-1]
     return GaussStats(n=n2.reshape(k_max, 2),
                       sx=sx2.reshape(k_max, 2, d),

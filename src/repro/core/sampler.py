@@ -74,7 +74,7 @@ from repro.core.distributed import (data_axes_of, make_data_mesh,
 from repro.core.family import (ComponentFamily, get_family,
                                state_partition_specs)
 from repro.core.metrics import ari, nmi
-from repro.core.state import ModelState, PointState
+from repro.core.state import ModelState, PointState, grow_model
 from repro.data.source import DataSource, as_source
 
 _HIST_KEYS = ("k", "max_cluster", "min_cluster", "score")
@@ -112,6 +112,22 @@ def _chain_keys(key: jax.Array, n_chains: int) -> jax.Array:
     ``fold_in(key, c)``."""
     return jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
         key, jnp.arange(n_chains))
+
+
+def _ceil_pow2(v: int) -> int:
+    return 1 << max(0, (int(v) - 1).bit_length())
+
+
+def _k_compact(k_hat: int, headroom: int, k_slab: int,
+               k_block: int) -> Optional[int]:
+    """Static compact-slab size for the sparse-K sweep: covers
+    ``headroom * k_hat`` live clusters (headroom 1 when K cannot change
+    during the pass — tiled sweeps; 2 when splits may double it — resident
+    chunks and split/merge folds), rounded up to a power of two so the
+    number of distinct compiled shapes is O(log K) per fit. ``None`` when
+    the compact slab would not beat the dense one."""
+    kc = max(k_block, _ceil_pow2(headroom * max(1, k_hat)))
+    return None if kc >= k_slab else kc
 
 
 def _chain_map(f):
@@ -174,36 +190,63 @@ def _move_key(model: ModelState) -> jax.Array:
 
 
 def _split_merge(model: ModelState, point: PointState, x, *, prior, family,
-                 cfg, axes, k_max, feat_axis=None
+                 cfg, axes, k_max, feat_axis=None, k_compact=None
                  ) -> Tuple[ModelState, PointState]:
-    """Resident split/merge: plan (O(K)), one whole-shard tile, finalize."""
+    """Resident split/merge: plan (O(K)), one whole-shard tile, finalize.
+
+    With ``k_compact`` set, the consistency suff-stat fold runs on a
+    compact slab sized for the *post-move* active set — splits at most
+    double K per move, so ``min(k_max, 2 * k_compact)`` rows suffice —
+    and the finalized stats scatter back to the dense slab (bitwise the
+    dense fold). A ``lax.cond`` falls back to the dense fold whenever the
+    post-move live count outgrew the bound (possible mid-chunk, where
+    ``k_compact`` was sized from a chunk-old k_hat)."""
     plan = splitmerge.plan_split_merge(
         _move_key(model), model, prior, family, cfg.alpha,
         cfg.subreset_every)
-    acc = gibbs.empty_substats(family, k_max, x.shape[-1])
-    point, acc = splitmerge.split_merge_tile(
-        plan, x, point, acc, family, use_pallas=cfg.use_pallas,
-        feat_axis=feat_axis)
-    # consistency pass (paper §4.4: 'processing accepted splits/merges
-    # requires updating the sufficient statistics', O(N/G) + one psum)
-    stats3, substats3 = gibbs.finalize_substats(family, acc, axes, feat_axis)
-    model = model._replace(active=plan.merge.new_active, stuck=plan.stuck,
-                           stats=stats3, substats=substats3)
-    return model, point
+
+    def run(comp):
+        k_eff = k_max if comp is None else comp.slot_of_compact.shape[0]
+        acc = gibbs.empty_substats(family, k_eff, x.shape[-1])
+        point2, acc2 = splitmerge.split_merge_tile(
+            plan, x, point, acc, family, use_pallas=cfg.use_pallas,
+            feat_axis=feat_axis, compaction=comp)
+        # consistency pass (paper §4.4: 'processing accepted splits/merges
+        # requires updating the sufficient statistics', O(N/G) + one psum)
+        stats3, substats3 = gibbs.finalize_substats(family, acc2, axes,
+                                                    feat_axis)
+        if comp is not None:
+            stats3 = gibbs.compact_scatter(comp, k_max, stats3)
+            substats3 = gibbs.compact_scatter(comp, k_max, substats3)
+        return (model._replace(active=plan.merge.new_active,
+                               stuck=plan.stuck, stats=stats3,
+                               substats=substats3), point2)
+
+    k_c_sm = None if k_compact is None else min(k_max, 2 * k_compact)
+    if k_c_sm is None or k_c_sm >= k_max:
+        return run(None)
+    comp = gibbs.compaction_plan(plan.merge.new_active, k_c_sm)
+    n_new = jnp.sum(plan.merge.new_active.astype(jnp.int32))
+    return jax.lax.cond(n_new <= k_c_sm, lambda: run(comp),
+                        lambda: run(None))
 
 
 def dpmm_step(model: ModelState, point: PointState, x, *, prior, family,
-              cfg, axes, k_max, feat_axis=None
+              cfg, axes, k_max, feat_axis=None, k_compact=None
               ) -> Tuple[ModelState, PointState]:
-    """One full iteration; designed to run under shard_map."""
+    """One full iteration; designed to run under shard_map. ``k_compact``
+    (static) turns on active-set compaction for the sweep and the
+    split/merge stat fold — O(N * K_active) per-point work instead of
+    O(N * k_max), bitwise the dense iteration (core/gibbs.py)."""
     model, point = gibbs.sweep(model, point, x, prior, family, cfg.alpha,
                                axes, use_pallas=cfg.use_pallas,
-                               feat_axis=feat_axis)
+                               feat_axis=feat_axis, k_compact=k_compact,
+                               k_block=cfg.k_block)
     model, point = jax.lax.cond(
         model.it >= cfg.burnout,
         lambda mp: _split_merge(*mp, x, prior=prior, family=family,
                                 cfg=cfg, axes=axes, k_max=k_max,
-                                feat_axis=feat_axis),
+                                feat_axis=feat_axis, k_compact=k_compact),
         lambda mp: mp,
         (model, point))
     return model._replace(it=model.it + 1), point
@@ -392,8 +435,11 @@ class DPMM:
         if key is None:
             key = jax.random.key(self.cfg.seed)
         if init_state is not None:
-            want = ((n_chains, self.cfg.k_max) if n_chains > 1
-                    else (self.cfg.k_max,))
+            # k_max='auto': the checkpoint's slab size IS the resumed
+            # starting capacity, so only the chain axis is validated
+            k_chk = (init_state.active.shape[-1]
+                     if self.cfg.k_max == "auto" else self.cfg.k_max)
+            want = ((n_chains, k_chk) if n_chains > 1 else (k_chk,))
             got = tuple(init_state.active.shape)
             if got != want:
                 raise ValueError(
@@ -434,6 +480,18 @@ class DPMM:
         multi = n_chains > 1
         mesh, axes, feat_axis, kwargs = self._setup(source)
         prior, family = kwargs["prior"], kwargs["family"]
+        # slab capacity: fixed k_max, or the 'auto' growth schedule — start
+        # small and double at chunk boundaries when the live count crosses
+        # half the slab, so k_max is a discovered high-water mark
+        auto = cfg.k_max == "auto"
+        if init_state is not None:
+            k_slab = int(init_state.active.shape[-1])
+        elif auto:
+            k_slab = min(cfg.k_max_cap, max(8, 2 * cfg.init_clusters))
+        else:
+            k_slab = cfg.k_max
+        k_cap = cfg.k_max_cap if auto else k_slab
+        kwargs["k_max"] = k_slab
         x = source.resident()
         n = x.shape[0]
         # non-separable families keep features replicated even when
@@ -460,7 +518,7 @@ class DPMM:
             init_body, mesh=mesh,
             in_specs=(rep, x_in_spec, shard_spec), out_specs=state_specs))
 
-        def make_chunk(length: int):
+        def make_chunk(length: int, k_c: Optional[int]):
             """`length` iterations in one jitted call, history on device.
 
             The scan carries the (model, point) state pair; per-step
@@ -468,9 +526,12 @@ class DPMM:
             (per chain when C > 1 — the C chains run under ``lax.map``
             INSIDE the scan body, sharing the closed-over x). State
             buffers are donated, so chunk i+1 reuses chunk i's memory.
+            ``k_c`` (static) is the compact-slab size for every iteration
+            of the chunk; the in-step ``lax.cond`` (core/gibbs.py) falls
+            back to the dense slab if mid-chunk splits outgrow it.
             """
             def one(m, p, x):
-                m, p = dpmm_step(m, p, x, **kwargs)
+                m, p = dpmm_step(m, p, x, k_compact=k_c, **kwargs)
                 return (m, p), _summaries(m, prior, family, cfg.alpha)
 
             def run(model, point, x):
@@ -509,24 +570,44 @@ class DPMM:
         lengths = [chunk] * (iters // chunk)
         if iters % chunk:
             lengths.append(iters % chunk)   # one shorter trailing chunk
-        chunk_fns: Dict[int, Any] = {}
+        chunk_fns: Dict[Any, Any] = {}
         hist_chunks: List[Dict[str, np.ndarray]] = []
         times: List[float] = []
         done = 0
+        # last known live cluster count (max over chains) — sizes the next
+        # chunk's compact slab and drives the 'auto' growth schedule; the
+        # host learns it for free from the chunk history it pulls anyway
+        if init_state is not None:
+            k0 = int(np.max(np.asarray(
+                jax.device_get(init_state.active)).sum(axis=-1)))
+        else:
+            k0 = cfg.init_clusters
         for length in lengths:
-            if length not in chunk_fns:
+            if auto and 2 * k0 > k_slab and k_slab < k_cap:
+                while 2 * k0 > k_slab and k_slab < k_cap:
+                    k_slab = min(k_cap, 2 * k_slab)
+                # chunk-boundary growth: pad the slab, re-replicate, and
+                # let the next AOT compile re-donate the grown buffers
+                model = jax.device_put(grow_model(model, k_slab),
+                                       NamedSharding(mesh, P()))
+                kwargs["k_max"] = k_slab
+            k_c = (_k_compact(k0, 2, k_slab, cfg.k_block)
+                   if cfg.compact else None)
+            fkey = (length, k_slab, k_c)
+            if fkey not in chunk_fns:
                 # AOT-compile outside the timed region so jit compile time
                 # (seconds) never contaminates iter_times_s / benchmarks.
-                # At most two compiles per fit: `log_every` + one trailing
-                # remainder length.
-                chunk_fns[length] = make_chunk(length).lower(
+                # O(log K) compiles per fit: `log_every` + one trailing
+                # remainder length, times the pow2 compact/slab sizes.
+                chunk_fns[fkey] = make_chunk(length, k_c).lower(
                     model, point, xs).compile()
             t0 = time.perf_counter()
-            (model, point), hist = chunk_fns[length](model, point, xs)
+            (model, point), hist = chunk_fns[fkey](model, point, xs)
             hist = jax.device_get(hist)       # the one host sync per chunk
             dt = time.perf_counter() - t0
             times.extend([dt / length] * length)
             hist_chunks.append(hist)
+            k0 = int(np.max(np.asarray(hist["k"][-1])))
             done += length
             if verbose:
                 ks = np.asarray(hist["k"][-1]).reshape(-1).tolist()
@@ -583,6 +664,11 @@ class DPMM:
         multi = n_chains > 1
         mesh, axes, feat_axis, kwargs = self._setup(source)
         prior = kwargs["prior"]
+        if cfg.k_max == "auto":
+            raise ValueError(
+                "k_max='auto' requires the resident data plane: the tiled "
+                "driver has no scan-chunk boundary to grow the slab at. "
+                "Pass an integer k_max for tiled/out-of-core fits.")
         k_max = cfg.k_max
         n, d = source.n, source.d
         shards = n_data_shards(mesh)
@@ -621,18 +707,28 @@ class DPMM:
                 dims[-1] = feat_axis
             return P(*dims)
 
+        # specs depend only on field name and rank, so ONE spec tree (and
+        # sharding tree) serves the dense k_max accumulator and every
+        # compact k_c-row accumulator alike
         acc_specs = type(acc_shape)(**{
             f: leaf_spec(f, getattr(acc_shape, f))
             for f in acc_shape._fields})
+        acc_shardings = type(acc_shape)(**{
+            f: NamedSharding(mesh, getattr(acc_specs, f))
+            for f in acc_shape._fields})
 
-        zeros_acc = jax.jit(
-            lambda: type(acc_shape)(**{
-                f: jnp.zeros(cshape + (shards,)
-                             + getattr(acc_shape, f).shape, jnp.float32)
-                for f in acc_shape._fields}),
-            out_shardings=type(acc_shape)(**{
-                f: NamedSharding(mesh, getattr(acc_specs, f))
-                for f in acc_shape._fields}))
+        @functools.lru_cache(maxsize=None)
+        def zeros_acc_k(k: int):
+            shape_k = jax.eval_shape(
+                lambda: gibbs.empty_substats(family, k, d))
+            return jax.jit(
+                lambda: type(shape_k)(**{
+                    f: jnp.zeros(cshape + (shards,)
+                                 + getattr(shape_k, f).shape, jnp.float32)
+                    for f in shape_k._fields}),
+                out_shardings=acc_shardings)
+
+        zeros_acc = zeros_acc_k(k_max)
 
         local = lambda acc: jax.tree.map(lambda v: v[0], acc)
         delocal = lambda acc: jax.tree.map(lambda v: v[None], acc)
@@ -697,18 +793,20 @@ class DPMM:
             valid = (gidx < jnp.uint32(n)).astype(x_t.dtype)
             return PointState(labels=lab, sublabels=sub, valid=valid), gidx
 
-        def _sweep_tile(model, x_t, lab, sub, off, acc):
+        def _sweep_tile(model, x_t, lab, sub, off, acc, comp=None):
             point, gidx = tile_point((lab, sub), off, x_t.shape[0], x_t)
             point, a = gibbs.sweep_tile(model, x_t, point, gidx, local(acc),
                                         family, use_pallas=use_pallas,
-                                        feat_axis=feat_axis)
+                                        feat_axis=feat_axis, plan=comp,
+                                        k_block=cfg.k_block)
             return (point.labels, point.sublabels), delocal(a)
 
-        def _sm_tile(plan, x_t, lab, sub, off, acc):
+        def _sm_tile(plan, x_t, lab, sub, off, acc, comp=None):
             point, _ = tile_point((lab, sub), off, x_t.shape[0], x_t)
             point, a = splitmerge.split_merge_tile(
                 plan, x_t, point, local(acc), family,
-                use_pallas=use_pallas, feat_axis=feat_axis)
+                use_pallas=use_pallas, feat_axis=feat_axis,
+                compaction=comp)
             return (point.labels, point.sublabels), delocal(a)
 
         def _init1_tile(x_t, off, acc):
@@ -747,6 +845,16 @@ class DPMM:
                                                      a))(plan, lab, sub,
                                                          acc)
 
+        # compacted variants: the per-chain CompactionPlan rides along as
+        # a replicated operand; acc is the compact k_c-row accumulator
+        def _sweep_tile_comp(model, x_t, lab, sub, off, comp, acc):
+            return cmap(lambda m, l, s, c, a: _sweep_tile(
+                m, x_t, l, s, off, a, c))(model, lab, sub, comp, acc)
+
+        def _sm_tile_comp(plan, x_t, lab, sub, off, comp, acc):
+            return cmap(lambda pl, l, s, c, a: _sm_tile(
+                pl, x_t, l, s, off, a, c))(plan, lab, sub, comp, acc)
+
         def _init1_c(x_t, off, acc):
             return cmap(lambda a: _init1_tile(x_t, off, a))(acc)
 
@@ -760,7 +868,14 @@ class DPMM:
             _sweep_tile_c, in_specs=(model_specs, x_spec, *lab_specs, rep,
                                      acc_specs),
             out_specs=(lab_specs, acc_specs)))
+        comp_specs = gibbs.CompactionPlan(rep, rep)
+        sweep_tile_comp_fn = jax.jit(smap(
+            _sweep_tile_comp,
+            in_specs=(model_specs, x_spec, *lab_specs, rep, comp_specs,
+                      acc_specs),
+            out_specs=(lab_specs, acc_specs)))
         sm_tile_fn = None     # built lazily: needs the plan's pytree specs
+        sm_tile_comp_fn = None
         finalize_fn = jax.jit(smap(
             cmap(_finalize), in_specs=(acc_specs,), out_specs=(rep, rep)))
         init1_fn = jax.jit(smap(
@@ -817,6 +932,24 @@ class DPMM:
             lambda m, plan, s, ss: m._replace(
                 active=plan.merge.new_active, stuck=plan.stuck,
                 stats=s, substats=ss)))
+        # compacted variants: scatter the finalized compact stats back to
+        # the dense slab (pure scatter — bitwise the dense-fold stats)
+        set_stats_comp_fn = jax.jit(cmap(
+            lambda m, c, s, ss: m._replace(
+                stats=gibbs.compact_scatter(c, k_max, s),
+                substats=gibbs.compact_scatter(c, k_max, ss))))
+        apply_plan_comp_fn = jax.jit(cmap(
+            lambda m, plan, c, s, ss: m._replace(
+                active=plan.merge.new_active, stuck=plan.stuck,
+                stats=gibbs.compact_scatter(c, k_max, s),
+                substats=gibbs.compact_scatter(c, k_max, ss))))
+        comp_fns: Dict[int, Any] = {}
+
+        def compact_plan_fn(k_c: int):
+            if k_c not in comp_fns:
+                comp_fns[k_c] = jax.jit(cmap(
+                    lambda act: gibbs.compaction_plan(act, k_c)))
+            return comp_fns[k_c]
 
         hist_rows: List[Dict[str, np.ndarray]] = []
         times: List[float] = []
@@ -831,15 +964,34 @@ class DPMM:
         # the split/merge gate runs on the TRUE iteration number (resume:
         # model.it > 0), matching the resident driver's model.it cond
         it0 = int(jax.device_get(model.it[0] if multi else model.it))
+        # exact live cluster count (max over chains): known on host from
+        # the per-iteration summary pull, so the tiled compact slab needs
+        # no lax.cond fallback — sweeps cannot change K mid-pass, and the
+        # split/merge fold is bounded by 2*k (splits at most double K)
+        if init_state is not None:
+            k0 = int(np.max(np.asarray(
+                jax.device_get(init_state.active)).sum(axis=-1)))
+        else:
+            k0 = cfg.init_clusters
         for it in range(iters):
             t0 = time.perf_counter()
             model = sweep_model_fn(model)
-            acc = zeros_acc()
-            acc = stream(
-                lambda i, off, length, xt, pt, a:
-                    sweep_tile_fn(model, xt, *pt, np.uint32(off), a),
-                acc, point_pass=True)
-            model = set_stats_fn(model, *finalize_fn(acc))
+            k_c = (_k_compact(k0, 1, k_max, cfg.k_block)
+                   if cfg.compact else None)
+            if k_c is None:
+                acc = stream(
+                    lambda i, off, length, xt, pt, a:
+                        sweep_tile_fn(model, xt, *pt, np.uint32(off), a),
+                    zeros_acc(), point_pass=True)
+                model = set_stats_fn(model, *finalize_fn(acc))
+            else:
+                comp = compact_plan_fn(k_c)(model.active)
+                acc = stream(
+                    lambda i, off, length, xt, pt, a:
+                        sweep_tile_comp_fn(model, xt, *pt, np.uint32(off),
+                                           comp, a),
+                    zeros_acc_k(k_c)(), point_pass=True)
+                model = set_stats_comp_fn(model, comp, *finalize_fn(acc))
             if it0 + it >= cfg.burnout:
                 plan = plan_fn(model)
                 if sm_tile_fn is None:
@@ -849,14 +1001,31 @@ class DPMM:
                         in_specs=(plan_specs, x_spec, *lab_specs, rep,
                                   acc_specs),
                         out_specs=(lab_specs, acc_specs)))
-                acc = zeros_acc()
-                acc = stream(
-                    lambda i, off, length, xt, pt, a:
-                        sm_tile_fn(plan, xt, *pt, np.uint32(off), a),
-                    acc, point_pass=True)
-                model = apply_plan_fn(model, plan, *finalize_fn(acc))
+                    sm_tile_comp_fn = jax.jit(smap(
+                        _sm_tile_comp,
+                        in_specs=(plan_specs, x_spec, *lab_specs, rep,
+                                  comp_specs, acc_specs),
+                        out_specs=(lab_specs, acc_specs)))
+                k_c_sm = (_k_compact(k0, 2, k_max, cfg.k_block)
+                          if cfg.compact else None)
+                if k_c_sm is None:
+                    acc = stream(
+                        lambda i, off, length, xt, pt, a:
+                            sm_tile_fn(plan, xt, *pt, np.uint32(off), a),
+                        zeros_acc(), point_pass=True)
+                    model = apply_plan_fn(model, plan, *finalize_fn(acc))
+                else:
+                    comp = compact_plan_fn(k_c_sm)(plan.merge.new_active)
+                    acc = stream(
+                        lambda i, off, length, xt, pt, a:
+                            sm_tile_comp_fn(plan, xt, *pt, np.uint32(off),
+                                            comp, a),
+                        zeros_acc_k(k_c_sm)(), point_pass=True)
+                    model = apply_plan_comp_fn(model, plan, comp,
+                                               *finalize_fn(acc))
             model, summary = advance_fn(model)
             summary = jax.device_get(summary)
+            k0 = int(np.max(np.asarray(summary["k"])))
             hist_rows.append(summary)
             times.append(time.perf_counter() - t0)
             if verbose:

@@ -344,7 +344,7 @@ def _apply_plan_block(plan: SplitMergePlan, x: jax.Array,
 
 def split_merge_tile(plan: SplitMergePlan, x: jax.Array, point, acc,
                      family, use_pallas: bool = False, feat_axis=None, *,
-                     fused: bool = True):
+                     fused: bool = True, compaction=None):
     """Apply a planned move to one tile of points: relabels, both
     hyperplane sub-label re-inits, AND the consistency suff-stat fold
     (paper §4.4: 'processing accepted splits/merges requires updating the
@@ -353,14 +353,28 @@ def split_merge_tile(plan: SplitMergePlan, x: jax.Array, point, acc,
     the fused sweep (``family.fold_blocked``). ``fused=False`` keeps the
     pre-fusion whole-tile-then-fold body as the parity oracle; chains are
     bitwise identical either way.
+
+    With ``compaction`` (a ``gibbs.CompactionPlan`` built from the
+    *post-move* active set), the stat fold runs on a compact
+    O(K_active)-row ``acc`` — labels are re-indexed through
+    ``compact_of_slot`` for the fold only, and the returned labels stay in
+    dense slot space. Each compact row receives exactly the same adds in
+    the same order as its dense slot, so the folded partials are bitwise
+    the dense partials (the caller scatters them back to the full slab).
     """
     k_max = plan.reset.shape[0]
+    if compaction is None:
+        k_stat, label_map = k_max, None
+    else:
+        k_stat = compaction.slot_of_compact.shape[0]
+        label_map = compaction.compact_of_slot
     labels, sublabels = point.labels, point.sublabels
     if not fused:
         labels2, sublabels2 = _apply_plan_block(plan, x, labels, sublabels,
                                                 feat_axis)
-        acc = accumulate_substats(family, x, point.valid, labels2,
-                                  sublabels2, k_max, acc, use_pallas)
+        stat_lab = labels2 if label_map is None else label_map[labels2]
+        acc = accumulate_substats(family, x, point.valid, stat_lab,
+                                  sublabels2, k_stat, acc, use_pallas)
         return point._replace(labels=labels2, sublabels=sublabels2), acc
 
     def body(xb, vb, lb, sb):
@@ -368,6 +382,6 @@ def split_merge_tile(plan: SplitMergePlan, x: jax.Array, point, acc,
         return _apply_plan_block(plan, xb, lb, sb, feat_axis)
 
     labels2, sublabels2, acc = fold_blocked(
-        family, k_max, body, x, point.valid, (labels, sublabels), acc,
-        use_pallas=use_pallas)
+        family, k_stat, body, x, point.valid, (labels, sublabels), acc,
+        use_pallas=use_pallas, label_map=label_map)
     return point._replace(labels=labels2, sublabels=sublabels2), acc

@@ -23,10 +23,13 @@ chain regardless of sharding or tiling.
 """
 from __future__ import annotations
 
+import math
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.assign import NEG_INF
 
 
 class ModelState(NamedTuple):
@@ -69,3 +72,38 @@ class PointState(NamedTuple):
 def summarize(model: ModelState) -> dict:
     """Replicated scalar diagnostics for logging / history scans."""
     return model.summarize()
+
+
+def grow_model(model: ModelState, new_k: int) -> ModelState:
+    """Pad every O(K) leaf of ``model`` to a ``new_k``-slot slab — the
+    ``k_max='auto'`` growth hook (core/sampler.py, resident plane).
+
+    New slots arrive exactly as a dense chain's inactive slots look:
+    inactive, log-zero weights, zero stuck counters and zero stats/params.
+    Since ``sweep_model`` regenerates weights and params from the stats
+    every iteration, the zero-padded params are overwritten before any
+    point reads them. Growth happens only at scan-chunk boundaries, where
+    the driver re-AOTs the chunk on the new shapes and re-donates the
+    buffers. Handles both the single-chain (K, ...) and multi-chain
+    (C, K, ...) leaf layouts (the K axis always follows the chain axis).
+    """
+    old_k = model.active.shape[-1]
+    if new_k < old_k:
+        raise ValueError(f"grow_model: cannot shrink {old_k} -> {new_k}")
+    if new_k == old_k:
+        return model
+    k_axis = model.active.ndim - 1     # 0 single-chain, 1 multi-chain
+
+    def pad(a, value=0):
+        widths = [(0, 0)] * a.ndim
+        widths[k_axis] = (0, new_k - old_k)
+        return jnp.pad(a, widths, constant_values=value)
+
+    zeros = lambda tree: jax.tree.map(pad, tree)
+    return model._replace(
+        active=pad(model.active, False),
+        logweights=pad(model.logweights, NEG_INF),
+        sub_logweights=pad(model.sub_logweights, math.log(0.5)),
+        stuck=pad(model.stuck),
+        params=zeros(model.params), subparams=zeros(model.subparams),
+        stats=zeros(model.stats), substats=zeros(model.substats))

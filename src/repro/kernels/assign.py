@@ -76,7 +76,7 @@ def _fold_best(j, bk, total, best_ref, lab_ref):
 # Step (e): cluster assignment
 # ---------------------------------------------------------------------------
 def _assign_linear_kernel(feats_ref, w_ref, const_ref, logw_ref, act_ref,
-                          gidx_ref, key_ref, best_ref, lab_ref):
+                          slot_ref, gidx_ref, key_ref, best_ref, lab_ref):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -90,14 +90,15 @@ def _assign_linear_kernel(feats_ref, w_ref, const_ref, logw_ref, act_ref,
           + const_ref[...][None, :])                  # (bn, bk) loglik tile
     t = ll + logw_ref[...][None, :]
     t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
-    cid = (jnp.uint32(j * bk)
-           + jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1))
+    # Gumbel counter = the cluster's SLOT id (== its compact position on the
+    # dense slab), so compacted slabs draw the exact noise of the full slab
+    cid = jnp.broadcast_to(slot_ref[...][None, :], t.shape)
     t = t + prng.gumbel(key_ref[...], gidx_ref[...][:, None], cid)
     _fold_best(j, bk, t, best_ref, lab_ref)
 
 
 def _assign_gauss_kernel(x_ref, mu_ref, f_ref, ld_ref, logw_ref, act_ref,
-                         gidx_ref, key_ref, best_ref, lab_ref):
+                         slot_ref, gidx_ref, key_ref, best_ref, lab_ref):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -119,8 +120,7 @@ def _assign_gauss_kernel(x_ref, mu_ref, f_ref, ld_ref, logw_ref, act_ref,
     ll = (0.5 * (ld_ref[...][:, None] - maha) - 0.5 * d * LOG_2PI).T
     t = ll + logw_ref[...][None, :]
     t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
-    cid = (jnp.uint32(j * bk)
-           + jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1))
+    cid = jnp.broadcast_to(slot_ref[...][None, :], t.shape)
     t = t + prng.gumbel(key_ref[...], gidx_ref[...][:, None], cid)
     _fold_best(j, bk, t, best_ref, lab_ref)
 
@@ -129,15 +129,21 @@ def _assign_gauss_kernel(x_ref, mu_ref, f_ref, ld_ref, logw_ref, act_ref,
                    static_argnames=("bn", "bk", "interpret"))
 def assign_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
                   logw: jax.Array, active: jax.Array, gidx: jax.Array,
-                  key_data: jax.Array, *, bn: int = 128, bk: int = 8,
+                  key_data: jax.Array, slots: jax.Array = None, *,
+                  bn: int = 128, bk: int = 8,
                   interpret: bool = False) -> jax.Array:
     """Fused step (e) for linear-likelihood families -> (N,) int32 labels.
 
     feats: (N, d'); w: (K, d'); const/logw: (K,); active: (K,) bool;
     gidx: (N,) uint32 global point indices; key_data: (2,) uint32.
+    ``slots``: (K,) uint32 dense-slab slot ids used as Gumbel counters
+    (defaults to ``arange(K)`` — the dense identity); a compacted caller
+    passes the gathered slot ids so labels stay bitwise the dense sweep's.
     """
     n, dp = feats.shape
     k = w.shape[0]
+    if slots is None:
+        slots = jnp.arange(k, dtype=jnp.uint32)
     bn = min(bn, n) or 1
     bk = min(bk, k) or 1
     pn, pk = (-n) % bn, (-k) % bk
@@ -147,6 +153,7 @@ def assign_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
     const = _pad_dim(const, 0, pk)
     logw = _pad_dim(logw, 0, pk)
     active = _pad_dim(active.astype(jnp.int32), 0, pk)  # pad slots inactive
+    slots = _pad_dim(slots.astype(jnp.uint32), 0, pk)
     gn, gk = feats.shape[0] // bn, w.shape[0] // bk
 
     _, labels = pl.pallas_call(
@@ -155,6 +162,7 @@ def assign_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
         in_specs=[
             pl.BlockSpec((bn, dp), lambda i, j: (i, 0)),
             pl.BlockSpec((bk, dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
@@ -170,7 +178,7 @@ def assign_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
             jax.ShapeDtypeStruct((feats.shape[0],), jnp.int32),
         ],
         interpret=interpret,
-    )(feats, w, const, logw, active, gidx, key_data)
+    )(feats, w, const, logw, active, slots, gidx, key_data)
     return labels[:n]
 
 
@@ -179,11 +187,13 @@ def assign_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
 def assign_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
                  logdet_prec: jax.Array, logw: jax.Array,
                  active: jax.Array, gidx: jax.Array, key_data: jax.Array,
-                 *, bn: int = 128, bk: int = 8,
+                 slots: jax.Array = None, *, bn: int = 128, bk: int = 8,
                  interpret: bool = False) -> jax.Array:
     """Fused step (e) for the full-covariance Gaussian -> (N,) labels."""
     n, d = x.shape
     k = mu.shape[0]
+    if slots is None:
+        slots = jnp.arange(k, dtype=jnp.uint32)
     bn = min(bn, n) or 1
     bk = min(bk, k) or 1
     pn, pk = (-n) % bn, (-k) % bk
@@ -197,6 +207,7 @@ def assign_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
     logdet_prec = _pad_dim(logdet_prec, 0, pk)
     logw = _pad_dim(logw, 0, pk)
     active = _pad_dim(active.astype(jnp.int32), 0, pk)
+    slots = _pad_dim(slots.astype(jnp.uint32), 0, pk)
     gn, gk = x.shape[0] // bn, mu.shape[0] // bk
 
     _, labels = pl.pallas_call(
@@ -206,6 +217,7 @@ def assign_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
             pl.BlockSpec((bn, d), lambda i, j: (i, 0)),
             pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
             pl.BlockSpec((bk, d, d), lambda i, j: (j, 0, 0)),
+            pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
             pl.BlockSpec((bk,), lambda i, j: (j,)),
@@ -221,7 +233,7 @@ def assign_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
             jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
         ],
         interpret=interpret,
-    )(x, mu, chol_prec, logdet_prec, logw, active, gidx, key_data)
+    )(x, mu, chol_prec, logdet_prec, logw, active, slots, gidx, key_data)
     return labels[:n]
 
 

@@ -34,8 +34,19 @@ MAX_KERNEL_D = _suffstats.MAX_KERNEL_D
 # VMEM budget for the resident (K, 2, ...) sub-cluster parameter block of
 # the fused sub-assignment kernels (kernels/assign.py) — Cholesky factors
 # for the Gaussian, packed weights (+ the per-tile (bn, K) one-hot used for
-# the MXU gather) for the linear families
+# the MXU gather) for the linear families. Only the three-pass step-(f)
+# kernels still hold an all-K block; the megakernels stream K-blocks.
 SUB_PARAMS_VMEM_BYTES = 8 * 1024 * 1024
+
+# Per-GRID-STEP VMEM budget for the K-blocked kernels (assign + megakernel
+# sweeps): only a (bn, ...) point block and a (bk, ...) cluster tile are
+# resident at once, so the guard scales with bk — NOT with K — and the
+# effective K and d ceilings are set by HBM, not VMEM. This replaces the
+# old blanket ``MAX_KERNEL_D``/all-K-resident guards for those kernels.
+KERNEL_BLOCK_VMEM_BYTES = 8 * 1024 * 1024
+
+# Default streamed cluster-tile size (see kernels/sweep.py)
+K_BLOCK = _sweep.K_BLOCK
 
 
 def _interpret() -> bool:
@@ -83,20 +94,30 @@ def gauss_loglik(x: jax.Array, params, use_pallas: bool) -> jax.Array:
 # falls outside the kernel's documented VMEM envelope, and the caller
 # (core/family.py dispatch) runs the jnp reference path instead.
 # ---------------------------------------------------------------------------
-def assign_linear_pallas(feats, w, const, logw, active, gidx,
-                         key_data) -> Optional[jax.Array]:
-    if feats.shape[1] > 2 * MAX_KERNEL_D:     # [x, x^2] packs reach 2d
+def assign_linear_pallas(feats, w, const, logw, active, gidx, key_data,
+                         slots=None, k_block: int = K_BLOCK
+                         ) -> Optional[jax.Array]:
+    bn, bk = 128, k_block
+    # per grid step: (bn, d') feats + (bk, d') weight tile + (bn, bk) logits
+    step = (bn * feats.shape[1] + bk * feats.shape[1] + 3 * bn * bk) * 4
+    if step > KERNEL_BLOCK_VMEM_BYTES:
         return None
     return _assign.assign_linear(feats, w, const, logw, active, gidx,
-                                 key_data, interpret=_interpret())
+                                 key_data, slots, bk=bk,
+                                 interpret=_interpret())
 
 
 def assign_gauss_pallas(x, mu, chol_prec, logdet_prec, logw, active, gidx,
-                        key_data) -> Optional[jax.Array]:
-    if x.shape[1] > MAX_KERNEL_D:
+                        key_data, slots=None, k_block: int = K_BLOCK
+                        ) -> Optional[jax.Array]:
+    bn, bk, d = 128, k_block, x.shape[1]
+    # per grid step: (bn, d) x + (bk, d, d) Cholesky tile + (bn, bk, d)
+    # whitened diffs (x2 for the transpose staging)
+    step = (bn * d + bk * d * d + 2 * bn * bk * d + 3 * bn * bk) * 4
+    if step > KERNEL_BLOCK_VMEM_BYTES:
         return None
     return _assign.assign_gauss(x, mu, chol_prec, logdet_prec, logw,
-                                active, gidx, key_data,
+                                active, gidx, key_data, slots, bk=bk,
                                 interpret=_interpret())
 
 
@@ -121,43 +142,47 @@ def sub_assign_gauss_pallas(x, mu, chol_prec, logdet_prec, sublogw, labels,
 
 
 def sweep_linear_pallas(feats, w, const, logw, active, subw, subconst,
-                        sublogw, valid, gidx, key_z, key_zb):
-    """One-read fused sweep (kernels/sweep.py) for linear families.
+                        sublogw, valid, gidx, key_z, key_zb, slots=None,
+                        k_block: int = K_BLOCK):
+    """One-read, K-blocked fused sweep (kernels/sweep.py) for linear
+    families.
 
     Returns ``(labels, sublabels, n2, sf2)`` with per-STATS_BLOCK stat
-    partials, or ``None`` outside the VMEM envelope (caller falls back to
-    the blocked jnp reference).
+    partials, or ``None`` outside the per-K-block VMEM envelope (caller
+    falls back to the blocked jnp reference). Only a (bk, ...) cluster
+    tile is resident per grid step, so the guard is independent of K.
     """
-    k = w.shape[0]
-    # resident (K, d') + (K, 2, d') weights, the (bn, K) one-hot gather and
-    # the (bn, 2K) segment one-hot, plus the (2K, d') stat partial tile
-    resident = (w.size + subw.size + 128 * k * 3 + 2 * k * feats.shape[1]
-                ) * 4
-    if feats.shape[1] > 2 * MAX_KERNEL_D or resident > SUB_PARAMS_VMEM_BYTES:
+    bn, bk, dp = 128, k_block, feats.shape[1]
+    # per grid step: (bn, d') feats, (bk, d') + (bk, 2, d') weight tiles,
+    # the (bn, bk) one-hot / (bn, 2bk) segment one-hot, the (2bk, d') stat
+    # partial tile and the (bn, 2, d') gathered sub-weights
+    step = (bn * dp + 3 * bk * dp + 5 * bn * bk + 2 * bk * dp
+            + 2 * bn * dp) * 4
+    if step > KERNEL_BLOCK_VMEM_BYTES:
         return None
     return _sweep.sweep_linear(feats, w, const, logw, active, subw,
                                subconst, sublogw, valid, gidx, key_z,
-                               key_zb, interpret=_interpret())
+                               key_zb, slots, bk=bk,
+                               interpret=_interpret())
 
 
 def sweep_gauss_pallas(x, mu, chol_prec, logdet_prec, logw, active, sub_mu,
                        sub_chol_prec, sub_logdet_prec, sublogw, valid, gidx,
-                       key_z, key_zb):
-    """One-read fused sweep for the full-covariance Gaussian, or ``None``
-    outside the VMEM envelope."""
-    d = x.shape[1]
-    k = mu.shape[0]
-    bn = 128
-    # resident (K, d, d) + (K, 2, d, d) factors, the (2K, d, d) stat
-    # partial, and the (bn, K, d)/(2K, bn, d)/(bn, 2, d, d) intermediates
-    resident = (3 * k * d * d + 2 * k * d * d
-                + 6 * bn * k * d + 2 * bn * d * d) * 4
-    if d > MAX_KERNEL_D or resident > SUB_PARAMS_VMEM_BYTES:
+                       key_z, key_zb, slots=None, k_block: int = K_BLOCK):
+    """One-read, K-blocked fused sweep for the full-covariance Gaussian,
+    or ``None`` outside the per-K-block VMEM envelope."""
+    bn, bk, d = 128, k_block, x.shape[1]
+    # per grid step: (bk, d, d) + (bk, 2, d, d) Cholesky tiles, the
+    # gathered (bn, 2, d, d) factors, (bn, bk, d) diffs (x2 staging) and
+    # the (2bk, d, d) stat partial tile
+    step = (bn * d + 3 * bk * d * d + 2 * bn * d * d + 2 * bn * bk * d
+            + 2 * bk * d * d + 5 * bn * bk) * 4
+    if step > KERNEL_BLOCK_VMEM_BYTES:
         return None
     return _sweep.sweep_gauss(x, mu, chol_prec, logdet_prec, logw, active,
                               sub_mu, sub_chol_prec, sub_logdet_prec,
-                              sublogw, valid, gidx, key_z, key_zb,
-                              interpret=_interpret())
+                              sublogw, valid, gidx, key_z, key_zb, slots,
+                              bk=bk, interpret=_interpret())
 
 
 def suffstats_labels_pallas(x, labels, sublabels, valid, k: int):

@@ -1,5 +1,6 @@
 """Pallas TPU megakernels for the ONE-READ fused sweep (steps e + f +
-suff-stat fold in a single pass over x).
+suff-stat fold in a single pass over x), K-BLOCKED so only a (bk, ...)
+cluster tile is ever VMEM-resident.
 
 After the assignment fusion (kernels/assign.py) and the label-indexed
 suff-stats (kernels/suffstats.py), the sweep was still three separate
@@ -11,27 +12,39 @@ transform in each pass. These kernels collapse the three into one
 resident in VMEM it is
 
  1. assigned (step e: loglik + log pi + counter-based Threefry Gumbel,
-    running argmax over the *resident* (K, ...) parameter block),
+    a flash-attention-style running argmax over *streamed* (bk, ...)
+    cluster tiles — never the full (K, ...) slab),
  2. sub-assigned under its OWN cluster only (step f: one-hot MXU gather /
-    vector ``take`` of the (K, 2, ...) sub-params), and
- 3. folded into the sub-cluster stat accumulators held in VMEM
+    vector ``take`` of the owning K-block's (bk, 2, ...) sub-params), and
+ 3. folded into per-(point-block, K-block) stat partial tiles
 
-— labels, sub-labels, and the folded stat partials stream out; the block
-of ``x`` is never touched again. HBM traffic per sweep drops from three
-reads of x to one.
+— labels, sub-labels, and the stat partials stream out; the block of
+``x`` is never touched again. HBM traffic per sweep stays at one read of
+x, and VMEM per grid step is O(bn + bk): K (and d) are bounded by HBM,
+not by an all-K-resident VMEM budget.
 
-The stat accumulators are emitted as per-``STATS_BLOCK`` partial blocks
-(out tiles revisited for the ``STATS_BLOCK/bn`` grid steps inside each
-stats block, re-initialized at each block boundary), NOT as one grand
-total: the caller folds the partials left-to-right, which reproduces the
-exact float addition sequence of the reference fold
-(``core/gibbs.accumulate_substats``) for every tile size and sharding —
-the bitwise-chain contract extends to the megakernels.
+Grid layout: ``(gn, 2, gk)`` — point blocks outermost, then a 2-step
+*phase* axis, then K-blocks innermost. Phase 0 streams the gk cluster
+tiles through the running (max, argmax) pair exactly like
+``kernels/assign.py`` (strict ``>`` keeps the FIRST max, so the fold is
+bitwise the full argmax). Phase 1 revisits the gk tiles to sub-assign and
+fold stats for the points each tile OWNS (label in [j*bk, (j+1)*bk)) —
+each (i, j) stat tile is written exactly once, and the label/sub-label
+output blocks are revisited only consecutively (all phases of one point
+block), which is the Pallas TPU revolving-buffer contract.
 
-Every arithmetic expression mirrors the corresponding three-pass kernel
-(``assign_linear``/``assign_gauss``, ``sub_assign_*``,
-``suffstats_labels``/``moments_labels``) op for op, so interpret-mode
-chains match the three-pass Pallas chains bitwise.
+The stat partials come out per (point block, K block); the *caller* folds
+them into per-``STATS_BLOCK`` partials with a left-to-right add chain
+starting from +0.0 — the exact float addition sequence the previous
+all-K-resident kernel ran in VMEM (zero-init then ``+=`` per point
+block), so chains are bitwise unchanged. Partials are then folded
+left-to-right by core/family.py as before.
+
+Cluster identity: every kernel takes a ``slots`` operand — the (K,)
+uint32 dense-slab slot ids, used as the Gumbel counters. A compacted
+caller (core/gibbs.py's active-set compaction) passes the gathered slot
+ids so the noise — hence the chain — is bitwise the dense slab's; dense
+callers pass ``arange(K)``.
 """
 from __future__ import annotations
 
@@ -43,7 +56,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from repro.kernels import prng
-from repro.kernels.assign import LOG_2PI, NEG_INF, _pad_dim
+from repro.kernels.assign import LOG_2PI, NEG_INF, _fold_best, _pad_dim
 
 # Granularity of the suff-stat fold — the system-wide contract (re-exported
 # by core/gibbs.py): partial stats are produced per STATS_BLOCK points and
@@ -51,6 +64,10 @@ from repro.kernels.assign import LOG_2PI, NEG_INF, _pad_dim
 # addition sequence — hence every bit of the chain — is invariant to tile
 # size and sharding. Changing this constant changes chains.
 STATS_BLOCK = 1024
+
+# Default cluster-tile size streamed through VMEM (bk): mirrors
+# kernels/assign.py's step-(e) tiling.
+K_BLOCK = 8
 
 
 def _pad_points(arrs, bn: int):
@@ -60,48 +77,33 @@ def _pad_points(arrs, bn: int):
     return out
 
 
-def _assign_block(feats, w, const, logw, active, gidx, kz):
-    """Step (e) on a resident block: (bn,) labels, linear-likelihood form.
+def _fold_stats(a: jax.Array, spb: int) -> jax.Array:
+    """(gn, ...) per-point-block partials -> (nsb, ...) per-STATS_BLOCK.
 
-    Same op order as kernels/assign._assign_linear_kernel (ll + logpi,
-    mask, + Gumbel, first-max argmax) with the full (K, d') weight block
-    resident instead of streamed cluster tiles — per-element arithmetic
-    is identical, so interpret-mode labels match bitwise.
+    Left-to-right adds from +0.0 in point-block order: the exact chain the
+    old in-kernel accumulator ran (zero-init at each stats-block boundary,
+    then one ``+=`` per point block), so the per-STATS_BLOCK partials are
+    bitwise unchanged. Ragged trailing blocks are padded with zero rows
+    (x + 0.0 == x after a +0.0 start, so padding is a no-op bitwise).
     """
-    ll = (jnp.dot(feats, w.T, preferred_element_type=jnp.float32)
-          + const[None, :])
-    t = ll + logw[None, :]
-    t = jnp.where(active[None, :] != 0, t, NEG_INF)
-    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
-    t = t + prng.gumbel(kz, gidx[:, None], cid)
-    return jnp.argmax(t, axis=1).astype(jnp.int32)
+    gn = a.shape[0]
+    nsb = -(-gn // spb)
+    a = _pad_dim(a, 0, nsb * spb - gn)
+    a = a.reshape((nsb, spb) + a.shape[1:])
+    out = jnp.zeros((nsb,) + a.shape[2:], a.dtype)
+    for t in range(spb):
+        out = out + a[:, t]
+    return out
 
 
-def _sub_assign_block(feats, subw, subconst, sublogw, lab, gidx, kzb):
-    """Step (f) on a resident block: one-hot MXU gather of the own-cluster
-    (2, d') sub-params — mirrors kernels/assign._sub_assign_linear_kernel."""
-    k, _, dp = subw.shape
-    onehot = (lab[:, None]
-              == jax.lax.broadcasted_iota(jnp.int32, (lab.shape[0], k), 1)
-              ).astype(jnp.float32)
-    own_w = jnp.dot(onehot, subw.reshape(k, 2 * dp),
-                    preferred_element_type=jnp.float32).reshape(-1, 2, dp)
-    own_const = jnp.dot(onehot, subconst,
-                        preferred_element_type=jnp.float32)
-    own_logw = jnp.dot(onehot, sublogw,
-                       preferred_element_type=jnp.float32)
-    ll = jnp.einsum("nd,nsd->ns", feats, own_w,
-                    preferred_element_type=jnp.float32) + own_const
-    t = ll + own_logw
-    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
-    t = t + prng.gumbel(kzb, gidx[:, None], cid)
-    return jnp.argmax(t, axis=1).astype(jnp.int32)
+def _seg_onehot_block(loc, sub, valid, s: int):
+    """(bn, 2*bk) one-hot over the K-block's segments 2*loc + sub.
 
-
-def _seg_onehot(lab, sub, valid, s: int):
-    """(bn, 2K) one-hot over segments s = 2*label + sublabel, in VMEM —
-    mirrors kernels/suffstats._tile_resp with the full segment range."""
-    seg = lab * 2 + sub
+    ``loc`` is the block-local label; rows owned by other K-blocks fall
+    outside [0, s) and contribute all-zero rows, so the per-column sums
+    are exactly the full-width one-hot's columns for this block.
+    """
+    seg = loc * 2 + sub
     col = jax.lax.broadcasted_iota(jnp.int32, (seg.shape[0], s), 1)
     return (seg[:, None] == col).astype(jnp.float32) * valid[:, None]
 
@@ -111,226 +113,319 @@ def _seg_onehot(lab, sub, valid, s: int):
 # the stat features ARE the assign_pack features (x, or [x, x^2]), so the
 # whole sweep shares one resident feature block.
 # ---------------------------------------------------------------------------
-def _sweep_linear_kernel(spb, feats_ref, w_ref, const_ref, logw_ref,
-                         act_ref, subw_ref, subconst_ref, sublogw_ref,
+def _sweep_linear_kernel(feats_ref, w_ref, const_ref, logw_ref, act_ref,
+                         slot_ref, subw_ref, subconst_ref, sublogw_ref,
                          valid_ref, gidx_ref, kz_ref, kzb_ref,
-                         lab_ref, sub_ref, n_ref, sf_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i % spb == 0)
-    def _init():                    # new STATS_BLOCK: fresh partial
-        n_ref[...] = jnp.zeros_like(n_ref)
-        sf_ref[...] = jnp.zeros_like(sf_ref)
-
+                         best_ref, lab_ref, sub_ref, n_ref, sf_ref):
+    p = pl.program_id(1)
+    j = pl.program_id(2)
+    bk = w_ref.shape[0]
     feats = feats_ref[...]                               # the ONE x read
     gidx = gidx_ref[...]
-    lab = _assign_block(feats, w_ref[...], const_ref[...], logw_ref[...],
-                        act_ref[...], gidx, kz_ref[...])
-    sub = _sub_assign_block(feats, subw_ref[...], subconst_ref[...],
-                            sublogw_ref[...], lab, gidx, kzb_ref[...])
-    lab_ref[...] = lab
-    sub_ref[...] = sub
-    r = _seg_onehot(lab, sub, valid_ref[...], n_ref.shape[1])
-    n_ref[...] += jnp.sum(r, axis=0)[None, :]
-    sf_ref[...] += jnp.dot(r.T, feats,
-                           preferred_element_type=jnp.float32)[None]
+
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        lab_ref[...] = jnp.zeros_like(lab_ref)
+        sub_ref[...] = jnp.zeros_like(sub_ref)
+
+    @pl.when(p == 0)
+    def _assign():
+        # step (e) on one streamed cluster tile: same op order as
+        # kernels/assign._assign_linear_kernel (ll + logpi, mask, + Gumbel,
+        # strict first-max fold) — bitwise the full argmax.
+        ll = (jnp.dot(feats, w_ref[...].T,
+                      preferred_element_type=jnp.float32)
+              + const_ref[...][None, :])
+        t = ll + logw_ref[...][None, :]
+        t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
+        cid = jnp.broadcast_to(slot_ref[...][None, :], t.shape)
+        t = t + prng.gumbel(kz_ref[...], gidx[:, None], cid)
+        _fold_best(j, bk, t, best_ref, lab_ref)
+
+    @pl.when(p == 1)
+    def _sub_and_stats():
+        # step (f) + stat fold for the points THIS K-block owns
+        lab = lab_ref[...]
+        loc = lab - j * bk                               # block-local label
+        in_blk = (loc >= 0) & (loc < bk)
+        dp = feats.shape[1]
+        onehot = (loc[:, None]
+                  == jax.lax.broadcasted_iota(jnp.int32,
+                                              (lab.shape[0], bk), 1)
+                  ).astype(jnp.float32)                  # 0 rows off-block
+        own_w = jnp.dot(onehot, subw_ref[...].reshape(bk, 2 * dp),
+                        preferred_element_type=jnp.float32
+                        ).reshape(-1, 2, dp)
+        own_const = jnp.dot(onehot, subconst_ref[...],
+                            preferred_element_type=jnp.float32)
+        own_logw = jnp.dot(onehot, sublogw_ref[...],
+                           preferred_element_type=jnp.float32)
+        ll = jnp.einsum("nd,nsd->ns", feats, own_w,
+                        preferred_element_type=jnp.float32) + own_const
+        t = ll + own_logw
+        cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
+        t = t + prng.gumbel(kzb_ref[...], gidx[:, None], cid)
+        sub = jnp.argmax(t, axis=1).astype(jnp.int32)
+        sub = jnp.where(in_blk, sub, sub_ref[...])
+        sub_ref[...] = sub
+        r = _seg_onehot_block(loc, sub, valid_ref[...], n_ref.shape[1])
+        n_ref[...] = jnp.sum(r, axis=0)[None, :]
+        sf_ref[...] = jnp.dot(r.T, feats,
+                              preferred_element_type=jnp.float32)[None]
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
 def sweep_linear(feats: jax.Array, w: jax.Array, const: jax.Array,
                  logw: jax.Array, active: jax.Array, subw: jax.Array,
                  subconst: jax.Array, sublogw: jax.Array, valid: jax.Array,
-                 gidx: jax.Array, key_z: jax.Array, key_zb: jax.Array, *,
-                 bn: int = 128, interpret: bool = False
+                 gidx: jax.Array, key_z: jax.Array, key_zb: jax.Array,
+                 slots: jax.Array = None, *, bn: int = 128,
+                 bk: int = K_BLOCK, interpret: bool = False
                  ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """One-read fused sweep for linear-likelihood families.
+    """One-read, K-blocked fused sweep for linear-likelihood families.
 
     feats: (N, d') assign_pack features (shared by steps e/f AND the stat
     fold); w: (K, d'); const/logw: (K,); active: (K,) bool/int;
     subw: (K, 2, d'); subconst/sublogw: (K, 2); valid: (N,); gidx: (N,)
-    uint32; key_z/key_zb: (2,) uint32.
+    uint32; key_z/key_zb: (2,) uint32; slots: (K,) uint32 dense-slab slot
+    ids for the Gumbel counters (default ``arange(K)``).
 
     Returns ``(labels (N,), sublabels (N,), n2 (nsb, K, 2),
     sf2 (nsb, K, 2, d'))`` where the trailing pair are per-STATS_BLOCK
-    stat partials to be folded left-to-right by the caller.
+    stat partials to be folded left-to-right by the caller. Only a
+    (bk, ...) cluster tile is VMEM-resident at any grid step.
     """
     assert STATS_BLOCK % bn == 0, "bn must divide the stats fold block"
     n, dp = feats.shape
     k = w.shape[0]
-    s = 2 * k
+    if slots is None:
+        slots = jnp.arange(k, dtype=jnp.uint32)
+    bk = min(bk, k) or 1
     feats, valid, gidx = _pad_points(
         (feats, jnp.asarray(valid, jnp.float32),
          gidx.astype(jnp.uint32)), bn)
+    pk = (-k) % bk
+    w = _pad_dim(w, 0, pk)
+    const = _pad_dim(const, 0, pk)
+    logw = _pad_dim(logw, 0, pk)
+    active = _pad_dim(active.astype(jnp.int32), 0, pk)   # pad slots inactive
+    slots = _pad_dim(slots.astype(jnp.uint32), 0, pk)
+    subw = _pad_dim(subw, 0, pk)
+    subconst = _pad_dim(subconst, 0, pk)
+    sublogw = _pad_dim(sublogw, 0, pk)
+    k_pad = w.shape[0]
+    s = 2 * k_pad
+    sb = 2 * bk
     gn = feats.shape[0] // bn
+    gk = k_pad // bk
     spb = STATS_BLOCK // bn
     nsb = -(-gn // spb)
-    active = active.astype(jnp.int32)
 
-    labels, sublabels, n2, sf2 = pl.pallas_call(
-        functools.partial(_sweep_linear_kernel, spb),
-        grid=(gn,),                      # sequential: partials fold in order
+    _, labels, sublabels, n2, sf2 = pl.pallas_call(
+        _sweep_linear_kernel,
+        grid=(gn, 2, gk),             # phase then K innermost, sequential
         in_specs=[
-            pl.BlockSpec((bn, dp), lambda i: (i, 0)),
-            pl.BlockSpec((k, dp), lambda i: (0, 0)),     # resident VMEM
-            pl.BlockSpec((k,), lambda i: (0,)),
-            pl.BlockSpec((k,), lambda i: (0,)),
-            pl.BlockSpec((k,), lambda i: (0,)),
-            pl.BlockSpec((k, 2, dp), lambda i: (0, 0, 0)),
-            pl.BlockSpec((k, 2), lambda i: (0, 0)),
-            pl.BlockSpec((k, 2), lambda i: (0, 0)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((2,), lambda i: (0,)),
-            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((bn, dp), lambda i, p, j: (i, 0)),
+            pl.BlockSpec((bk, dp), lambda i, p, j: (j, 0)),   # streamed tile
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk, 2, dp), lambda i, p, j: (j, 0, 0)),
+            pl.BlockSpec((bk, 2), lambda i, p, j: (j, 0)),
+            pl.BlockSpec((bk, 2), lambda i, p, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((2,), lambda i, p, j: (0,)),
+            pl.BlockSpec((2,), lambda i, p, j: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            # revisited for the spb steps inside each stats block
-            pl.BlockSpec((1, s), lambda i: (i // spb, 0)),
-            pl.BlockSpec((1, s, dp), lambda i: (i // spb, 0, 0)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),   # revisited (i fixed)
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            # held at (i, 0) through phase 0, then single-visit (i, j)
+            pl.BlockSpec((1, sb), lambda i, p, j: (i, j * p)),
+            pl.BlockSpec((1, sb, dp), lambda i, p, j: (i, j * p, 0)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((feats.shape[0],), jnp.float32),
             jax.ShapeDtypeStruct((feats.shape[0],), jnp.int32),
             jax.ShapeDtypeStruct((feats.shape[0],), jnp.int32),
-            jax.ShapeDtypeStruct((nsb, s), jnp.float32),
-            jax.ShapeDtypeStruct((nsb, s, dp), jnp.float32),
+            jax.ShapeDtypeStruct((gn, s), jnp.float32),
+            jax.ShapeDtypeStruct((gn, s, dp), jnp.float32),
         ],
         interpret=interpret,
-    )(feats, w, const, logw, active, subw, subconst, sublogw, valid, gidx,
-      key_z, key_zb)
-    return (labels[:n], sublabels[:n], n2.reshape(nsb, k, 2),
-            sf2.reshape(nsb, k, 2, dp))
+    )(feats, w, const, logw, active, slots, subw, subconst, sublogw,
+      valid, gidx, key_z, key_zb)
+    n2 = _fold_stats(n2, spb).reshape(nsb, k_pad, 2)[:, :k]
+    sf2 = _fold_stats(sf2, spb).reshape(nsb, k_pad, 2, dp)[:, :k]
+    return labels[:n], sublabels[:n], n2, sf2
 
 
 # ---------------------------------------------------------------------------
 # Full-covariance Gaussian: whitening-Mahalanobis assignment, vector-gather
-# sub-assignment, second-moment stat fold — one resident x block.
+# sub-assignment, second-moment stat fold — one resident x block, streamed
+# (bk, d, d) Cholesky tiles.
 # ---------------------------------------------------------------------------
-def _sweep_gauss_kernel(spb, x_ref, mu_ref, f_ref, ld_ref, logw_ref,
-                        act_ref, smu_ref, sfchol_ref, sld_ref, sublogw_ref,
+def _sweep_gauss_kernel(x_ref, mu_ref, f_ref, ld_ref, logw_ref, act_ref,
+                        slot_ref, smu_ref, sfchol_ref, sld_ref, sublogw_ref,
                         valid_ref, gidx_ref, kz_ref, kzb_ref,
-                        lab_ref, sub_ref, n_ref, sx_ref, sxx_ref):
-    i = pl.program_id(0)
-
-    @pl.when(i % spb == 0)
-    def _init():
-        n_ref[...] = jnp.zeros_like(n_ref)
-        sx_ref[...] = jnp.zeros_like(sx_ref)
-        sxx_ref[...] = jnp.zeros_like(sxx_ref)
-
+                        best_ref, lab_ref, sub_ref, n_ref, sx_ref, sxx_ref):
+    p = pl.program_id(1)
+    j = pl.program_id(2)
+    bk, d = mu_ref.shape
     x = x_ref[...]                                       # the ONE x read
     gidx = gidx_ref[...]
-    k, d = mu_ref.shape
 
-    # step (e): mirror of kernels/assign._assign_gauss_kernel with the
-    # full (K, d, d) Cholesky block resident
-    diff = x[:, None, :] - mu_ref[...][None, :, :]       # (bn, K, d)
-    y = jax.lax.dot_general(
-        diff.transpose(1, 0, 2), f_ref[...],
-        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)              # (K, bn, d)
-    maha = jnp.sum(y * y, axis=-1)                       # (K, bn)
-    ll = (0.5 * (ld_ref[...][:, None] - maha) - 0.5 * d * LOG_2PI).T
-    t = ll + logw_ref[...][None, :]
-    t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
-    cid = jax.lax.broadcasted_iota(jnp.uint32, t.shape, 1)
-    t = t + prng.gumbel(kz_ref[...], gidx[:, None], cid)
-    lab = jnp.argmax(t, axis=1).astype(jnp.int32)
+    @pl.when((p == 0) & (j == 0))
+    def _init():
+        best_ref[...] = jnp.full_like(best_ref, NEG_INF)
+        lab_ref[...] = jnp.zeros_like(lab_ref)
+        sub_ref[...] = jnp.zeros_like(sub_ref)
 
-    # step (f): mirror of kernels/assign._sub_assign_gauss_kernel
-    mu_own = jnp.take(smu_ref[...], lab, axis=0)         # (bn, 2, d)
-    f_own = jnp.take(sfchol_ref[...], lab, axis=0)       # (bn, 2, d, d)
-    ld_own = jnp.take(sld_ref[...], lab, axis=0)         # (bn, 2)
-    logw_own = jnp.take(sublogw_ref[...], lab, axis=0)
-    diff2 = x[:, None, :] - mu_own
-    y2 = jnp.einsum("nsd,nsde->nse", diff2, f_own,
-                    preferred_element_type=jnp.float32)
-    maha2 = jnp.sum(y2 * y2, axis=-1)
-    ll2 = 0.5 * (ld_own - maha2) - 0.5 * d * LOG_2PI
-    t2 = ll2 + logw_own
-    cid2 = jax.lax.broadcasted_iota(jnp.uint32, t2.shape, 1)
-    t2 = t2 + prng.gumbel(kzb_ref[...], gidx[:, None], cid2)
-    sub = jnp.argmax(t2, axis=1).astype(jnp.int32)
-    lab_ref[...] = lab
-    sub_ref[...] = sub
+    @pl.when(p == 0)
+    def _assign():
+        # step (e): mirror of kernels/assign._assign_gauss_kernel on one
+        # streamed (bk, d, d) Cholesky tile
+        diff = x[:, None, :] - mu_ref[...][None, :, :]   # (bn, bk, d)
+        y = jax.lax.dot_general(
+            diff.transpose(1, 0, 2), f_ref[...],
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)          # (bk, bn, d)
+        maha = jnp.sum(y * y, axis=-1)                   # (bk, bn)
+        ll = (0.5 * (ld_ref[...][:, None] - maha) - 0.5 * d * LOG_2PI).T
+        t = ll + logw_ref[...][None, :]
+        t = jnp.where(act_ref[...][None, :] != 0, t, NEG_INF)
+        cid = jnp.broadcast_to(slot_ref[...][None, :], t.shape)
+        t = t + prng.gumbel(kz_ref[...], gidx[:, None], cid)
+        _fold_best(j, bk, t, best_ref, lab_ref)
 
-    # stat fold: mirror of kernels/suffstats._suffstats_labels_kernel
-    r = _seg_onehot(lab, sub, valid_ref[...], n_ref.shape[1])
-    n_ref[...] += jnp.sum(r, axis=0)[None, :]
-    sx_ref[...] += jnp.dot(r.T, x,
-                           preferred_element_type=jnp.float32)[None]
-    xw = r.T[:, :, None] * x[None, :, :]                 # (2K, bn, d)
-    sxx_ref[...] += jax.lax.dot_general(
-        xw.transpose(0, 2, 1), jnp.broadcast_to(x, (r.shape[1],) + x.shape),
-        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
-        preferred_element_type=jnp.float32)[None]
+    @pl.when(p == 1)
+    def _sub_and_stats():
+        # step (f): mirror of kernels/assign._sub_assign_gauss_kernel,
+        # gathering from the owning K-block only (clipped local label;
+        # off-block rows gather garbage that the in_blk mask discards)
+        lab = lab_ref[...]
+        loc = lab - j * bk
+        in_blk = (loc >= 0) & (loc < bk)
+        locc = jnp.clip(loc, 0, bk - 1)
+        mu_own = jnp.take(smu_ref[...], locc, axis=0)    # (bn, 2, d)
+        f_own = jnp.take(sfchol_ref[...], locc, axis=0)  # (bn, 2, d, d)
+        ld_own = jnp.take(sld_ref[...], locc, axis=0)    # (bn, 2)
+        logw_own = jnp.take(sublogw_ref[...], locc, axis=0)
+        diff2 = x[:, None, :] - mu_own
+        y2 = jnp.einsum("nsd,nsde->nse", diff2, f_own,
+                        preferred_element_type=jnp.float32)
+        maha2 = jnp.sum(y2 * y2, axis=-1)
+        ll2 = 0.5 * (ld_own - maha2) - 0.5 * d * LOG_2PI
+        t2 = ll2 + logw_own
+        cid2 = jax.lax.broadcasted_iota(jnp.uint32, t2.shape, 1)
+        t2 = t2 + prng.gumbel(kzb_ref[...], gidx[:, None], cid2)
+        sub = jnp.argmax(t2, axis=1).astype(jnp.int32)
+        sub = jnp.where(in_blk, sub, sub_ref[...])
+        sub_ref[...] = sub
+
+        # stat fold: mirror of kernels/suffstats._suffstats_labels_kernel
+        # restricted to this K-block's 2*bk segments
+        r = _seg_onehot_block(loc, sub, valid_ref[...], n_ref.shape[1])
+        n_ref[...] = jnp.sum(r, axis=0)[None, :]
+        sx_ref[...] = jnp.dot(r.T, x,
+                              preferred_element_type=jnp.float32)[None]
+        xw = r.T[:, :, None] * x[None, :, :]             # (2bk, bn, d)
+        sxx_ref[...] = jax.lax.dot_general(
+            xw.transpose(0, 2, 1),
+            jnp.broadcast_to(x, (r.shape[1],) + x.shape),
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)[None]
 
 
-@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+@functools.partial(jax.jit, static_argnames=("bn", "bk", "interpret"))
 def sweep_gauss(x: jax.Array, mu: jax.Array, chol_prec: jax.Array,
                 logdet_prec: jax.Array, logw: jax.Array, active: jax.Array,
                 sub_mu: jax.Array, sub_chol_prec: jax.Array,
                 sub_logdet_prec: jax.Array, sublogw: jax.Array,
                 valid: jax.Array, gidx: jax.Array, key_z: jax.Array,
-                key_zb: jax.Array, *, bn: int = 128,
-                interpret: bool = False
+                key_zb: jax.Array, slots: jax.Array = None, *,
+                bn: int = 128, bk: int = K_BLOCK, interpret: bool = False
                 ) -> Tuple[jax.Array, jax.Array, jax.Array, jax.Array,
                            jax.Array]:
-    """One-read fused sweep for the full-covariance Gaussian.
+    """One-read, K-blocked fused sweep for the full-covariance Gaussian.
 
     x: (N, d); mu: (K, d); chol_prec: (K, d, d); logdet_prec/logw: (K,);
     sub_*: the (K, 2, ...) sub-cluster analogues; valid: (N,);
-    gidx: (N,) uint32. Returns ``(labels, sublabels, n2 (nsb, K, 2),
-    sx2 (nsb, K, 2, d), sxx2 (nsb, K, 2, d, d))`` with per-STATS_BLOCK
-    stat partials.
+    gidx: (N,) uint32; slots: (K,) uint32 slot-id Gumbel counters.
+    Returns ``(labels, sublabels, n2 (nsb, K, 2), sx2 (nsb, K, 2, d),
+    sxx2 (nsb, K, 2, d, d))`` with per-STATS_BLOCK stat partials. Only a
+    (bk, d, d) cluster tile is VMEM-resident at any grid step.
     """
     assert STATS_BLOCK % bn == 0, "bn must divide the stats fold block"
     n, d = x.shape
     k = mu.shape[0]
-    s = 2 * k
+    if slots is None:
+        slots = jnp.arange(k, dtype=jnp.uint32)
+    bk = min(bk, k) or 1
     x, valid, gidx = _pad_points(
         (x, jnp.asarray(valid, jnp.float32), gidx.astype(jnp.uint32)), bn)
+    pk = (-k) % bk
+    mu = _pad_dim(mu, 0, pk)
+    chol_prec = _pad_dim(chol_prec, 0, pk)
+    logdet_prec = _pad_dim(logdet_prec, 0, pk)
+    logw = _pad_dim(logw, 0, pk)
+    active = _pad_dim(active.astype(jnp.int32), 0, pk)
+    slots = _pad_dim(slots.astype(jnp.uint32), 0, pk)
+    sub_mu = _pad_dim(sub_mu, 0, pk)
+    sub_chol_prec = _pad_dim(sub_chol_prec, 0, pk)
+    sub_logdet_prec = _pad_dim(sub_logdet_prec, 0, pk)
+    sublogw = _pad_dim(sublogw, 0, pk)
+    k_pad = mu.shape[0]
+    s = 2 * k_pad
+    sb = 2 * bk
     gn = x.shape[0] // bn
+    gk = k_pad // bk
     spb = STATS_BLOCK // bn
     nsb = -(-gn // spb)
-    active = active.astype(jnp.int32)
 
-    labels, sublabels, n2, sx2, sxx2 = pl.pallas_call(
-        functools.partial(_sweep_gauss_kernel, spb),
-        grid=(gn,),
+    _, labels, sublabels, n2, sx2, sxx2 = pl.pallas_call(
+        _sweep_gauss_kernel,
+        grid=(gn, 2, gk),
         in_specs=[
-            pl.BlockSpec((bn, d), lambda i: (i, 0)),
-            pl.BlockSpec((k, d), lambda i: (0, 0)),
-            pl.BlockSpec((k, d, d), lambda i: (0, 0, 0)),
-            pl.BlockSpec((k,), lambda i: (0,)),
-            pl.BlockSpec((k,), lambda i: (0,)),
-            pl.BlockSpec((k,), lambda i: (0,)),
-            pl.BlockSpec((k, 2, d), lambda i: (0, 0, 0)),
-            pl.BlockSpec((k, 2, d, d), lambda i: (0, 0, 0, 0)),
-            pl.BlockSpec((k, 2), lambda i: (0, 0)),
-            pl.BlockSpec((k, 2), lambda i: (0, 0)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((2,), lambda i: (0,)),
-            pl.BlockSpec((2,), lambda i: (0,)),
+            pl.BlockSpec((bn, d), lambda i, p, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, p, j: (j, 0)),
+            pl.BlockSpec((bk, d, d), lambda i, p, j: (j, 0, 0)),
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk,), lambda i, p, j: (j,)),
+            pl.BlockSpec((bk, 2, d), lambda i, p, j: (j, 0, 0)),
+            pl.BlockSpec((bk, 2, d, d), lambda i, p, j: (j, 0, 0, 0)),
+            pl.BlockSpec((bk, 2), lambda i, p, j: (j, 0)),
+            pl.BlockSpec((bk, 2), lambda i, p, j: (j, 0)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((2,), lambda i, p, j: (0,)),
+            pl.BlockSpec((2,), lambda i, p, j: (0,)),
         ],
         out_specs=[
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((bn,), lambda i: (i,)),
-            pl.BlockSpec((1, s), lambda i: (i // spb, 0)),
-            pl.BlockSpec((1, s, d), lambda i: (i // spb, 0, 0)),
-            pl.BlockSpec((1, s, d, d), lambda i: (i // spb, 0, 0, 0)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((bn,), lambda i, p, j: (i,)),
+            pl.BlockSpec((1, sb), lambda i, p, j: (i, j * p)),
+            pl.BlockSpec((1, sb, d), lambda i, p, j: (i, j * p, 0)),
+            pl.BlockSpec((1, sb, d, d), lambda i, p, j: (i, j * p, 0, 0)),
         ],
         out_shape=[
+            jax.ShapeDtypeStruct((x.shape[0],), jnp.float32),
             jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
             jax.ShapeDtypeStruct((x.shape[0],), jnp.int32),
-            jax.ShapeDtypeStruct((nsb, s), jnp.float32),
-            jax.ShapeDtypeStruct((nsb, s, d), jnp.float32),
-            jax.ShapeDtypeStruct((nsb, s, d, d), jnp.float32),
+            jax.ShapeDtypeStruct((gn, s), jnp.float32),
+            jax.ShapeDtypeStruct((gn, s, d), jnp.float32),
+            jax.ShapeDtypeStruct((gn, s, d, d), jnp.float32),
         ],
         interpret=interpret,
-    )(x, mu, chol_prec, logdet_prec, logw, active, sub_mu, sub_chol_prec,
-      sub_logdet_prec, sublogw, valid, gidx, key_z, key_zb)
-    return (labels[:n], sublabels[:n], n2.reshape(nsb, k, 2),
-            sx2.reshape(nsb, k, 2, d), sxx2.reshape(nsb, k, 2, d, d))
+    )(x, mu, chol_prec, logdet_prec, logw, active, slots, sub_mu,
+      sub_chol_prec, sub_logdet_prec, sublogw, valid, gidx, key_z, key_zb)
+    n2 = _fold_stats(n2, spb).reshape(nsb, k_pad, 2)[:, :k]
+    sx2 = _fold_stats(sx2, spb).reshape(nsb, k_pad, 2, d)[:, :k]
+    sxx2 = _fold_stats(sxx2, spb).reshape(nsb, k_pad, 2, d, d)[:, :k]
+    return labels[:n], sublabels[:n], n2, sx2, sxx2

@@ -30,6 +30,18 @@ draw's log pi (already ~normalized over active slots + the alpha slot);
 the engine renormalizes over *active* slots once at construction so
 ``predict_logprobs`` is a proper conditional and ``log_predictive``
 integrates to 1.
+
+Sparse-K serving: checkpoints carry the full (K_max, ...) slab, but a
+fitted model typically has K_active << K_max live clusters. At engine
+build the params/weights are gathered to the active set once (a pure
+gather through ``gibbs.compaction_plan`` — active slots first, ascending)
+and every query step runs O(N * K_active) work. Outputs are unchanged to
+the bit: the compact logsumexp only drops exact-zero ``exp(-1e30 - max)``
+terms, hard labels map back through ``slot_of_compact`` (ascending, so
+first-max tie order is preserved), and the (N, K_max) soft output is the
+compact one scattered into a ``NEG_INF`` background — float32
+``NEG_INF - logpred`` rounds to ``NEG_INF`` exactly, which is what the
+dense step computes for inactive slots.
 """
 from __future__ import annotations
 
@@ -39,6 +51,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import gibbs
 from repro.core.checkpoint import load_model
 from repro.core.family import NEG_INF, ComponentFamily, get_family
 from repro.core.state import ModelState
@@ -80,7 +93,7 @@ class DPMMEngine:
         self.d = int(self.family.cluster_means(model.stats).shape[-1])
         self._key = jax.random.key(seed)
 
-        params, active = model.params, model.active
+        active = model.active
         logw = jnp.where(active, model.logweights, NEG_INF)
         # renormalize over active slots: p(k) must sum to 1 for the
         # predictive density (the sampler's logweights carry alpha-slot
@@ -89,24 +102,43 @@ class DPMMEngine:
             jnp.where(active, logw, -jnp.inf))).astype(jnp.float32)
         self.logweights = logw
 
+        # active-set compaction (see module docstring): one build-time
+        # gather, O(K_active) per-query work, bit-identical answers
+        self.k_active = max(1, int(np.asarray(
+            jax.device_get(active)).sum()))
+        comp = gibbs.compaction_plan(active, self.k_active)
+        slots = comp.slot_of_compact            # (K_active,) ascending
+        self.slots = np.asarray(jax.device_get(slots))
+        params_c = gibbs.compact_gather(comp, model.params)
+        active_c = jnp.take(active, slots)
+        logw_c = jnp.take(logw, slots)
+        k_max = self.k_max
+
         def step(x):
-            ll = self.family.loglik(x, params, use_pallas=use_pallas)
-            logits = jnp.where(active[None, :], ll + logw[None, :],
+            ll = self.family.loglik(x, params_c, use_pallas=use_pallas)
+            logits = jnp.where(active_c[None, :], ll + logw_c[None, :],
                                NEG_INF)
             logpred = jax.scipy.special.logsumexp(logits, axis=-1)
+            logprobs = jnp.full((x.shape[0], k_max), NEG_INF, jnp.float32)
+            logprobs = logprobs.at[:, slots].set(logits - logpred[:, None])
             return {
-                "labels": jnp.argmax(logits, axis=-1).astype(jnp.int32),
-                "logprobs": logits - logpred[:, None],
+                "labels": jnp.take(
+                    slots, jnp.argmax(logits, axis=-1)).astype(jnp.int32),
+                "logprobs": logprobs,
                 "log_predictive": logpred,
             }
 
         def sample_step(x, key_words, offset):
             # the sweep's step (e): argmax_k [loglik + log pi + Gumbel],
             # counter-based on the global row index — the fused
-            # assign/assign_fast kernel path, verbatim
+            # assign/assign_fast kernel path, verbatim. ``slots`` keeps
+            # the Gumbel counters in dense slot space, so the draw is
+            # bitwise the dense engine's draw.
             gidx = offset + jnp.arange(x.shape[0], dtype=jnp.uint32)
-            return self.family.assign(x, params, logw, active, gidx,
-                                      key_words, use_pallas=use_pallas)
+            z = self.family.assign(x, params_c, logw_c, active_c, gidx,
+                                   key_words, use_pallas=use_pallas,
+                                   slots=slots)
+            return jnp.take(slots, z).astype(jnp.int32)
 
         shape = jax.ShapeDtypeStruct((self.batch_size, self.d),
                                      jnp.float32)
