@@ -322,6 +322,87 @@ def _hotpath_k_sweep(reps: int = 15) -> dict:
     return rows
 
 
+def _hotpath_recovery() -> dict:
+    """Fault-tolerance invariants leg (ISSUE 7), CPU-runnable, seconds-
+    scale. Asserts the three contracts the resilience layer makes and
+    emits them as a gated row (benchmarks/check_regression.py):
+
+     - ``guardrails_chain_neutral``: a clean fit with the NaN/divergence
+       guardrails ON is bitwise the fit with them OFF (the health check
+       is a separate jitted program — it must never perturb the chain);
+     - ``faulted_fit_recovered``: a tiled fit under a seeded transient
+       fault schedule (IOError + NaN tiles + short reads) completes,
+       logs recoveries, and its chain is bitwise the clean fit's;
+     - ``resume_bitwise``: kill-at-half + ``fit(resume=True)`` from the
+       auto-checkpoint rotation reproduces the uninterrupted chain
+       bitwise.
+    """
+    import os
+    import tempfile
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.data.faults import FaultInjectingSource
+    from repro.data.source import HostTiledSource
+
+    def raw(leaf):
+        if jnp.issubdtype(jnp.asarray(leaf).dtype, jax.dtypes.prng_key):
+            return np.asarray(jax.random.key_data(leaf))
+        return np.asarray(leaf)
+
+    def same_chain(a, b):
+        return bool(np.array_equal(a.labels, b.labels) and all(
+            np.array_equal(raw(x), raw(y)) for x, y in
+            zip(jax.tree_util.tree_leaves(a.state),
+                jax.tree_util.tree_leaves(b.state))))
+
+    n, d, k = 4096, 8, 4
+    x, _ = generate_gmm(n, d, k, seed=0, sep=8.0)
+    x = np.asarray(x, np.float32)
+
+    def fit_resident(iters, **kw):
+        cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=16, burnout=3,
+                         log_every=4, **kw)
+        return DPMM(cfg).fit(x)
+
+    # 1. guardrail neutrality (resident driver, the golden-chain plane)
+    r_on = fit_resident(12, guardrails=True)
+    r_off = fit_resident(12, guardrails=False)
+    neutral = same_chain(r_on, r_off) and not r_on.recoveries
+
+    # 2. faulted tiled fit == clean tiled fit, with recoveries logged
+    cfg_t = DPMMConfig(alpha=10.0, iters=8, k_max=16, burnout=3,
+                       tile_size=512)
+    clean = DPMM(cfg_t).fit(HostTiledSource(x))
+    src = FaultInjectingSource(HostTiledSource(x), seed=7, p_io=0.05,
+                               p_nan=0.04, p_short=0.04)
+    faulted = DPMM(cfg_t).fit(src)
+    recovered = (bool(src.injected) and bool(faulted.recoveries)
+                 and same_chain(clean, faulted))
+
+    # 3. checkpoint/resume round trip (interrupt at half, resume to end)
+    with tempfile.TemporaryDirectory() as tmp:
+        pref = os.path.join(tmp, "ck")
+        cfg_ck = dict(checkpoint_path=pref, checkpoint_every=4)
+        fit_resident(8, **cfg_ck)                      # "killed" at 8
+        resumed = DPMM(DPMMConfig(alpha=10.0, iters=16, k_max=16,
+                                  burnout=3, log_every=4, **cfg_ck)
+                       ).fit(x, resume=True)
+    full = fit_resident(16)
+    resume_ok = same_chain(resumed, full)
+
+    row = {"path": "recovery", "backend": jax.default_backend(),
+           "N": n, "d": d,
+           "guardrails_chain_neutral": neutral,
+           "faulted_fit_recovered": recovered,
+           "n_injected_faults": len(src.injected),
+           "n_recovery_events": len(faulted.recoveries),
+           "resume_bitwise": resume_ok}
+    print(_ROW_MARK + json.dumps(row), flush=True)
+    return row
+
+
 def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
                 force_fused: bool = False) -> dict:
     """Reference vs fused steady-state ms/iter + peak memory -> JSON.
@@ -373,6 +454,9 @@ def run_hotpath(iters: int = 30, out_path: str = "BENCH_gibbs.json",
     rows += leg("interp-smoke")
     rows += leg("sweep-pair")
     rows += leg("k-sweep")
+    # fault-tolerance invariants (ISSUE 7): guardrail chain-neutrality,
+    # faulted-fit recovery, checkpoint/resume bitwise round trip
+    rows += leg("recovery")
     payload = {
         "bench": "gibbs_hotpath",
         "backend": backend,
@@ -418,7 +502,7 @@ def main(argv=None):
     ap.add_argument("--out-json", default="BENCH_gibbs.json")
     ap.add_argument("--_hotpath-leg", dest="hotpath_leg", default=None,
                     choices=["reference", "fused", "interp-smoke",
-                             "sweep-pair", "k-sweep"],
+                             "sweep-pair", "k-sweep", "recovery"],
                     help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
     if args.hotpath_leg == "interp-smoke":
@@ -427,6 +511,8 @@ def main(argv=None):
         _hotpath_sweep_pair()
     elif args.hotpath_leg == "k-sweep":
         _hotpath_k_sweep()
+    elif args.hotpath_leg == "recovery":
+        _hotpath_recovery()
     elif args.hotpath_leg:
         _hotpath_leg(args.hotpath_leg == "fused", args.iters or 30)
     elif args.hotpath:

@@ -31,8 +31,10 @@ compares them against the baselines committed at the repo root
    must stay ``chain_identical_to_reference``, every out-of-core leg
    must stay ``chain_identical_to_resident``, tiled footprint ratios
    must not grow AT ALL (they are analytic buffer accounting with zero
-   run-to-run noise — no threshold applies), and serving must stay
-   ``soft_matches_loglik``.
+   run-to-run noise — no threshold applies), serving must stay
+   ``soft_matches_loglik``, and the ``recovery`` row's fault-tolerance
+   booleans (guardrail chain-neutrality, faulted-fit recovery,
+   checkpoint/resume bitwise round trip) must all hold.
 
 Stdlib-only on purpose: the gate job needs no jax install — it just
 reads two directories of JSON.
@@ -170,6 +172,25 @@ def check_gibbs(gate: Gate, fresh: dict, base: dict) -> None:
             gate.slower(f"k_sweep[k_max={key[0]},K_active={key[1]}] "
                         f"{metric}",
                         (frow or {}).get(metric), b_k[key].get(metric))
+    # fault-tolerance invariants (ISSUE 7): all within-run, read from the
+    # FRESH payload only (no baseline pairing — they are booleans, and a
+    # baseline predating the recovery leg must not mask them)
+    rcv = _row(fresh, "path", "recovery") or {}
+    gate.invariant("recovery guardrails_chain_neutral (clean fit bitwise "
+                   "unchanged by NaN/divergence guardrails)",
+                   rcv.get("guardrails_chain_neutral") is True,
+                   f"got {rcv.get('guardrails_chain_neutral')}")
+    gate.invariant("recovery faulted_fit_recovered (tiled fit under "
+                   "injected transient faults completes, chain bitwise "
+                   "clean, recoveries logged)",
+                   rcv.get("faulted_fit_recovered") is True,
+                   f"got {rcv.get('faulted_fit_recovered')} "
+                   f"({rcv.get('n_injected_faults')} faults, "
+                   f"{rcv.get('n_recovery_events')} events)")
+    gate.invariant("recovery resume_bitwise (auto-checkpoint resume == "
+                   "uninterrupted chain)",
+                   rcv.get("resume_bitwise") is True,
+                   f"got {rcv.get('resume_bitwise')}")
 
 
 def check_scaling(gate: Gate, fresh: dict, base: dict) -> None:

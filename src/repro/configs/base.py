@@ -213,6 +213,32 @@ class DPMMConfig:
     # memory becomes O(k_max + tile_size) and N is bounded by host storage.
     # Chains are bitwise identical across planes and tile sizes.
     tile_size: Optional[int] = None
+    # ---- fault tolerance (see README "Fault tolerance") -------------------
+    # auto-checkpointing: with checkpoint_path (a rotation PREFIX — members
+    # are {prefix}-{it:08d}.npz, atomic + CRC-verified, newest
+    # checkpoint_keep retained) and checkpoint_every (iterations; the
+    # resident driver saves at the first chunk boundary past each
+    # multiple), both drivers persist ModelState as they go and
+    # fit(resume=True) continues from the newest member that VERIFIES —
+    # bitwise equal to the uninterrupted chain.
+    checkpoint_path: Optional[str] = None
+    checkpoint_every: Optional[int] = None
+    checkpoint_keep: int = 3
+    # tile-stream retry (tiled driver): transient IOError/short-read —
+    # and, with guard_tiles, NaN/Inf-row — faults on DataSource.read_block
+    # are retried up to io_retries times with io_backoff_s exponential
+    # backoff before failing loudly with tile provenance (TileReadError).
+    io_retries: int = 3
+    io_backoff_s: float = 0.05
+    guard_tiles: bool = True
+    # numerical guardrails: an O(K) on-device all-finite + degenerate-
+    # cluster check over ModelState rides the existing chunk-boundary sync
+    # (clean chains are bitwise unchanged — the check only READS state).
+    # On failure the driver rolls back to the last healthy boundary with
+    # the key advanced, at most max_recoveries times, then raises
+    # DivergenceError. Every event lands in FitResult.recoveries.
+    guardrails: bool = True
+    max_recoveries: int = 3
     seed: int = 0
 
     def __post_init__(self):
@@ -249,6 +275,22 @@ class DPMMConfig:
             raise ValueError(
                 f"DPMMConfig.iters/burnout must be >= 0, got "
                 f"iters={self.iters} burnout={self.burnout}")
+        if self.checkpoint_every is not None:
+            positive("checkpoint_every", self.checkpoint_every)
+            if not self.checkpoint_path:
+                raise ValueError(
+                    "DPMMConfig.checkpoint_every is set but "
+                    "checkpoint_path is not: auto-checkpointing needs a "
+                    "rotation prefix to write to")
+        positive("checkpoint_keep", self.checkpoint_keep)
+        if self.io_retries < 0 or self.io_backoff_s < 0:
+            raise ValueError(
+                f"DPMMConfig.io_retries/io_backoff_s must be >= 0, got "
+                f"{self.io_retries}/{self.io_backoff_s}")
+        if self.max_recoveries < 0:
+            raise ValueError(
+                f"DPMMConfig.max_recoveries must be >= 0, got "
+                f"{self.max_recoveries}")
 
 
 @dataclasses.dataclass(frozen=True)

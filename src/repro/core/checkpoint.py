@@ -1,4 +1,4 @@
-"""ModelState checkpointing: npz round-trip with bitwise-resume parity.
+"""ModelState checkpointing: atomic, checksummed npz with bitwise resume.
 
 The ``ModelState`` *is* the whole chain state: every per-point quantity
 (labels, sub-labels) is recomputed from the model at the start of each
@@ -9,21 +9,45 @@ verified in tests/test_multichain.py). A multi-chain state (leading chain
 axis on every leaf, ``fit(..., n_chains=C)``) round-trips the same way.
 
 Format: a plain ``np.savez`` archive — one entry per pytree leaf in
-flatten order, plus metadata (format version, family name, PRNG impl).
-The pytree *structure* is not serialized; it is rebuilt from the family's
-``param_struct``/``stats_struct`` templates, so a checkpoint is portable
-across processes and jax versions as long as the family definition
-matches (the leaf count is checked and mismatches fail loudly). The PRNG
-key is stored as its raw ``key_data`` words and re-wrapped on load —
-typed key arrays are not npz-serializable.
+flatten order, plus metadata (format version, family name, PRNG impl, and
+since v2 a per-leaf CRC32 vector). The pytree *structure* is not
+serialized; it is rebuilt from the family's ``param_struct`` /
+``stats_struct`` templates, so a checkpoint is portable across processes
+and jax versions as long as the family definition matches (leaf count AND
+leaf shapes are validated — mismatches fail loudly). The PRNG key is
+stored as its raw ``key_data`` words and re-wrapped on load — typed key
+arrays are not npz-serializable.
+
+Durability (a long fit must survive its own checkpoint writes):
+
+ - **Atomic writes.** ``save_model`` writes to a same-directory temp
+   file, fsyncs it, and ``os.replace``s it into place — a crash or
+   SIGKILL mid-write can never leave a half-written file under the final
+   name, only a stale ``*.tmp-*`` to garbage-collect.
+ - **Verified reads.** Every leaf's CRC32 is stored in the archive and
+   re-checked by ``load_model``; a truncated, bit-flipped, or otherwise
+   unreadable checkpoint raises a typed :class:`CheckpointCorrupt`
+   instead of handing back garbage state.
+ - **Rotation + latest-valid resolution.** ``save_checkpoint`` writes
+   ``{prefix}-{it:08d}.npz`` and keeps the newest ``keep`` members;
+   ``latest_valid`` walks the rotation newest-first and returns the first
+   member that *verifies*, so one corrupt file costs one checkpoint
+   interval, not the fit.
 
 This is also the hand-off format to the serving path: ``DPMMEngine``
-(serve/dpmm.py) loads a checkpoint and answers queries from it.
+(serve/dpmm.py) loads a checkpoint — checksums verified — and answers
+queries from it.
 """
 from __future__ import annotations
 
+import glob
 import io
-from typing import Tuple, Union
+import os
+import re
+import struct
+import zipfile
+import zlib
+from typing import List, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +56,23 @@ import numpy as np
 from repro.core.family import ComponentFamily, get_family
 from repro.core.state import ModelState
 
-FORMAT_VERSION = 1
-_META = ("__version__", "__family__", "__impl__")
+FORMAT_VERSION = 2
+_META = ("__version__", "__family__", "__impl__", "__crc__")
+# errors np.load / zipfile raise on truncated or garbled archives — all of
+# them mean "this file is not a readable checkpoint"
+_READ_ERRORS = (OSError, EOFError, ValueError, KeyError,
+                zipfile.BadZipFile, struct.error)
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint file exists but fails verification: unreadable npz,
+    CRC mismatch, missing/extra leaves, or leaf shapes inconsistent with
+    the family template. Never returned as state — always raised."""
+
+
+class CheckpointNotFound(FileNotFoundError):
+    """No checkpoint (or no *valid* checkpoint in a rotation) at the
+    requested path/prefix."""
 
 
 def _template(family: ComponentFamily) -> ModelState:
@@ -46,46 +85,246 @@ def _template(family: ComponentFamily) -> ModelState:
 
 
 def _key_impl(key: jax.Array) -> str:
+    """PRNG impl name for the metadata entry. The only legitimate
+    fallback is a jax too old to expose ``key_impl`` (or a raw uint32
+    key that has no impl to report) — anything else propagates."""
     try:
-        return str(jax.random.key_impl(key))
-    except Exception:
+        impl_fn = jax.random.key_impl
+    except AttributeError:            # jax predates jax.random.key_impl
+        return "threefry2x32"
+    try:
+        return str(impl_fn(key))
+    except TypeError:                 # raw (non-typed) key array
         return "threefry2x32"
 
 
-def save_model(path: Union[str, io.IOBase], model: ModelState,
-               family: Union[str, ComponentFamily]) -> None:
-    """Write ``model`` (single- or multi-chain) to ``path`` as npz."""
-    name = family if isinstance(family, str) else family.name
-    get_family(name)                     # fail early on unknown family
+def normalize_path(path: str) -> str:
+    """The one place the ``.npz`` suffix is normalized: ``np.savez``
+    silently appends ``.npz`` to bare paths, so ``save_model('ckpt')``
+    used to write ``ckpt.npz`` that ``load_model('ckpt')`` could not
+    find. Both spellings now resolve to the same file."""
+    return path if path.endswith(".npz") else path + ".npz"
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes()) & 0xFFFFFFFF
+
+
+def _model_to_arrays(model: ModelState, name: str) -> dict:
     raw = model._replace(key=jax.random.key_data(model.key))
     leaves, _ = jax.tree_util.tree_flatten(raw)
     arrs = {f"leaf_{i:04d}": np.asarray(jax.device_get(leaf))
             for i, leaf in enumerate(leaves)}
-    np.savez(path, __version__=np.int64(FORMAT_VERSION),
-             __family__=np.str_(name),
-             __impl__=np.str_(_key_impl(model.key)), **arrs)
+    crcs = np.asarray([_crc(arrs[k]) for k in sorted(arrs)], np.uint32)
+    return dict(__version__=np.int64(FORMAT_VERSION),
+                __family__=np.str_(name),
+                __impl__=np.str_(_key_impl(model.key)),
+                __crc__=crcs, **arrs)
+
+
+def save_model(path: Union[str, io.IOBase], model: ModelState,
+               family: Union[str, ComponentFamily]) -> Optional[str]:
+    """Write ``model`` (single- or multi-chain) to ``path`` as npz.
+
+    String paths are normalized to the ``.npz`` suffix and written
+    atomically: temp file in the same directory, fsync, ``os.replace``.
+    Returns the final path (None for file objects, which are written
+    directly — no atomicity is possible on a caller-owned stream).
+    """
+    name = family if isinstance(family, str) else family.name
+    get_family(name)                     # fail early on unknown family
+    entries = _model_to_arrays(model, name)
+    if not isinstance(path, str):
+        np.savez(path, **entries)
+        return None
+    final = normalize_path(path)
+    tmp = f"{final}.tmp-{os.getpid()}"
+    try:
+        with open(tmp, "wb") as f:
+            np.savez(f, **entries)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, final)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    _fsync_dir(os.path.dirname(final) or ".")
+    return final
+
+
+def _fsync_dir(dirname: str) -> None:
+    """Best-effort directory fsync so the rename itself is durable."""
+    try:
+        fd = os.open(dirname, os.O_RDONLY)
+    except OSError:
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
+def _validate_shapes(model: ModelState, family: ComponentFamily,
+                     where: str) -> None:
+    """Leaf-*shape* validation against the ModelState layout conventions:
+    every leaf must agree on the (optional chain, K) leading axes, so a
+    single- vs multi-chain mix (or a tampered leaf) fails with a clear
+    message instead of surfacing as a shape error deep inside fit()."""
+    active = np.asarray(model.active)
+    if active.ndim not in (1, 2):
+        raise CheckpointCorrupt(
+            f"{where}: 'active' has rank {active.ndim} "
+            f"(shape {tuple(active.shape)}); expected (K,) single-chain "
+            "or (C, K) multi-chain")
+    base = tuple(active.shape)           # (K,) or (C, K)
+    chain = base[:-1]                    # () or (C,)
+
+    def check(name, leaf, want, exact):
+        got = tuple(np.asarray(leaf).shape)
+        lead = got[:len(want)]
+        ok = got == want if exact else lead == want
+        if not ok:
+            raise CheckpointCorrupt(
+                f"{where}: leaf {name!r} has shape {got}, expected "
+                f"{'exactly' if exact else 'leading dims'} {want} to "
+                f"match active {base} — single- vs multi-chain mismatch, "
+                "or a checkpoint written by a drifted family definition")
+
+    check("it", model.it, chain, exact=True)
+    check("key", model.key, chain, exact=False)   # + trailing impl words
+    check("logweights", model.logweights, base, exact=True)
+    check("stuck", model.stuck, base, exact=True)
+    check("sub_logweights", model.sub_logweights, base + (2,), exact=True)
+    for group, extra in (("params", ()), ("stats", ()),
+                         ("subparams", (2,)), ("substats", (2,))):
+        tree = getattr(model, group)
+        for i, leaf in enumerate(jax.tree_util.tree_leaves(tree)):
+            check(f"{group}[{i}]", leaf, base + extra, exact=False)
 
 
 def load_model(path: Union[str, io.IOBase]
                ) -> Tuple[ModelState, ComponentFamily]:
-    """Read a checkpoint; returns ``(model, family)``. Leaves come back
-    bit-for-bit (npz stores raw array bytes)."""
-    with np.load(path, allow_pickle=False) as z:
-        version = int(z["__version__"])
-        if version > FORMAT_VERSION:
-            raise ValueError(
-                f"checkpoint format v{version} is newer than this code "
-                f"(v{FORMAT_VERSION})")
-        family = get_family(str(z["__family__"]))
-        impl = str(z["__impl__"])
-        treedef = jax.tree_util.tree_structure(_template(family))
-        names = sorted(k for k in z.files if k not in _META)
-        if len(names) != treedef.num_leaves:
-            raise ValueError(
-                f"checkpoint has {len(names)} leaves but family "
-                f"{family.name!r} expects {treedef.num_leaves} — family "
-                "definition drifted since this checkpoint was written")
-        leaves = [jnp.asarray(z[k]) for k in names]
-    model = jax.tree_util.tree_unflatten(treedef, leaves)
+    """Read and *verify* a checkpoint; returns ``(model, family)``.
+    Leaves come back bit-for-bit (npz stores raw array bytes; every
+    leaf's CRC32 is re-checked). Raises :class:`CheckpointNotFound` if
+    the file does not exist and :class:`CheckpointCorrupt` on any
+    verification failure — never garbage state."""
+    where = path if isinstance(path, str) else "<stream>"
+    if isinstance(path, str):
+        path = normalize_path(path) if (not os.path.exists(path)
+                                        and os.path.exists(
+                                            normalize_path(path))) else path
+        if not os.path.exists(path):
+            raise CheckpointNotFound(
+                f"no checkpoint at {where!r} (or {normalize_path(where)!r})")
+        where = path
+    try:
+        with np.load(path, allow_pickle=False) as z:
+            version = int(z["__version__"])
+            if version > FORMAT_VERSION:
+                raise CheckpointCorrupt(
+                    f"{where}: checkpoint format v{version} is newer than "
+                    f"this code (v{FORMAT_VERSION})")
+            family = get_family(str(z["__family__"]))
+            impl = str(z["__impl__"])
+            treedef = jax.tree_util.tree_structure(_template(family))
+            names = sorted(k for k in z.files if k not in _META)
+            if len(names) != treedef.num_leaves:
+                raise CheckpointCorrupt(
+                    f"{where}: checkpoint has {len(names)} leaves but "
+                    f"family {family.name!r} expects {treedef.num_leaves} "
+                    "— family definition drifted since this checkpoint "
+                    "was written")
+            arrs = [z[k] for k in names]   # forces the (CRC-checked) read
+            if version >= 2:
+                crcs = np.asarray(z["__crc__"])
+                if crcs.shape != (len(names),):
+                    raise CheckpointCorrupt(
+                        f"{where}: __crc__ has shape {crcs.shape}, "
+                        f"expected ({len(names)},)")
+                for name, arr, want in zip(names, arrs, crcs):
+                    got = _crc(arr)
+                    if got != int(want):
+                        raise CheckpointCorrupt(
+                            f"{where}: CRC mismatch on {name}: stored "
+                            f"{int(want):#010x}, recomputed {got:#010x} — "
+                            "the file was truncated or bit-flipped on "
+                            "disk")
+    except CheckpointCorrupt:
+        raise
+    except _READ_ERRORS as e:
+        raise CheckpointCorrupt(
+            f"{where}: unreadable checkpoint archive "
+            f"({type(e).__name__}: {e})") from e
+    model = jax.tree_util.tree_unflatten(treedef,
+                                         [jnp.asarray(a) for a in arrs])
+    _validate_shapes(model, family, str(where))
     return model._replace(
         key=jax.random.wrap_key_data(model.key, impl=impl)), family
+
+
+# ---------------------------------------------------------------------------
+# Rotation: {prefix}-{it:08d}.npz members, newest-valid resolution
+# ---------------------------------------------------------------------------
+_ROT_RE = re.compile(r"-(\d{8})\.npz$")
+
+
+def checkpoint_member(prefix: str, it: int) -> str:
+    return f"{prefix}-{int(it):08d}.npz"
+
+
+def list_checkpoints(prefix: str) -> List[Tuple[int, str]]:
+    """All rotation members under ``prefix``, newest (highest it) first."""
+    out = []
+    for p in glob.glob(glob.escape(prefix) + "-" + "[0-9]" * 8 + ".npz"):
+        m = _ROT_RE.search(p)
+        if m:
+            out.append((int(m.group(1)), p))
+    return sorted(out, reverse=True)
+
+
+def save_checkpoint(prefix: str, model: ModelState,
+                    family: Union[str, ComponentFamily], it: int,
+                    keep: int = 3) -> str:
+    """Atomically write rotation member ``{prefix}-{it:08d}.npz`` and
+    prune members beyond the newest ``keep`` (the write lands before any
+    prune, so the rotation never transits through an empty state)."""
+    if keep < 1:
+        raise ValueError(f"keep must be >= 1, got {keep}")
+    path = save_model(checkpoint_member(prefix, it), model, family)
+    for _, old in list_checkpoints(prefix)[keep:]:
+        try:
+            os.unlink(old)
+        except OSError:
+            pass
+    return path
+
+
+def latest_valid(prefix: str
+                 ) -> Tuple[ModelState, ComponentFamily, str, int]:
+    """Newest rotation member that *verifies*: walks ``{prefix}-*.npz``
+    newest-first, skipping corrupt members (one bad file costs one
+    checkpoint interval, not the fit). Returns
+    ``(model, family, path, it)``; raises :class:`CheckpointNotFound`
+    when the rotation is empty or nothing verifies."""
+    members = list_checkpoints(prefix)
+    corrupt = []
+    for it, path in members:
+        try:
+            model, family = load_model(path)
+        except CheckpointCorrupt as e:
+            corrupt.append(str(e))
+            continue
+        return model, family, path, it
+    if corrupt:
+        raise CheckpointNotFound(
+            f"no valid checkpoint under prefix {prefix!r}: all "
+            f"{len(corrupt)} member(s) failed verification — "
+            + "; ".join(corrupt))
+    raise CheckpointNotFound(
+        f"no checkpoint members matching {prefix!r}-########.npz")

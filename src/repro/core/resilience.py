@@ -1,0 +1,159 @@
+"""Resilience layer for long fits: tile-read retry, health checks, typed
+failures.
+
+A large DPMM fit is a *long* fit — the out-of-core driver streams memmap
+tiles for hours, and one flipped bit or transient ``EIO`` used to kill
+the chain (or worse, silently poison it: a NaN anywhere in ``ModelState``
+propagates through every subsequent sweep). This module holds the three
+primitives the drivers (core/sampler.py) compose into fault tolerance:
+
+ - :class:`RetryPolicy` + :func:`read_block_checked` — bounded
+   retry-with-backoff around ``DataSource.read_block``. Transient
+   ``IOError``/``OSError``, short reads, and (``guard_nonfinite``)
+   NaN/Inf rows are treated as retryable tile faults; exhaustion raises
+   :class:`TileReadError` *with tile provenance* (row range, attempt
+   count, last failure) so a dead disk region is diagnosable from the
+   traceback alone.
+ - :func:`model_health` — an O(K) on-device all-finite + degenerate-
+   cluster check over ``ModelState``. It reads state the drivers already
+   sync (stats, weights), adds no host round-trip of its own (its scalar
+   verdict rides the existing chunk-boundary ``device_get``), and never
+   touches the chain — clean fits stay bitwise identical with the check
+   on or off.
+ - :class:`DivergenceError` — raised when rollback cannot save the fit
+   (no healthy state to roll back to more than ``max_recoveries`` times);
+   carries the ``recoveries`` log for post-mortems.
+
+Fault *injection* for testing all of the above lives in data/faults.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import ModelState
+
+
+class TileReadError(RuntimeError):
+    """A streamed tile read failed past the retry budget. The message
+    carries full provenance: global row range, attempts, last failure."""
+
+
+class DivergenceError(RuntimeError):
+    """The chain diverged (non-finite state / degenerate clusters) and
+    rollback could not recover it within ``max_recoveries`` attempts.
+    ``recoveries`` holds the per-event log (same records as
+    ``FitResult.recoveries``)."""
+
+    def __init__(self, message: str, recoveries: Optional[List[dict]] = None):
+        super().__init__(message)
+        self.recoveries: List[dict] = list(recoveries or [])
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for streamed tile reads.
+
+    ``max_retries`` is the number of *re*-attempts after the first try
+    (so ``max_retries=3`` means at most 4 reads of the block). Backoff
+    sleeps ``backoff_s * backoff_mult**i`` before retry i — transient
+    faults (NFS hiccup, loaded disk) get breathing room, while the bound
+    keeps a dead source from hanging the fit. ``guard_nonfinite`` treats
+    NaN/Inf rows in a tile as a retryable fault too: a re-read of a
+    bit-flipped buffer is clean, and a *persistently* non-finite tile
+    (really-broken data) fails loudly instead of poisoning the chain.
+    """
+    max_retries: int = 3
+    backoff_s: float = 0.05
+    backoff_mult: float = 2.0
+    guard_nonfinite: bool = True
+
+
+def read_block_checked(source, start: int, stop: int,
+                       policy: RetryPolicy,
+                       on_event: Optional[Callable[[dict], None]] = None
+                       ) -> np.ndarray:
+    """``source.read_block(start, stop)`` under ``policy``.
+
+    Validates every read: row count must match (short reads retry) and,
+    with ``policy.guard_nonfinite``, all values must be finite. Each
+    failed attempt is reported to ``on_event`` (the drivers append these
+    records to ``FitResult.recoveries``); exhaustion raises
+    :class:`TileReadError` with the tile's provenance.
+    """
+    want = stop - start
+    last = "no attempt made"
+    for attempt in range(policy.max_retries + 1):
+        if attempt:
+            delay = policy.backoff_s * policy.backoff_mult ** (attempt - 1)
+            if delay > 0:
+                time.sleep(delay)
+        try:
+            rows = source.read_block(start, stop)
+        except (IOError, OSError) as e:
+            last = f"{type(e).__name__}: {e}"
+        else:
+            if rows.shape[0] != want:
+                last = (f"short read: got {rows.shape[0]} rows, "
+                        f"want {want}")
+            elif (policy.guard_nonfinite
+                  and not np.isfinite(rows).all()):
+                bad = np.flatnonzero(~np.isfinite(rows).all(axis=1))
+                last = (f"non-finite values in {bad.size} row(s), first "
+                        f"at global row {start + int(bad[0])}")
+            else:
+                return rows
+        if on_event is not None:
+            on_event({"kind": "tile_read_fault",
+                      "rows": [int(start), int(stop)],
+                      "attempt": attempt + 1, "detail": last})
+    raise TileReadError(
+        f"read_block rows [{start}, {stop}) failed after "
+        f"{policy.max_retries + 1} attempt(s); last failure: {last}")
+
+
+def model_health(model: ModelState) -> jax.Array:
+    """Scalar bool: is this ``ModelState`` numerically sane?
+
+    Checks (all O(K) reductions over replicated state — no per-point
+    work, and purely *reads* the model, so the chain is untouched):
+
+     - every sufficient-statistic leaf (stats + substats) is finite on
+       *active* slots — a NaN/Inf data row poisons the stat fold of the
+       cluster that owns it, so this is the earliest on-device detection
+       point. Inactive slots are ignored: no point folds into them, and
+       they are re-zeroed on activation, so garbage there cannot reach
+       the chain;
+     - ``logweights`` are finite on *active* slots (inactive slots are
+       legitimately at the NEG_INF floor);
+     - no degenerate cluster: active slots have non-negative counts
+       (a negative ``n`` means a corrupted fold, not a small cluster).
+
+    A multi-chain model (leading chain axis) reduces over all chains —
+    one unhealthy chain fails the whole state, and rollback restores all
+    chains together (they share the jitted chunk).
+    """
+    active = model.active
+
+    def finite_on_active(leaf):
+        # stats leaves are active.shape + extra dims, substats leaves
+        # active.shape + (2,) + extra — one right-padded mask fits both
+        mask = active.reshape(
+            active.shape + (1,) * (leaf.ndim - active.ndim))
+        return jnp.isfinite(jnp.where(mask, leaf, 0.0)).all()
+
+    checks = [finite_on_active(leaf)
+              for leaf in jax.tree_util.tree_leaves((model.stats,
+                                                     model.substats))
+              if jnp.issubdtype(jnp.asarray(leaf).dtype, jnp.floating)]
+    checks.append(jnp.isfinite(
+        jnp.where(model.active, model.logweights, 0.0)).all())
+    checks.append(jnp.all(
+        jnp.where(model.active, model.stats.n, 0.0) >= 0.0))
+    return functools.reduce(jnp.logical_and, checks)

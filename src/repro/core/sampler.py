@@ -67,6 +67,7 @@ from jax.scipy.special import gammaln
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import DPMMConfig
+from repro.core import checkpoint as _checkpoint
 from repro.core import gibbs, splitmerge
 from repro.core.distributed import (data_axes_of, make_data_mesh,
                                     n_data_shards, shard_map, shard_points,
@@ -74,10 +75,80 @@ from repro.core.distributed import (data_axes_of, make_data_mesh,
 from repro.core.family import (ComponentFamily, get_family,
                                state_partition_specs)
 from repro.core.metrics import ari, nmi
+from repro.core.resilience import (DivergenceError, RetryPolicy,
+                                   model_health, read_block_checked)
 from repro.core.state import ModelState, PointState, grow_model
 from repro.data.source import DataSource, as_source
 
 _HIST_KEYS = ("k", "max_cluster", "min_cluster", "score")
+
+# Rollback key stream: fold_in values >= 2**30 are disjoint from both
+# per-iteration streams (the sweep folds it in [0, iters), split/merge
+# folds -(it+1)), so a recovered chain never collides with the clean one.
+_RECOVERY_FOLD = (1 << 30) + 1337
+
+
+def _recovery_rekey(model: ModelState, n_rollback: int) -> ModelState:
+    """Advance the chain key after a divergence rollback: replaying the
+    exact (key, it) stream that just diverged would be futile when the
+    divergence is state-dependent, so each rollback folds a reserved
+    counter into the key. Multi-chain keys advance per chain (vmap over
+    the (C,) key axis — integer math, exact)."""
+    fold = _RECOVERY_FOLD + n_rollback
+
+    def f(k):
+        return jax.random.fold_in(k, fold)
+    key = model.key
+    return model._replace(key=f(key) if key.ndim == 0 else jax.vmap(f)(key))
+
+
+class _Recovery:
+    """Shared per-fit bookkeeping for auto-checkpointing and divergence
+    rollback (both drivers). ``events`` becomes ``FitResult.recoveries``;
+    it also collects the tile-read retry events the streaming path
+    reports (core/resilience.read_block_checked)."""
+
+    def __init__(self, cfg: DPMMConfig, family_name: str, it_base: int):
+        self.cfg = cfg
+        self.events: List[dict] = []
+        self.n_rollbacks = 0
+        self._family = family_name
+        self._last_saved = it_base
+
+    def maybe_checkpoint(self, model: ModelState, it_abs: int,
+                         force: bool = False) -> None:
+        """Save a rotation member when ``checkpoint_every`` iterations
+        have passed since the last save (the resident driver calls this
+        at chunk boundaries, so saves land on the first boundary past
+        each multiple). ``force`` saves the final state regardless of
+        cadence (but never duplicates an already-saved iteration)."""
+        cfg = self.cfg
+        if not (cfg.checkpoint_path and cfg.checkpoint_every):
+            return
+        due = it_abs - self._last_saved >= cfg.checkpoint_every
+        if (force and it_abs > self._last_saved) or due:
+            _checkpoint.save_checkpoint(cfg.checkpoint_path, model,
+                                        self._family, it_abs,
+                                        keep=cfg.checkpoint_keep)
+            self._last_saved = it_abs
+
+    def rollback(self, it_abs: int, restored_it: int, detail: str) -> None:
+        """Record a divergence rollback; raise once the budget is spent
+        (carrying the full event log for the post-mortem)."""
+        self.n_rollbacks += 1
+        self.events.append({"kind": "divergence_rollback",
+                            "iter": int(it_abs),
+                            "restored_it": int(restored_it),
+                            "rollback": self.n_rollbacks,
+                            "detail": detail})
+        if self.n_rollbacks > self.cfg.max_recoveries:
+            raise DivergenceError(
+                f"chain state went non-finite/degenerate at iteration "
+                f"{it_abs} and rollback did not recover it within "
+                f"max_recoveries={self.cfg.max_recoveries} attempts — "
+                "the divergence is persistent (non-finite input data, or "
+                "a numerically hostile configuration). See .recoveries "
+                "for the event log.", self.events)
 
 
 def chain_score(model: ModelState, prior, family, alpha: float) -> jax.Array:
@@ -304,6 +375,12 @@ class FitResult:
     # final chain_score per chain: scalar (C=1) or (C,) — the
     # select_best ranking; the full trace is history["score"]
     score: Any = None
+    # resilience event log: tile-read retries ('tile_read_fault') and
+    # divergence rollbacks ('divergence_rollback') the fit survived.
+    # Empty for a clean fit. NOT part of ``history`` on purpose — the
+    # golden-chain fingerprints hash history, and recoveries are
+    # operational metadata, not chain state.
+    recoveries: List[dict] = dataclasses.field(default_factory=list)
 
     def chain(self, c: int) -> "FitResult":
         """Single-chain view of chain ``c`` (bitwise — pure slicing)."""
@@ -318,7 +395,8 @@ class FitResult:
             history={k: np.asarray(v[c]) for k, v in self.history.items()},
             iter_times_s=self.iter_times_s,
             device_bytes=self.device_bytes, n_chains=1,
-            score=float(np.asarray(self.score)[c]))
+            score=float(np.asarray(self.score)[c]),
+            recoveries=self.recoveries)
 
     def select_best(self) -> "FitResult":
         """The chain with the highest final posterior ``score``
@@ -412,7 +490,8 @@ class DPMM:
 
     def fit(self, x, iters: Optional[int] = None, verbose: bool = False,
             *, n_chains: int = 1, key: Optional[jax.Array] = None,
-            init_state: Optional[ModelState] = None) -> FitResult:
+            init_state: Optional[ModelState] = None,
+            resume: bool = False) -> FitResult:
         """Fit to ``x``: an (N, d) array (resident fast path) or any
         ``DataSource`` (e.g. ``HostTiledSource`` over an np.memmap for
         out-of-core data). ``cfg.tile_size`` forces the tiled plane even
@@ -427,6 +506,16 @@ class DPMM:
         every per-point quantity is recomputed from the model each sweep
         and all randomness derives from ``(state.key, state.it)``, the
         resumed chain is bitwise the uninterrupted one.
+
+        ``resume=True`` picks up a killed fit from the auto-checkpoint
+        rotation at ``cfg.checkpoint_path`` (requires it): the newest
+        member that *verifies* (version, CRCs, leaf shapes) is loaded —
+        corrupt members fall back through the rotation — and ``iters``
+        is treated as the TOTAL iteration target, so the fit runs only
+        the remaining ``iters - it_checkpoint`` iterations. With no
+        checkpoint on disk yet it is a fresh fit, which is what makes
+        blind ``fit(resume=True)`` re-runs idempotent-ish: run, crash,
+        rerun until done. Mutually exclusive with ``init_state``.
         """
         source = as_source(x)
         iters = iters if iters is not None else self.cfg.iters
@@ -434,6 +523,28 @@ class DPMM:
             raise ValueError(f"n_chains must be >= 1, got {n_chains}")
         if key is None:
             key = jax.random.key(self.cfg.seed)
+        if resume:
+            if init_state is not None:
+                raise ValueError(
+                    "pass either resume=True (load from "
+                    "cfg.checkpoint_path) or init_state, not both")
+            if not self.cfg.checkpoint_path:
+                raise ValueError(
+                    "fit(resume=True) needs cfg.checkpoint_path — the "
+                    "rotation prefix auto-checkpointing saved to")
+            try:
+                loaded, fam, _path, it_ckpt = _checkpoint.latest_valid(
+                    self.cfg.checkpoint_path)
+            except _checkpoint.CheckpointNotFound:
+                loaded = None           # nothing saved yet: fresh fit
+            if loaded is not None:
+                if fam.name != self.family.name:
+                    raise ValueError(
+                        f"checkpoint at {self.cfg.checkpoint_path} holds "
+                        f"a '{fam.name}' model but cfg.component is "
+                        f"'{self.family.name}'")
+                init_state = loaded
+                iters = max(0, iters - it_ckpt)
         if init_state is not None:
             # k_max='auto': the checkpoint's slab size IS the resumed
             # starting capacity, so only the chain axis is validated
@@ -549,31 +660,47 @@ class DPMM:
                 donate_argnums=(0, 1))
 
         rss0 = _rss_peak_bytes()
+        # fresh PointState from the validity mask alone: zeros for labels
+        # are fine — every sweep recomputes them from the model. Used on
+        # resume (no point in the checkpoint) AND on divergence rollback
+        # (the donated chunk consumed the diverged point's buffers).
+        mk_point = jax.jit(shard_map(
+            lambda v: PointState(
+                labels=jnp.zeros(((n_chains,) if multi else ())
+                                 + v.shape, jnp.int32),
+                sublabels=jnp.zeros(((n_chains,) if multi else ())
+                                    + v.shape, jnp.int32),
+                valid=(jnp.broadcast_to(v, (n_chains,) + v.shape)
+                       if multi else v)),
+            mesh=mesh, in_specs=(shard_spec,), out_specs=point_specs))
         if init_state is not None:
             model = jax.device_put(_copy_state(init_state),
                                    NamedSharding(mesh, P()))
-            mk_point = jax.jit(shard_map(
-                lambda v: PointState(
-                    labels=jnp.zeros(((n_chains,) if multi else ())
-                                     + v.shape, jnp.int32),
-                    sublabels=jnp.zeros(((n_chains,) if multi else ())
-                                        + v.shape, jnp.int32),
-                    valid=(jnp.broadcast_to(v, (n_chains,) + v.shape)
-                           if multi else v)),
-                mesh=mesh, in_specs=(shard_spec,), out_specs=point_specs))
             point = mk_point(valid)
+            it_base = int(np.asarray(
+                jax.device_get(init_state.it)).reshape(-1)[0])
         else:
             keys = _chain_keys(key, n_chains) if multi else key
             model, point = init(keys, xs, valid)
+            it_base = 0
 
         chunk = max(1, cfg.log_every)
-        lengths = [chunk] * (iters // chunk)
-        if iters % chunk:
-            lengths.append(iters % chunk)   # one shorter trailing chunk
         chunk_fns: Dict[Any, Any] = {}
         hist_chunks: List[Dict[str, np.ndarray]] = []
         times: List[float] = []
         done = 0
+        # guardrails: the health verdict is a SEPARATE tiny jitted program
+        # over the O(K) model state — never fused into the chunk, so the
+        # chunk's compiled artifact (and the chain it computes) is bitwise
+        # identical with guardrails on or off; the verdict rides the
+        # existing per-chunk device_get (zero extra host syncs)
+        health_fn = jax.jit(model_health) if cfg.guardrails else None
+        rec = _Recovery(cfg, self.family.name, it_base)
+        # rollback anchor: device-side copy of the last healthy boundary
+        # (model, done, k_slab) — kept on device because typed PRNG keys
+        # round-trip poorly and the copy is O(K), not O(N)
+        snap = ((jax.tree.map(jnp.copy, model), 0, k_slab)
+                if cfg.guardrails else None)
         # last known live cluster count (max over chains) — sizes the next
         # chunk's compact slab and drives the 'auto' growth schedule; the
         # host learns it for free from the chunk history it pulls anyway
@@ -582,7 +709,8 @@ class DPMM:
                 jax.device_get(init_state.active)).sum(axis=-1)))
         else:
             k0 = cfg.init_clusters
-        for length in lengths:
+        while done < iters:
+            length = min(chunk, iters - done)
             if auto and 2 * k0 > k_slab and k_slab < k_cap:
                 while 2 * k0 > k_slab and k_slab < k_cap:
                     k_slab = min(k_cap, 2 * k_slab)
@@ -603,16 +731,46 @@ class DPMM:
                     model, point, xs).compile()
             t0 = time.perf_counter()
             (model, point), hist = chunk_fns[fkey](model, point, xs)
-            hist = jax.device_get(hist)       # the one host sync per chunk
+            if health_fn is not None:
+                # one sync pulls the chunk history AND the health verdict
+                hist, healthy = jax.device_get((hist, health_fn(model)))
+                healthy = bool(healthy)
+            else:
+                hist = jax.device_get(hist)   # the one host sync per chunk
+                healthy = True
             dt = time.perf_counter() - t0
+            if not healthy:
+                snap_model, snap_done, snap_slab = snap
+                rec.rollback(it_base + done + length, it_base + snap_done,
+                             "non-finite/degenerate model state after "
+                             "resident chunk")
+                # restore the anchor (fresh copy: the anchor itself must
+                # survive a possible second rollback), advance the key so
+                # the replay takes a different trajectory, rebuild point
+                model = _recovery_rekey(
+                    jax.tree.map(jnp.copy, snap_model), rec.n_rollbacks)
+                done = snap_done
+                if k_slab != snap_slab:       # undo post-anchor slab growth
+                    k_slab = snap_slab
+                    kwargs["k_max"] = k_slab
+                point = mk_point(valid)
+                k0 = int(np.max(np.asarray(
+                    jax.device_get(snap_model.active)).sum(axis=-1)))
+                continue                      # failed chunk leaves no
+                                              # hist/times rows behind
             times.extend([dt / length] * length)
             hist_chunks.append(hist)
             k0 = int(np.max(np.asarray(hist["k"][-1])))
             done += length
+            if cfg.guardrails:
+                snap = (jax.tree.map(jnp.copy, model), done, k_slab)
+            rec.maybe_checkpoint(model, it_base + done)
             if verbose:
                 ks = np.asarray(hist["k"][-1]).reshape(-1).tolist()
-                print(f"iter {done:4d}  K={ks if len(ks) > 1 else ks[0]}  "
+                print(f"iter {it_base + done:4d}  "
+                      f"K={ks if len(ks) > 1 else ks[0]}  "
                       f"{dt / length * 1e3:.1f} ms/iter")
+        rec.maybe_checkpoint(model, it_base + done, force=True)
         history = {
             k: (np.concatenate([h[k] for h in hist_chunks])
                 if hist_chunks else np.zeros((0,) + ((n_chains,) if multi
@@ -631,18 +789,20 @@ class DPMM:
             **_peak_fields(rss0),
         }
         return self._result(model, labels, history, times, device_bytes,
-                            n_chains)
+                            n_chains, rec.events)
 
     def _result(self, model: ModelState, labels, history, times,
-                device_bytes, n_chains: int) -> FitResult:
+                device_bytes, n_chains: int,
+                recoveries: Optional[List[dict]] = None) -> FitResult:
         """Assemble a FitResult; for C > 1, ``k`` is the best chain's."""
+        recoveries = recoveries or []
         if n_chains == 1:
             score = (float(history["score"][-1])
                      if history["score"].size else None)
             return FitResult(state=model, labels=labels,
                              k=int(model.k_hat), history=history,
                              iter_times_s=times, device_bytes=device_bytes,
-                             score=score)
+                             score=score, recoveries=recoveries)
         score = (np.asarray(history["score"][:, -1])
                  if history["score"].size
                  else np.zeros((n_chains,), np.float32))
@@ -651,7 +811,7 @@ class DPMM:
                          k=int(np.asarray(model.active[best]).sum()),
                          history=history, iter_times_s=times,
                          device_bytes=device_bytes, n_chains=n_chains,
-                         score=score)
+                         score=score, recoveries=recoveries)
 
     # ------------------------------------------------------------------
     # Tiled plane: out-of-core points streamed under a resident ModelState
@@ -743,10 +903,21 @@ class DPMM:
         lab_spec = P(None, axes) if multi else P(axes)
         i32_sharding = NamedSharding(mesh, lab_spec)
 
+        # every streamed read goes through the bounded retry path
+        # (core/resilience.py): transient IOError/short-read/NaN-tile
+        # faults re-read (the retried data is identical, so the chain is
+        # bitwise untouched); persistent faults raise TileReadError with
+        # tile provenance. Retry events land in FitResult.recoveries.
+        retry = RetryPolicy(max_retries=cfg.io_retries,
+                            backoff_s=cfg.io_backoff_s,
+                            guard_nonfinite=cfg.guard_tiles)
+        rec = _Recovery(cfg, family.name, 0)    # it_base fixed after init
+
         def put_x_tile(off: int, length: int):
             rows = np.concatenate(
-                [source.read_block(s * n_local + off,
-                                   s * n_local + off + length)
+                [read_block_checked(source, s * n_local + off,
+                                    s * n_local + off + length, retry,
+                                    on_event=rec.events.append)
                  for s in range(shards)], axis=0)
             return jax.device_put(rows, x_sharding)
 
@@ -964,6 +1135,7 @@ class DPMM:
         # the split/merge gate runs on the TRUE iteration number (resume:
         # model.it > 0), matching the resident driver's model.it cond
         it0 = int(jax.device_get(model.it[0] if multi else model.it))
+        rec._last_saved = it0           # checkpoint cadence counts from here
         # exact live cluster count (max over chains): known on host from
         # the per-iteration summary pull, so the tiled compact slab needs
         # no lax.cond fallback — sweeps cannot change K mid-pass, and the
@@ -973,7 +1145,14 @@ class DPMM:
                 jax.device_get(init_state.active)).sum(axis=-1)))
         else:
             k0 = cfg.init_clusters
-        for it in range(iters):
+        # guardrails: same contract as the resident driver — separate
+        # jitted verdict, pulled with the summary the loop syncs anyway.
+        # Rollback restores the last healthy model; the stale host label
+        # arrays are harmless (sweeps recompute labels from the model).
+        health_fn = jax.jit(model_health) if cfg.guardrails else None
+        snap = (jax.tree.map(jnp.copy, model), 0) if cfg.guardrails else None
+        it = 0
+        while it < iters:
             t0 = time.perf_counter()
             model = sweep_model_fn(model)
             k_c = (_k_compact(k0, 1, k_max, cfg.k_block)
@@ -1024,15 +1203,37 @@ class DPMM:
                     model = apply_plan_comp_fn(model, plan, comp,
                                                *finalize_fn(acc))
             model, summary = advance_fn(model)
-            summary = jax.device_get(summary)
+            if health_fn is not None:
+                summary, healthy = jax.device_get(
+                    (summary, health_fn(model)))
+                healthy = bool(healthy)
+            else:
+                summary = jax.device_get(summary)
+                healthy = True
+            if not healthy:
+                snap_model, snap_it = snap
+                rec.rollback(it0 + it + 1, it0 + snap_it,
+                             "non-finite/degenerate model state after "
+                             "tiled iteration")
+                model = _recovery_rekey(
+                    jax.tree.map(jnp.copy, snap_model), rec.n_rollbacks)
+                it = snap_it
+                k0 = int(np.max(np.asarray(
+                    jax.device_get(snap_model.active)).sum(axis=-1)))
+                continue            # diverged iteration leaves no rows
             k0 = int(np.max(np.asarray(summary["k"])))
             hist_rows.append(summary)
             times.append(time.perf_counter() - t0)
+            it += 1
+            if cfg.guardrails:
+                snap = (jax.tree.map(jnp.copy, model), it)
+            rec.maybe_checkpoint(model, it0 + it)
             if verbose:
                 ks = np.asarray(summary["k"]).reshape(-1).tolist()
-                print(f"iter {it0 + it + 1:4d}  "
+                print(f"iter {it0 + it:4d}  "
                       f"K={ks if len(ks) > 1 else ks[0]}  "
                       f"{times[-1] * 1e3:.1f} ms/iter")
+        rec.maybe_checkpoint(model, it0 + it, force=True)
 
         history = {
             k: np.asarray([row[k] for row in hist_rows])
@@ -1048,4 +1249,4 @@ class DPMM:
             **_peak_fields(rss0),
         }
         return self._result(model, labels_h[..., :n].copy(), history,
-                            times, device_bytes, n_chains)
+                            times, device_bytes, n_chains, rec.events)

@@ -2,3 +2,4 @@ from repro.data.synthetic import generate_gmm, generate_mnmm  # noqa: F401
 from repro.data.pipeline import TokenPipeline, lm_batches  # noqa: F401
 from repro.data.source import (DataSource, HostTiledSource,  # noqa: F401
                                ResidentSource, as_source)
+from repro.data.faults import FaultInjectingSource  # noqa: F401

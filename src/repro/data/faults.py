@@ -1,0 +1,129 @@
+"""FaultInjectingSource: deterministic I/O chaos for any ``DataSource``.
+
+The resilience layer (core/resilience.py, the drivers' retry/rollback
+paths) is only trustworthy if it is *exercised* — this wrapper injects
+the three fault classes a real streamed fit meets, on a schedule that is
+deterministic and replayable:
+
+ - ``io``    — ``read_block`` raises ``IOError`` (transient device/NFS
+   fault);
+ - ``nan``   — the returned tile has rows overwritten with NaN/Inf (a
+   bit-flipped or torn buffer);
+ - ``short`` — the returned tile is truncated (partial read).
+
+Faults key on the **read-call index**, not the row range: each
+``read_block`` call increments a counter, and the fault decision for
+call *i* is drawn from ``SeedSequence([seed, i])``. Two consequences,
+both load-bearing for tests:
+
+ 1. the schedule is bit-reproducible for a given ``seed`` across runs
+    and processes;
+ 2. faults are *transient by construction* — a retry of the same row
+    range is a new call index, so the re-read sees a fresh (almost
+    certainly clean) draw. A retried fit therefore recovers onto the
+    EXACT clean chain: the data that reaches the device is unchanged.
+
+``schedule`` pins faults explicitly (``{call_index: kind}``) for
+directed tests — e.g. ``{0: "io"}`` faults the very first read, and
+``dict.fromkeys(range(100), "io")`` exhausts any retry budget.
+
+``resident()`` returns None on purpose: this source models a faulty
+*streaming* path, so wrapping forces the tiled driver (the resident
+fast path never re-reads and has nothing to retry). ``column_mean``
+delegates to the inner source unfaulted — the prior's data-dependent
+part is computed once before the fit and is not part of the streamed
+iteration loop under test.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.data.source import DataSource
+
+_KINDS = ("io", "nan", "short")
+
+
+class FaultInjectingSource(DataSource):
+    """Wrap ``inner`` with a seeded, deterministic fault schedule.
+
+    Either give per-call probabilities (``p_io`` / ``p_nan`` /
+    ``p_short``, drawn independently per read-call index from the seed)
+    or an explicit ``schedule`` mapping call index -> fault kind.
+    ``max_faults`` bounds the total injections (None = unbounded).
+    ``injected`` logs every injection for assertions.
+    """
+
+    def __init__(self, inner: DataSource, seed: int = 0,
+                 p_io: float = 0.0, p_nan: float = 0.0,
+                 p_short: float = 0.0,
+                 schedule: Optional[Dict[int, str]] = None,
+                 max_faults: Optional[int] = None):
+        if schedule:
+            bad = [k for k in schedule.values() if k not in _KINDS]
+            if bad:
+                raise ValueError(
+                    f"unknown fault kind(s) {bad}; known: {_KINDS}")
+        if min(p_io, p_nan, p_short) < 0 or p_io + p_nan + p_short > 1:
+            raise ValueError(
+                "fault probabilities must be >= 0 and sum to <= 1, got "
+                f"p_io={p_io} p_nan={p_nan} p_short={p_short}")
+        self._inner = inner
+        self.n, self.d = inner.n, inner.d
+        self._seed = int(seed)
+        self._p = (p_io, p_nan, p_short)
+        self._schedule = dict(schedule) if schedule else None
+        self._max_faults = max_faults
+        self.calls = 0
+        self.injected: List[dict] = []
+
+    # -- DataSource protocol ------------------------------------------------
+    def resident(self) -> None:
+        return None                     # always stream (see module doc)
+
+    def column_mean(self) -> np.ndarray:
+        return self._inner.column_mean()
+
+    def read_block(self, start: int, stop: int) -> np.ndarray:
+        i = self.calls
+        self.calls += 1
+        kind = self._fault_for(i)
+        if kind is None or (self._max_faults is not None
+                            and len(self.injected) >= self._max_faults):
+            return self._inner.read_block(start, stop)
+        self.injected.append({"call": i, "kind": kind,
+                              "rows": [int(start), int(stop)]})
+        if kind == "io":
+            raise IOError(
+                f"injected I/O fault (read call {i}, "
+                f"rows [{start}, {stop}))")
+        rows = np.array(self._inner.read_block(start, stop))
+        rng = self._rng(i)
+        if kind == "nan":
+            n_bad = max(1, rows.shape[0] // 64)
+            bad = rng.choice(rows.shape[0], size=n_bad, replace=False)
+            rows[bad] = np.where(rng.random(rows.shape[1]) < 0.5,
+                                 np.nan, np.inf).astype(rows.dtype)
+            return rows
+        # short read: drop a nonzero tail
+        cut = int(rng.integers(1, max(2, rows.shape[0])))
+        return rows[:-cut] if rows.shape[0] else rows
+
+    # -- schedule -----------------------------------------------------------
+    def _rng(self, call: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self._seed, call]))
+
+    def _fault_for(self, call: int) -> Optional[str]:
+        if self._schedule is not None:
+            return self._schedule.get(call)
+        if not any(self._p):
+            return None
+        u = float(self._rng(call).random())
+        acc = 0.0
+        for kind, p in zip(_KINDS, self._p):
+            acc += p
+            if u < acc:
+                return kind
+        return None

@@ -68,7 +68,22 @@ def main(argv=None):
     ap.add_argument("--checkpoint-path", "--checkpoint_path", default="",
                     help="write the fitted ModelState npz here "
                          "(core/checkpoint.py; servable via "
-                         "repro.launch.serve_dpmm)")
+                         "repro.launch.serve_dpmm). With "
+                         "--checkpoint-every it is the auto-checkpoint "
+                         "rotation prefix instead")
+    ap.add_argument("--checkpoint-every", "--checkpoint_every", type=int,
+                    default=None,
+                    help="auto-checkpoint the fit every this many "
+                         "iterations to the --checkpoint-path rotation "
+                         "(atomic, CRC-verified, last-"
+                         "`DPMMConfig.checkpoint_keep` members kept)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume a killed fit from the newest VERIFYING "
+                         "member of the --checkpoint-path rotation; "
+                         "--iters is the total target, so only the "
+                         "remaining iterations run. No checkpoint yet "
+                         "means a fresh fit — rerunning the same "
+                         "command until it finishes is safe")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -86,8 +101,13 @@ def main(argv=None):
         use_pallas=args.use_pallas or overrides.get("use_pallas", False),
         tile_size=(args.tile_size if args.tile_size is not None
                    else overrides.get("tile_size")),
+        checkpoint_path=(args.checkpoint_path or None),
+        checkpoint_every=args.checkpoint_every,
         seed=args.seed,
     )
+    if (args.resume or args.checkpoint_every) and not args.checkpoint_path:
+        raise SystemExit("--resume/--checkpoint-every need "
+                         "--checkpoint-path (the rotation prefix)")
 
     if args.data_path:
         if cfg.tile_size is not None:
@@ -111,8 +131,12 @@ def main(argv=None):
     t0 = time.time()
     model = DPMM(cfg)
     result = model.fit(source, verbose=args.verbose,
-                       n_chains=args.n_chains)
+                       n_chains=args.n_chains, resume=args.resume)
     wall = time.time() - t0
+    if result.recoveries:
+        kinds = sorted({e["kind"] for e in result.recoveries})
+        print(f"recovered from {len(result.recoveries)} fault event(s) "
+              f"({', '.join(kinds)}) — see FitResult.recoveries")
     if result.n_chains > 1:
         try:
             rhats = {k: round(v, 3) for k, v in result.rhats().items()}
@@ -124,10 +148,18 @@ def main(argv=None):
     nmi = result.nmi(gt) if gt is not None else float("nan")
     print(f"done in {wall:.1f}s: K={result.k} NMI={nmi:.4f} "
           f"mean iter {np.mean(result.iter_times_s[1:])*1e3:.1f} ms")
-    if args.checkpoint_path:
+    if args.checkpoint_path and not args.checkpoint_every:
         from repro.core.checkpoint import save_model
-        save_model(args.checkpoint_path, result.state, cfg.component)
-        print(f"wrote checkpoint {args.checkpoint_path}")
+        path = save_model(args.checkpoint_path, result.state,
+                          cfg.component)
+        print(f"wrote checkpoint {path}")
+    elif args.checkpoint_every:
+        # the fit already wrote the final rotation member (atomic,
+        # CRC-verified); point the operator at it
+        from repro.core.checkpoint import list_checkpoints
+        members = list_checkpoints(cfg.checkpoint_path)
+        if members:
+            print(f"final checkpoint {members[0][1]}")
     mem = result.device_bytes or {}
     print(f"device memory [{mem.get('mode')}]: "
           f"est_peak={mem.get('est_peak_bytes', 0)/2**20:.2f} MiB"

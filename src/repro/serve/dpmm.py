@@ -51,11 +51,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import gibbs
+from repro.core import checkpoint as _checkpoint
 from repro.core.checkpoint import load_model
+from repro.core import gibbs
 from repro.core.family import NEG_INF, ComponentFamily, get_family
 from repro.core.state import ModelState
 from repro.kernels import prng
+
+
+class InvalidQueryError(ValueError):
+    """A query batch failed validation (wrong rank/width, or non-finite
+    values). Typed so servers can map it to a 4xx instead of treating it
+    as an engine fault — a NaN row is a *client* bug, and letting it
+    through would silently produce garbage scores (NaN propagates
+    through loglik + logsumexp into every answer for that row)."""
 
 
 class ServeResult(NamedTuple):
@@ -77,9 +86,10 @@ class DPMMEngine:
     def __init__(self, model: ModelState,
                  family: Union[str, ComponentFamily],
                  batch_size: int = 2048, use_pallas: bool = False,
-                 seed: int = 0):
+                 seed: int = 0, validate_queries: bool = True):
         self.family = (get_family(family) if isinstance(family, str)
                        else family)
+        self.validate_queries = bool(validate_queries)
         if model.active.ndim != 1:
             raise ValueError(
                 f"DPMMEngine expects a single-chain ModelState; got "
@@ -151,19 +161,42 @@ class DPMMEngine:
 
     @classmethod
     def from_checkpoint(cls, path: str, batch_size: int = 2048,
-                        use_pallas: bool = False, seed: int = 0
-                        ) -> "DPMMEngine":
-        """Load a core/checkpoint.py npz and build the engine."""
-        model, family = load_model(path)
+                        use_pallas: bool = False, seed: int = 0,
+                        validate_queries: bool = True) -> "DPMMEngine":
+        """Load a core/checkpoint.py npz and build the engine.
+
+        ``path`` may be a single checkpoint file OR an auto-checkpoint
+        rotation prefix (``cfg.checkpoint_path`` of a fit with
+        ``checkpoint_every`` set): when no file named ``path``(.npz)
+        exists but rotation members do, the newest member that verifies
+        (version, per-leaf CRC32, shapes) is served — a half-written or
+        bit-flipped member falls back through the rotation instead of
+        poisoning the engine. Raises ``CheckpointCorrupt`` /
+        ``CheckpointNotFound`` (core/checkpoint.py) otherwise.
+        """
+        try:
+            model, family = load_model(path)
+        except _checkpoint.CheckpointNotFound:
+            if not isinstance(path, str) or not _checkpoint.list_checkpoints(path):
+                raise
+            model, family, _member, _it = _checkpoint.latest_valid(path)
         return cls(model, family, batch_size=batch_size,
-                   use_pallas=use_pallas, seed=seed)
+                   use_pallas=use_pallas, seed=seed,
+                   validate_queries=validate_queries)
 
     # ------------------------------------------------------------------
     def _batches(self, x: np.ndarray):
         x = np.asarray(x, np.float32)
         if x.ndim != 2 or x.shape[1] != self.d:
-            raise ValueError(f"queries must be (N, {self.d}), got "
-                             f"{x.shape}")
+            raise InvalidQueryError(f"queries must be (N, {self.d}), got "
+                                    f"{x.shape}")
+        if self.validate_queries and not np.isfinite(x).all():
+            bad = np.flatnonzero(~np.isfinite(x).all(axis=1))
+            raise InvalidQueryError(
+                f"queries contain non-finite values in {bad.size} row(s), "
+                f"first at row {int(bad[0])} — NaN/Inf inputs would "
+                "produce NaN scores for those rows (pass "
+                "validate_queries=False to the engine to skip this check)")
         n, b = x.shape[0], self.batch_size
         for start in range(0, n, b):
             block = x[start:start + b]
