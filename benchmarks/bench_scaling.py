@@ -77,7 +77,8 @@ def run(out_dir: str = "experiments",
         prev = ms
     t.emit_csv(f"{out_dir}/bench_scaling.csv")
     _write_json(out_json, scaling=rows,
-                oocore=run_oocore(iters=oocore_iters))
+                oocore=run_oocore(iters=oocore_iters),
+                dist=run_dist(iters=oocore_iters))
     return t
 
 
@@ -158,13 +159,97 @@ def run_oocore(iters: int = 12, n: int = OOCORE_N, d: int = OOCORE_D):
             "results": rows}
 
 
-def _write_json(out_json: str, scaling=None, oocore=None):
+DIST_N, DIST_D, DIST_ITERS = 20_000, 8, 8
+
+
+def run_dist(iters: int = DIST_ITERS, n: int = DIST_N, d: int = DIST_D):
+    """The elastic multi-process leg (repro.dist): ms/iter at workers in
+    {1, 2} vs the single-process tiled fit, plus a failover run where
+    worker 0 is SIGKILL'd mid-fit.
+
+    Two invariants ride along, gated by check_regression.py:
+    ``dist_chain_bitwise`` (every worker count reproduces the
+    single-process chain bit-for-bit — worker count is a wall-clock
+    knob, never a chain knob) and ``failover_chain_bitwise`` (the
+    SIGKILL'd run completes via reassignment + respawn on the SAME
+    bits, with the failover logged in FitResult.recoveries). At this
+    CI scale the socket hop dominates, so ms/iter is reported for
+    trajectory, not gated pairwise.
+    """
+    import os
+    import signal
+    import time as _time
+
+    from repro.core.gibbs import STATS_BLOCK
+    from repro.dist import DistHooks
+
+    x, _ = generate_gmm(n, d, OOCORE_K, seed=0, sep=8.0)
+    x = np.asarray(x, np.float32)
+    base_kw = dict(alpha=10.0, iters=iters, k_max=32, burnout=4,
+                   tile_size=STATS_BLOCK)
+    baseline = DPMM(DPMMConfig(**base_kw),
+                    mesh=make_data_mesh(1)).fit(HostTiledSource(x))
+    base_ms = float(np.mean(baseline.iter_times_s[1:]) * 1e3)
+    rows = [{"workers": 0, "mode": "single_process", "ms_per_iter": base_ms,
+             "dist_chain_bitwise": True, "wall_s": None,
+             "n_failover_events": 0}]
+    print("  " + "  ".join(f"{k}={v}" for k, v in rows[0].items()),
+          flush=True)
+
+    def bitwise(r):
+        return bool(np.array_equal(r.labels, baseline.labels) and all(
+            np.array_equal(r.history[k], baseline.history[k])
+            for k in baseline.history))
+
+    for w in (1, 2):
+        t0 = _time.time()
+        r = DPMM(DPMMConfig(workers=w, **base_kw)).fit(x)
+        row = {"workers": w, "mode": "distributed",
+               "ms_per_iter": float(np.mean(r.iter_times_s[1:]) * 1e3),
+               "dist_chain_bitwise": bitwise(r),
+               "wall_s": round(_time.time() - t0, 2),
+               "n_failover_events": len([e for e in r.recoveries
+                                         if e["kind"] == "worker_failover"])}
+        rows.append(row)
+        print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
+              flush=True)
+
+    killed = []
+
+    def killer(it, coord):
+        if it == 2 and not killed:
+            os.kill(coord.worker_pids()[0], signal.SIGKILL)
+            killed.append(it)
+
+    t0 = _time.time()
+    r = DPMM(DPMMConfig(workers=2, **base_kw)).fit(
+        x, dist_hooks=DistHooks(on_iteration=killer))
+    failover = {
+        "workers": 2, "mode": "distributed_failover",
+        "ms_per_iter": float(np.mean(r.iter_times_s[1:]) * 1e3),
+        "failover_chain_bitwise": bitwise(r),
+        "failover_wall_s": round(_time.time() - t0, 2),
+        "n_failover_events": len([e for e in r.recoveries
+                                  if e["kind"] == "worker_failover"]),
+        "reassignments": r.dist["reassignments"],
+        "respawns": r.dist["respawns"],
+    }
+    print("  " + "  ".join(f"{k}={v}" for k, v in failover.items()),
+          flush=True)
+    return {"config": {"component": "gaussian", "N": n, "d": d,
+                       "k_max": 32, "iters": iters,
+                       "tile_size": STATS_BLOCK},
+            "results": rows, "failover": failover}
+
+
+def _write_json(out_json: str, scaling=None, oocore=None, dist=None):
     payload = {
         "bench": "scaling",
         "backend": jax.default_backend(),
         "host": platform.platform(),
         "scaling": scaling,
         "out_of_core": oocore,
+        "dist": dist,
     }
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)
@@ -184,7 +269,8 @@ def main(argv=None):
     if args.oocore:
         _write_json(args.out_json,
                     scaling=run_scaling_smoke(iters=args.iters),
-                    oocore=run_oocore(iters=args.iters))
+                    oocore=run_oocore(iters=args.iters),
+                    dist=run_dist(iters=args.iters))
     else:
         run(out_dir=args.out_dir, out_json=args.out_json,
             oocore_iters=args.iters)

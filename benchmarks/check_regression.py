@@ -34,7 +34,14 @@ compares them against the baselines committed at the repo root
    run-to-run noise — no threshold applies), serving must stay
    ``soft_matches_loglik``, and the ``recovery`` row's fault-tolerance
    booleans (guardrail chain-neutrality, faulted-fit recovery,
-   checkpoint/resume bitwise round trip) must all hold.
+   checkpoint/resume bitwise round trip) must all hold, the ``dist``
+   leg's ``dist_chain_bitwise`` must stay True at every worker count
+   (the multi-process coordinator/worker chain is bit-for-bit the
+   single-process tiled chain — worker count is a wall-clock knob,
+   never a chain knob), and its failover run must stay
+   ``failover_chain_bitwise`` with at least one ``worker_failover``
+   event actually logged (otherwise the kill never landed and the run
+   proves nothing).
 
 Stdlib-only on purpose: the gate job needs no jax install — it just
 reads two directories of JSON.
@@ -211,6 +218,34 @@ def check_scaling(gate: Gate, fresh: dict, base: dict) -> None:
             gate.not_growing(f"oocore[{tag}] resident_footprint_ratio",
                              row.get("resident_footprint_ratio"),
                              (brow or {}).get("resident_footprint_ratio"))
+    # distributed invariants (ISSUE 9): all within-run, read from the
+    # FRESH payload only — they are booleans comparing this run's
+    # multi-process chains against this run's single-process baseline,
+    # so a baseline predating the dist leg must not mask them
+    f_dist = fresh.get("dist") or {}
+    d_rows = [r for r in f_dist.get("results") or []
+              if r.get("mode") == "distributed"]
+    if not d_rows:
+        gate.invariant("dist leg present", False, "no distributed rows")
+    for row in d_rows:
+        w = row.get("workers")
+        gate.invariant(f"dist[workers={w}] dist_chain_bitwise "
+                       "(multi-process chain == single-process chain)",
+                       row.get("dist_chain_bitwise") is True,
+                       f"got {row.get('dist_chain_bitwise')}")
+        gate.invariant(f"dist[workers={w}] clean run has no failover "
+                       "events",
+                       row.get("n_failover_events") == 0,
+                       f"got {row.get('n_failover_events')}")
+    fo = f_dist.get("failover") or {}
+    gate.invariant("dist failover_chain_bitwise (SIGKILL'd worker fails "
+                   "over on the same bits)",
+                   fo.get("failover_chain_bitwise") is True,
+                   f"got {fo.get('failover_chain_bitwise')}")
+    gate.invariant("dist failover logged >= 1 worker_failover event "
+                   "(the kill actually landed)",
+                   (fo.get("n_failover_events") or 0) >= 1,
+                   f"got {fo.get('n_failover_events')}")
 
 
 def check_serve(gate: Gate, fresh: dict, base: dict) -> None:

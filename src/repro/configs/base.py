@@ -239,6 +239,22 @@ class DPMMConfig:
     # DivergenceError. Every event lands in FitResult.recoveries.
     guardrails: bool = True
     max_recoveries: int = 3
+    # ---- elastic multi-process sampling (repro.dist) ----------------------
+    # workers=N spawns N local worker subprocesses, each owning a
+    # contiguous STATS_BLOCK-aligned row-range shard of x behind the
+    # DataSource protocol; a coordinator process keeps ModelState and the
+    # O(K) steps and folds the workers' per-block substat partials in
+    # fixed global order, so the distributed chain is bitwise identical
+    # to the single-process tiled fit at ANY worker count. Workers
+    # heartbeat every worker_heartbeat_s; a work item that misses
+    # worker_deadline_s (hung read, wedged process) gets its worker
+    # killed, its row-range reassigned to a survivor, and the worker
+    # respawned at most max_worker_retries times per slot —
+    # WorkerLostError fires only when no survivor can take the range.
+    workers: Optional[int] = None
+    worker_deadline_s: float = 120.0
+    worker_heartbeat_s: float = 0.5
+    max_worker_retries: int = 2
     seed: int = 0
 
     def __post_init__(self):
@@ -291,6 +307,27 @@ class DPMMConfig:
             raise ValueError(
                 f"DPMMConfig.max_recoveries must be >= 0, got "
                 f"{self.max_recoveries}")
+        if self.workers is not None:
+            positive("workers", self.workers)
+            if self.k_max == "auto":
+                raise ValueError(
+                    "DPMMConfig.workers requires a fixed integer k_max: "
+                    "the growable slab re-plans shapes mid-fit, which the "
+                    "worker protocol does not ship")
+            if self.shard_features:
+                raise ValueError(
+                    "DPMMConfig.workers does not compose with "
+                    "shard_features yet: worker shards split rows, not "
+                    "columns")
+        if self.worker_deadline_s <= 0 or self.worker_heartbeat_s <= 0:
+            raise ValueError(
+                "DPMMConfig.worker_deadline_s/worker_heartbeat_s must be "
+                f"> 0, got {self.worker_deadline_s}/"
+                f"{self.worker_heartbeat_s}")
+        if self.max_worker_retries < 0:
+            raise ValueError(
+                f"DPMMConfig.max_worker_retries must be >= 0, got "
+                f"{self.max_worker_retries}")
 
 
 @dataclasses.dataclass(frozen=True)

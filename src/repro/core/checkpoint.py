@@ -268,6 +268,26 @@ def load_model(path: Union[str, io.IOBase]
         key=jax.random.wrap_key_data(model.key, impl=impl)), family
 
 
+def dumps_model(model: ModelState, component: str) -> bytes:
+    """Serialize ``model`` to checkpoint-format bytes (CRC'd npz).
+
+    The in-memory twin of :func:`save_model` — used by the distributed
+    driver (repro.dist) to ship ModelState over the wire each sweep with
+    the exact on-disk guarantees: raw array bytes (lossless, so the
+    worker sees the coordinator's model bit-for-bit), per-leaf CRC32,
+    and typed-PRNG-key round-tripping via :func:`loads_model`."""
+    buf = io.BytesIO()
+    save_model(buf, model, component)
+    return buf.getvalue()
+
+
+def loads_model(data: bytes) -> Tuple[ModelState, ComponentFamily]:
+    """Inverse of :func:`dumps_model`; verifies CRCs like
+    :func:`load_model` and raises :class:`CheckpointCorrupt` on any
+    truncation or bit flip."""
+    return load_model(io.BytesIO(data))
+
+
 # ---------------------------------------------------------------------------
 # Rotation: {prefix}-{it:08d}.npz members, newest-valid resolution
 # ---------------------------------------------------------------------------

@@ -56,6 +56,19 @@ class DivergenceError(RuntimeError):
         self.recoveries: List[dict] = list(recoveries or [])
 
 
+class WorkerLostError(RuntimeError):
+    """A distributed worker shard was lost (died, hung past its deadline,
+    or was killed) and failover could not finish the fit: no surviving
+    worker was available and the ``max_worker_retries`` respawn budget
+    was exhausted. ``recoveries`` holds the per-event log — including the
+    ``worker_failover`` records leading up to the failure — for
+    post-mortems (same records as ``FitResult.recoveries``)."""
+
+    def __init__(self, message: str, recoveries: Optional[List[dict]] = None):
+        super().__init__(message)
+        self.recoveries: List[dict] = list(recoveries or [])
+
+
 @dataclasses.dataclass(frozen=True)
 class RetryPolicy:
     """Bounded retry-with-backoff for streamed tile reads.
@@ -108,6 +121,16 @@ def read_block_checked(source, start: int, stop: int,
                 last = (f"non-finite values in {bad.size} row(s), first "
                         f"at global row {start + int(bad[0])}")
             else:
+                if attempt and on_event is not None:
+                    # recovered after retries: leave an audit trail, not
+                    # just the per-attempt fault records (a fit that only
+                    # succeeded on re-reads should say so in recoveries)
+                    on_event({"kind": "io_retry",
+                              "rows": [int(start), int(stop)],
+                              "attempts": attempt + 1,
+                              "detail": f"recovered after {attempt} "
+                                        f"retr{'y' if attempt == 1 else 'ies'}"
+                                        f"; last failure: {last}"})
                 return rows
         if on_event is not None:
             on_event({"kind": "tile_read_fault",

@@ -375,12 +375,18 @@ class FitResult:
     # final chain_score per chain: scalar (C=1) or (C,) — the
     # select_best ranking; the full trace is history["score"]
     score: Any = None
-    # resilience event log: tile-read retries ('tile_read_fault') and
-    # divergence rollbacks ('divergence_rollback') the fit survived.
-    # Empty for a clean fit. NOT part of ``history`` on purpose — the
-    # golden-chain fingerprints hash history, and recoveries are
-    # operational metadata, not chain state.
+    # resilience event log: tile-read retries ('tile_read_fault'),
+    # recovered retries ('io_retry'), divergence rollbacks
+    # ('divergence_rollback'), and distributed worker failovers
+    # ('worker_failover') the fit survived. Empty for a clean fit. NOT
+    # part of ``history`` on purpose — the golden-chain fingerprints
+    # hash history, and recoveries are operational metadata, not chain
+    # state.
     recoveries: List[dict] = dataclasses.field(default_factory=list)
+    # distributed-fit metadata (cfg.workers set): worker count, the
+    # per-worker shard row ranges, and respawn/reassignment tallies.
+    # None for single-process fits.
+    dist: Optional[Dict[str, Any]] = None
 
     def chain(self, c: int) -> "FitResult":
         """Single-chain view of chain ``c`` (bitwise — pure slicing)."""
@@ -491,7 +497,7 @@ class DPMM:
     def fit(self, x, iters: Optional[int] = None, verbose: bool = False,
             *, n_chains: int = 1, key: Optional[jax.Array] = None,
             init_state: Optional[ModelState] = None,
-            resume: bool = False) -> FitResult:
+            resume: bool = False, dist_hooks: Any = None) -> FitResult:
         """Fit to ``x``: an (N, d) array (resident fast path) or any
         ``DataSource`` (e.g. ``HostTiledSource`` over an np.memmap for
         out-of-core data). ``cfg.tile_size`` forces the tiled plane even
@@ -516,6 +522,16 @@ class DPMM:
         checkpoint on disk yet it is a fresh fit, which is what makes
         blind ``fit(resume=True)`` re-runs idempotent-ish: run, crash,
         rerun until done. Mutually exclusive with ``init_state``.
+
+        ``cfg.workers=N`` routes the fit through the elastic
+        multi-process driver (repro.dist): N worker processes each
+        stream a row-range shard while this process keeps the model.
+        The chain is bitwise identical to the single-process tiled fit
+        at any worker count, including across worker failover.
+        ``dist_hooks`` (a ``repro.dist.DistHooks``) injects worker-side
+        faults / iteration callbacks for chaos tests. Resume and
+        init_state compose unchanged — they are resolved here, before
+        the driver dispatch.
         """
         source = as_source(x)
         iters = iters if iters is not None else self.cfg.iters
@@ -557,12 +573,35 @@ class DPMM:
                     f"init_state.active has shape {got}, expected {want} "
                     f"for n_chains={n_chains}, k_max={self.cfg.k_max} — "
                     "checkpoint/config/chain-count mismatch")
+        if self.cfg.workers:
+            return self._fit_distributed(source, iters, verbose,
+                                         n_chains=n_chains, key=key,
+                                         init_state=init_state,
+                                         dist_hooks=dist_hooks)
         if self.cfg.tile_size is None and source.resident() is not None:
             return self._fit_resident(source, iters, verbose,
                                       n_chains=n_chains, key=key,
                                       init_state=init_state)
         return self._fit_tiled(source, iters, verbose, n_chains=n_chains,
                                key=key, init_state=init_state)
+
+    def _fit_distributed(self, source: DataSource, iters: int,
+                         verbose: bool, n_chains: int = 1,
+                         key: Optional[jax.Array] = None,
+                         init_state: Optional[ModelState] = None,
+                         dist_hooks: Any = None) -> FitResult:
+        """Third fit driver: coordinator/worker shards (repro.dist).
+        Lazy import — single-process fits never touch the subprocess /
+        socket machinery."""
+        if n_chains != 1:
+            raise ValueError(
+                "cfg.workers does not compose with n_chains > 1 yet: "
+                "chain batching rides the tile bodies, which the "
+                "distributed driver runs per worker shard. Run one "
+                "distributed fit per chain key instead.")
+        from repro.dist.coordinator import fit_distributed
+        return fit_distributed(self, source, iters, verbose, key=key,
+                               init_state=init_state, hooks=dist_hooks)
 
     def _setup(self, source: DataSource):
         cfg = self.cfg

@@ -5,11 +5,17 @@ paths) is only trustworthy if it is *exercised* — this wrapper injects
 the three fault classes a real streamed fit meets, on a schedule that is
 deterministic and replayable:
 
- - ``io``    — ``read_block`` raises ``IOError`` (transient device/NFS
-   fault);
- - ``nan``   — the returned tile has rows overwritten with NaN/Inf (a
-   bit-flipped or torn buffer);
- - ``short`` — the returned tile is truncated (partial read).
+ - ``io``        — ``read_block`` raises ``IOError`` (transient
+   device/NFS fault);
+ - ``nan``       — the returned tile has rows overwritten with NaN/Inf
+   (a bit-flipped or torn buffer);
+ - ``short``     — the returned tile is truncated (partial read);
+ - ``hang``      — ``read_block`` sleeps ``hang_s`` seconds before
+   returning clean data (a wedged disk / dead NFS mount / stuck worker;
+   exercises the distributed coordinator's per-work deadlines);
+ - ``slow_read`` — ``read_block`` sleeps ``slow_read_s`` seconds before
+   returning clean data (a straggler, not a failure: short enough that
+   deadlines must NOT fire and the chain must stay bitwise identical).
 
 Faults key on the **read-call index**, not the row range: each
 ``read_block`` call increments a counter, and the fault decision for
@@ -36,28 +42,37 @@ iteration loop under test.
 """
 from __future__ import annotations
 
+import time
 from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.data.source import DataSource
 
-_KINDS = ("io", "nan", "short")
+# order matters: probabilities are folded cumulatively in this order, so
+# appending new kinds keeps existing (p_io, p_nan, p_short) schedules —
+# and therefore existing chaos-test chains — bit-identical
+_KINDS = ("io", "nan", "short", "hang", "slow_read")
 
 
 class FaultInjectingSource(DataSource):
     """Wrap ``inner`` with a seeded, deterministic fault schedule.
 
     Either give per-call probabilities (``p_io`` / ``p_nan`` /
-    ``p_short``, drawn independently per read-call index from the seed)
-    or an explicit ``schedule`` mapping call index -> fault kind.
+    ``p_short`` / ``p_hang`` / ``p_slow_read``, drawn independently per
+    read-call index from the seed) or an explicit ``schedule`` mapping
+    call index -> fault kind. ``hang_s`` / ``slow_read_s`` set the two
+    latency kinds' sleep durations (the *when* is seeded; the duration is
+    a fixed, deterministic parameter so deadline tests are exact).
     ``max_faults`` bounds the total injections (None = unbounded).
     ``injected`` logs every injection for assertions.
     """
 
     def __init__(self, inner: DataSource, seed: int = 0,
                  p_io: float = 0.0, p_nan: float = 0.0,
-                 p_short: float = 0.0,
+                 p_short: float = 0.0, p_hang: float = 0.0,
+                 p_slow_read: float = 0.0,
+                 hang_s: float = 30.0, slow_read_s: float = 0.02,
                  schedule: Optional[Dict[int, str]] = None,
                  max_faults: Optional[int] = None):
         if schedule:
@@ -65,14 +80,21 @@ class FaultInjectingSource(DataSource):
             if bad:
                 raise ValueError(
                     f"unknown fault kind(s) {bad}; known: {_KINDS}")
-        if min(p_io, p_nan, p_short) < 0 or p_io + p_nan + p_short > 1:
+        probs = (p_io, p_nan, p_short, p_hang, p_slow_read)
+        if min(probs) < 0 or sum(probs) > 1:
             raise ValueError(
                 "fault probabilities must be >= 0 and sum to <= 1, got "
-                f"p_io={p_io} p_nan={p_nan} p_short={p_short}")
+                f"p_io={p_io} p_nan={p_nan} p_short={p_short} "
+                f"p_hang={p_hang} p_slow_read={p_slow_read}")
+        if hang_s < 0 or slow_read_s < 0:
+            raise ValueError("hang_s/slow_read_s must be >= 0, got "
+                             f"hang_s={hang_s} slow_read_s={slow_read_s}")
         self._inner = inner
         self.n, self.d = inner.n, inner.d
         self._seed = int(seed)
-        self._p = (p_io, p_nan, p_short)
+        self._p = probs
+        self._hang_s = float(hang_s)
+        self._slow_read_s = float(slow_read_s)
         self._schedule = dict(schedule) if schedule else None
         self._max_faults = max_faults
         self.calls = 0
@@ -98,6 +120,13 @@ class FaultInjectingSource(DataSource):
             raise IOError(
                 f"injected I/O fault (read call {i}, "
                 f"rows [{start}, {stop}))")
+        if kind in ("hang", "slow_read"):
+            # latency faults return CLEAN data after the sleep: the chain
+            # must be unaffected — only wall clock (and, for hang, the
+            # coordinator's deadline machinery) sees these
+            time.sleep(self._hang_s if kind == "hang"
+                       else self._slow_read_s)
+            return self._inner.read_block(start, stop)
         rows = np.array(self._inner.read_block(start, stop))
         rng = self._rng(i)
         if kind == "nan":

@@ -1,0 +1,152 @@
+"""Wire protocol for the elastic multi-process sampler (repro.dist).
+
+One frame = one message. The layout is deliberately boring:
+
+    +--------+----------+------------+---------------------------+
+    | b"DPMM" | crc32    | length     | npz payload (length bytes)|
+    | 4 bytes | <I (LE)  | <Q (LE)    |                           |
+    +--------+----------+------------+---------------------------+
+
+The payload is a standard ``np.savez`` archive holding a ``__msg__``
+uint8 leaf (UTF-8 JSON: ``{"kind": ..., "meta": {...}}``) plus any
+number of ``a_<name>`` array leaves. Arrays travel as raw npy bytes —
+lossless, which is what lets the coordinator ship ModelState / plans and
+fold worker partials **bitwise**.
+
+Failure handling is typed and total: a bad magic, a truncated header or
+payload, an oversized length field, a CRC mismatch, or an unparseable
+archive all raise :class:`ProtocolError` from ``recv_msg`` — never
+garbage data, and never a hang (EOF surfaces immediately; callers that
+need bounded waits set a socket timeout, which surfaces here as
+``socket.timeout``/``OSError``). The CRC is checked before the payload
+is parsed, so a bit-flipped frame is rejected without interpreting it.
+
+``pack_tree`` / ``unpack_tree`` flatten a fixed-structure pytree (e.g. a
+``SplitMergePlan``) to numbered array leaves and back; the receiver
+supplies a structural template, so the wire carries no pickled code.
+"""
+from __future__ import annotations
+
+import io
+import json
+import struct
+import zlib
+from typing import Any, Dict, Optional, Tuple
+
+import numpy as np
+
+MAGIC = b"DPMM"
+_HEADER = struct.Struct("<4sIQ")          # magic, crc32, payload length
+# Frames hold O(k_max * d) model state or O(blocks * k_c * d) partials —
+# megabytes at most. The cap exists so a corrupted length field fails
+# loudly instead of attempting a multi-GiB allocation.
+MAX_FRAME_BYTES = 1 << 31
+
+
+class ProtocolError(RuntimeError):
+    """A frame failed validation (bad magic / truncation / EOF / CRC
+    mismatch / unparseable payload). The connection is unusable after
+    this — framing is lost — so callers treat it as peer loss."""
+
+
+def _recv_exact(sock, n: int) -> bytes:
+    """Read exactly ``n`` bytes or raise :class:`ProtocolError` on EOF /
+    short stream (a killed peer closes mid-frame; that must never hang
+    or return a partial buffer)."""
+    chunks = []
+    got = 0
+    while got < n:
+        chunk = sock.recv(min(n - got, 1 << 20))
+        if not chunk:
+            raise ProtocolError(
+                f"connection closed mid-frame: wanted {n} bytes, "
+                f"got {got}")
+        chunks.append(chunk)
+        got += len(chunk)
+    return b"".join(chunks)
+
+
+def send_msg(sock, kind: str, meta: Optional[dict] = None,
+             arrays: Optional[Dict[str, np.ndarray]] = None,
+             lock=None) -> None:
+    """Frame and send one message. ``lock`` (if given) serializes the
+    ``sendall`` — the worker's heartbeat thread and main loop share one
+    socket, and interleaved frames would corrupt the stream."""
+    buf = io.BytesIO()
+    msg = json.dumps({"kind": kind, "meta": meta or {}}).encode("utf-8")
+    named = {f"a_{k}": np.asarray(v) for k, v in (arrays or {}).items()}
+    np.savez(buf, __msg__=np.frombuffer(msg, np.uint8), **named)
+    payload = buf.getvalue()
+    if len(payload) > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"refusing to send {len(payload)}-byte frame "
+            f"(cap {MAX_FRAME_BYTES})")
+    frame = _HEADER.pack(MAGIC, zlib.crc32(payload), len(payload)) + payload
+    if lock is not None:
+        with lock:
+            sock.sendall(frame)
+    else:
+        sock.sendall(frame)
+
+
+def recv_msg(sock) -> Tuple[str, dict, Dict[str, np.ndarray]]:
+    """Receive one frame; returns ``(kind, meta, arrays)``. Raises
+    :class:`ProtocolError` on any validation failure (see module doc)."""
+    magic, crc, length = _HEADER.unpack(_recv_exact(sock, _HEADER.size))
+    if magic != MAGIC:
+        raise ProtocolError(
+            f"bad frame magic {magic!r} (want {MAGIC!r}) — stream is "
+            "desynchronized or the peer is not a repro.dist endpoint")
+    if length > MAX_FRAME_BYTES:
+        raise ProtocolError(
+            f"frame length {length} exceeds cap {MAX_FRAME_BYTES} — "
+            "corrupted header")
+    payload = _recv_exact(sock, length)
+    got_crc = zlib.crc32(payload)
+    if got_crc != crc:
+        raise ProtocolError(
+            f"frame CRC mismatch: header says {crc:#010x}, payload "
+            f"hashes to {got_crc:#010x} — bit flip or truncation in "
+            "transit")
+    try:
+        with np.load(io.BytesIO(payload), allow_pickle=False) as z:
+            msg = json.loads(bytes(np.asarray(z["__msg__"])).decode("utf-8"))
+            arrays = {k[2:]: np.asarray(z[k]) for k in z.files
+                      if k.startswith("a_")}
+    except ProtocolError:
+        raise
+    except Exception as e:                      # zipfile/json/KeyError zoo
+        raise ProtocolError(
+            f"unparseable frame payload ({type(e).__name__}: {e})") from e
+    kind = msg.get("kind")
+    if not isinstance(kind, str):
+        raise ProtocolError(f"frame __msg__ has no string 'kind': {msg!r}")
+    return kind, msg.get("meta", {}), arrays
+
+
+# ---------------------------------------------------------------------------
+# Pytree <-> numbered array leaves (structure supplied by the receiver)
+# ---------------------------------------------------------------------------
+def pack_tree(tree: Any, prefix: str) -> Dict[str, np.ndarray]:
+    """Flatten ``tree`` into ``{prefix}{i}`` host arrays in canonical
+    (jax flatten) leaf order."""
+    import jax
+    return {f"{prefix}{i}": np.asarray(leaf)
+            for i, leaf in enumerate(jax.tree_util.tree_leaves(tree))}
+
+
+def unpack_tree(template: Any, arrays: Dict[str, np.ndarray],
+                prefix: str) -> Any:
+    """Rebuild a pytree shaped like ``template`` from ``pack_tree``
+    leaves. Raises :class:`ProtocolError` if leaves are missing — a
+    structurally wrong message must not reach a jitted function."""
+    import jax
+    treedef = jax.tree_util.tree_structure(template)
+    try:
+        leaves = [arrays[f"{prefix}{i}"]
+                  for i in range(treedef.num_leaves)]
+    except KeyError as e:
+        raise ProtocolError(
+            f"message is missing pytree leaf {e} for prefix "
+            f"{prefix!r}") from e
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -84,6 +84,14 @@ def main(argv=None):
                          "remaining iterations run. No checkpoint yet "
                          "means a fresh fit — rerunning the same "
                          "command until it finishes is safe")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="elastic multi-process sampling: spawn this many "
+                         "worker shard processes (repro.dist), each "
+                         "streaming a row range of x; the chain is "
+                         "bitwise identical to the single-process fit at "
+                         "any worker count, and SIGKILL'd/hung workers "
+                         "fail over to survivors. Composes with "
+                         "--tile-size/--checkpoint-every/--resume")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -103,6 +111,8 @@ def main(argv=None):
                    else overrides.get("tile_size")),
         checkpoint_path=(args.checkpoint_path or None),
         checkpoint_every=args.checkpoint_every,
+        workers=(args.workers if args.workers is not None
+                 else overrides.get("workers")),
         seed=args.seed,
     )
     if (args.resume or args.checkpoint_every) and not args.checkpoint_path:
@@ -127,7 +137,8 @@ def main(argv=None):
     source = as_source(x)
     print(f"DPMM fit: N={source.n} d={source.d} component="
           f"{cfg.component} alpha={cfg.alpha} iters={cfg.iters} "
-          f"tile_size={cfg.tile_size}")
+          f"tile_size={cfg.tile_size}"
+          + (f" workers={cfg.workers}" if cfg.workers else ""))
     t0 = time.time()
     model = DPMM(cfg)
     result = model.fit(source, verbose=args.verbose,
@@ -177,6 +188,10 @@ def main(argv=None):
             "iter_times_s": result.iter_times_s,
             "device_bytes": result.device_bytes,
             "config": dataclasses.asdict(cfg),
+            # distributed fits: per-worker shard ranges + failover
+            # tallies, and the full recovery event log
+            "dist": result.dist,
+            "recoveries": result.recoveries,
         }
         with open(args.result_path, "w") as f:
             json.dump(out, f)

@@ -1,0 +1,408 @@
+"""Distributed sampling chaos suite (ISSUE 9): the elastic
+coordinator/worker driver (repro.dist) must be *bitwise* the
+single-process tiled driver, and must stay so under real failures.
+
+Covers:
+
+ - the wire protocol (repro.dist.proto): lossless roundtrip; truncated /
+   bit-flipped / bad-magic / oversize frames raise ``ProtocolError`` and
+   never deadlock;
+ - 2-worker fits bitwise identical (labels, full history, stats,
+   substats; params to f32 ULPs) to the single-process tiled fit, for
+   every registered family;
+ - failover: a worker SIGKILL'd mid-fit and a worker hung on an injected
+   I/O hang both fail over (range reassigned to survivors, respawn
+   within budget) and the fit completes **bitwise identical** to the
+   clean run with a ``worker_failover`` recovery event;
+ - straggler tolerance: injected ``slow_read`` latency never trips a
+   failover and leaves the chain bitwise clean;
+ - typed exhaustion: with no survivors and the respawn budget spent the
+   fit raises ``WorkerLostError`` carrying the failover log;
+ - coordinator death: a distributed fit SIGKILL'd mid-run resumes from
+   its auto-checkpoint rotation — still distributed — to the bitwise
+   chain;
+ - config/CLI plumbing: cfg.workers validation, --workers end to end.
+
+The comparisons pin ``mesh=make_data_mesh(1)`` and
+``tile_size=STATS_BLOCK``: the distributed driver runs on a 1-device
+mesh by contract (its fold replay is the sequential 1-shard fold), and
+tile size is already proven bitwise-neutral (test_tiled_parity).
+"""
+import json
+import os
+import signal
+import socket
+import struct
+import subprocess
+import sys
+import textwrap
+import threading
+import zlib
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import DPMMConfig
+from repro.core import checkpoint as ckpt
+from repro.core.distributed import make_data_mesh
+from repro.core.gibbs import STATS_BLOCK
+from repro.core.resilience import WorkerLostError
+from repro.core.sampler import DPMM
+from repro.dist import DistHooks, proto
+from repro.dist.coordinator import shard_ranges
+from repro.dist.proto import ProtocolError
+from repro.data.synthetic import generate_gmm, generate_mnmm, generate_pmm
+
+ALL = ("gaussian", "diag_gaussian", "multinomial", "poisson")
+N, D, K_MAX = 3000, 4, 16          # 3 STATS_BLOCK blocks: 2 ranges @ W=2
+
+
+def _data(name, n=N, d=D, k=4):
+    if name in ("gaussian", "diag_gaussian"):
+        return generate_gmm(n, d, k, seed=0, sep=10.0)
+    if name == "poisson":
+        return generate_pmm(n, d, k, seed=0)
+    return generate_mnmm(n, 16, k, seed=0)
+
+
+def _cfg(name="gaussian", **kw):
+    base = dict(component=name, alpha=10.0, iters=6, k_max=K_MAX,
+                burnout=2, tile_size=STATS_BLOCK)
+    base.update(kw)
+    return DPMMConfig(**base)
+
+
+def _single(name, x, **kw):
+    return DPMM(_cfg(name, **kw), mesh=make_data_mesh(1)).fit(x)
+
+
+def _assert_bitwise(a, b, what):
+    assert np.array_equal(a.labels, b.labels), f"{what}: labels differ"
+    for key in a.history:
+        assert np.array_equal(a.history[key], b.history[key]), (
+            f"{what}: history[{key}] differs")
+    for name in ("stats", "substats"):
+        for la, lb in zip(jax.tree_util.tree_leaves(getattr(a.state, name)),
+                          jax.tree_util.tree_leaves(getattr(b.state, name))):
+            assert np.array_equal(np.asarray(la), np.asarray(lb)), (
+                f"{what}: {name} differ")
+    for la, lb in zip(jax.tree_util.tree_leaves(a.state.params),
+                      jax.tree_util.tree_leaves(b.state.params)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"{what}: params diverged "
+                                           "beyond compilation-level ULPs")
+
+
+# ---------------------------------------------------------------------------
+# wire protocol: typed failure, no deadlock
+# ---------------------------------------------------------------------------
+def _pair():
+    a, b = socket.socketpair()
+    a.settimeout(5.0)
+    b.settimeout(5.0)             # any hang surfaces as socket.timeout
+    return a, b
+
+
+def test_proto_roundtrip_lossless():
+    a, b = _pair()
+    arrays = {"x": np.arange(12, dtype=np.float32).reshape(3, 4),
+              "lab": np.array([1, 2, 3], np.int32)}
+    proto.send_msg(a, "work", {"lo": 0, "hi": 3}, arrays)
+    kind, meta, got = proto.recv_msg(b)
+    assert kind == "work" and meta == {"lo": 0, "hi": 3}
+    for k, v in arrays.items():
+        assert got[k].dtype == v.dtype
+        np.testing.assert_array_equal(got[k], v)
+    a.close(), b.close()
+
+
+def test_proto_tree_roundtrip():
+    from repro.dist.worker import plan_template
+    tpl = plan_template(K_MAX, D)
+    packed = proto.pack_tree(tpl, "plan")
+    rebuilt = proto.unpack_tree(tpl, packed, "plan")
+    for la, lb in zip(jax.tree_util.tree_leaves(tpl),
+                      jax.tree_util.tree_leaves(rebuilt)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+    with pytest.raises(ProtocolError, match="missing pytree leaf"):
+        proto.unpack_tree(tpl, dict(list(packed.items())[:-1]), "plan")
+
+
+def _frame(kind="work", meta=None, arrays=None):
+    """A valid wire frame, captured for mutation."""
+    a, b = _pair()
+    proto.send_msg(a, kind, meta, arrays)
+    chunks = []
+    a.close()
+    while True:
+        c = b.recv(1 << 20)
+        if not c:
+            break
+        chunks.append(c)
+    b.close()
+    return b"".join(chunks)
+
+
+def _recv_of(raw):
+    """Feed raw bytes then EOF to a recv_msg call (bounded by timeout)."""
+    a, b = _pair()
+    a.sendall(raw)
+    a.close()
+    return proto.recv_msg(b)
+
+
+def test_proto_truncated_frame_raises():
+    raw = _frame(arrays={"x": np.ones((8, 8), np.float32)})
+    for cut in (3, proto._HEADER.size - 1, proto._HEADER.size + 10,
+                len(raw) - 1):
+        with pytest.raises(ProtocolError, match="mid-frame"):
+            _recv_of(raw[:cut])
+
+
+def test_proto_bitflip_raises_crc():
+    raw = bytearray(_frame(arrays={"x": np.ones((8, 8), np.float32)}))
+    raw[proto._HEADER.size + 40] ^= 0x10       # flip one payload bit
+    with pytest.raises(ProtocolError, match="CRC mismatch"):
+        _recv_of(bytes(raw))
+
+
+def test_proto_bad_magic_raises():
+    raw = bytearray(_frame())
+    raw[:4] = b"HTTP"
+    with pytest.raises(ProtocolError, match="bad frame magic"):
+        _recv_of(bytes(raw))
+
+
+def test_proto_oversize_length_rejected_before_alloc():
+    hdr = proto._HEADER.pack(proto.MAGIC, 0, proto.MAX_FRAME_BYTES + 1)
+    with pytest.raises(ProtocolError, match="exceeds cap"):
+        _recv_of(hdr)
+
+
+def test_proto_garbage_payload_raises():
+    payload = b"not an npz archive at all"
+    raw = proto._HEADER.pack(proto.MAGIC, zlib.crc32(payload),
+                             len(payload)) + payload
+    with pytest.raises(ProtocolError, match="unparseable"):
+        _recv_of(raw)
+
+
+# ---------------------------------------------------------------------------
+# shard layout
+# ---------------------------------------------------------------------------
+def test_shard_ranges_block_aligned_cover():
+    for n, w in [(3000, 2), (3000, 3), (1024, 4), (100, 2), (5000, 1)]:
+        r = shard_ranges(n, w, STATS_BLOCK)
+        assert r[0][0] == 0 and r[-1][1] == n
+        for (l0, h0, _), (l1, _h1, _2) in zip(r, r[1:]):
+            assert h0 == l1                      # contiguous cover
+            assert h0 % STATS_BLOCK == 0         # cut on the block grid
+    # more workers than blocks: extras get no range (failover capacity)
+    assert len(shard_ranges(100, 4, STATS_BLOCK)) == 1
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity: distributed == single-process tiled, every family
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ALL)
+def test_two_worker_fit_bitwise_all_families(name):
+    x, _ = _data(name)
+    single = _single(name, x)
+    dist = DPMM(_cfg(name, workers=2)).fit(x)
+    _assert_bitwise(single, dist, f"{name} workers=2")
+    assert dist.dist["workers"] == 2
+    assert dist.dist["shard_ranges"][0][0] == 0
+    assert dist.dist["shard_ranges"][-1][1] == len(dist.labels)
+    assert dist.dist["reassignments"] == 0 and dist.recoveries == []
+
+
+# ---------------------------------------------------------------------------
+# failover: SIGKILL, hang, straggler, exhaustion
+# ---------------------------------------------------------------------------
+def test_sigkill_failover_bitwise():
+    """Kill worker 0 mid-fit: its range is reassigned to the survivor,
+    the slot respawns, and the chain is bitwise the clean run's."""
+    x, _ = _data("gaussian")
+    single = _single("gaussian", x)
+    killed = []
+
+    def killer(it, coord):
+        if it == 2 and not killed:
+            pid = coord.worker_pids()[0]
+            os.kill(pid, signal.SIGKILL)
+            killed.append(pid)
+
+    dist = DPMM(_cfg("gaussian", workers=2)).fit(
+        x, dist_hooks=DistHooks(on_iteration=killer))
+    assert killed, "hook never fired"
+    _assert_bitwise(single, dist, "sigkill failover")
+    ev = [e for e in dist.recoveries if e["kind"] == "worker_failover"]
+    assert ev and ev[0]["worker"] == 0 and ev[0]["respawn"]
+    assert dist.dist["reassignments"] >= 1
+    assert dist.dist["respawns"] >= 1
+
+
+def test_hang_failover_bitwise():
+    """Worker 0's first shard read hangs (injected wedge, far beyond the
+    deadline): heartbeats keep flowing, so only the per-work deadline
+    can catch it. The coordinator kills the hung process, the survivor
+    absorbs the range, and the chain stays bitwise clean."""
+    x, _ = _data("gaussian")
+    single = _single("gaussian", x)
+    hooks = DistHooks(worker_faults={
+        0: {"schedule": {0: "hang"}, "hang_s": 600.0}})
+    dist = DPMM(_cfg("gaussian", workers=2, worker_deadline_s=20.0,
+                     max_worker_retries=0)).fit(x, dist_hooks=hooks)
+    _assert_bitwise(single, dist, "hang failover")
+    ev = [e for e in dist.recoveries if e["kind"] == "worker_failover"]
+    assert ev and ev[0]["worker"] == 0
+    assert "deadline" in ev[0]["detail"]
+    assert not ev[0]["respawn"]                  # budget was zero
+    assert dist.dist["reassignments"] >= 1
+
+
+def test_slow_read_is_not_a_failure():
+    """Injected straggler latency (well under the deadline) must neither
+    trip a failover nor perturb the chain."""
+    x, _ = _data("gaussian")
+    single = _single("gaussian", x)
+    hooks = DistHooks(worker_faults={
+        0: {"p_slow_read": 1.0, "slow_read_s": 0.01}})
+    dist = DPMM(_cfg("gaussian", workers=2)).fit(x, dist_hooks=hooks)
+    _assert_bitwise(single, dist, "slow_read")
+    assert [e for e in dist.recoveries
+            if e["kind"] == "worker_failover"] == []
+    assert dist.dist["reassignments"] == 0
+
+
+def test_worker_lost_error_when_no_survivors():
+    """One worker, it hangs on every read, zero respawn budget: the fit
+    must fail with the typed error carrying the failover log — not hang,
+    not return garbage."""
+    x, _ = _data("gaussian", n=1024)
+    hooks = DistHooks(worker_faults={
+        0: {"schedule": dict.fromkeys(range(100), "hang"),
+            "hang_s": 600.0}})
+    with pytest.raises(WorkerLostError, match="no live workers") as ei:
+        DPMM(_cfg("gaussian", workers=1, worker_deadline_s=5.0,
+                  max_worker_retries=0)).fit(x, dist_hooks=hooks)
+    assert any(e["kind"] == "worker_failover"
+               for e in ei.value.recoveries)
+
+
+# ---------------------------------------------------------------------------
+# coordinator death + resume
+# ---------------------------------------------------------------------------
+def test_coordinator_sigkill_then_resume_bitwise(tmp_path):
+    """SIGKILL the *coordinator* mid-distributed-fit (right after a
+    rotation save — workers die with it via EOF), then resume with
+    --workers still on: the completed chain is bitwise the clean
+    single-process run."""
+    x, _ = _data("gaussian")
+    xpath = str(tmp_path / "x.npy")
+    np.save(xpath, x)
+    pref = str(tmp_path / "kill")
+    child = textwrap.dedent(f"""
+        import os, signal
+        import numpy as np
+        from repro.configs import DPMMConfig
+        from repro.core import checkpoint
+        from repro.core.sampler import DPMM
+
+        saves = [0]
+        real = checkpoint.save_checkpoint
+        def dying_save(*a, **kw):
+            path = real(*a, **kw)
+            saves[0] += 1
+            if saves[0] == 2:
+                os.kill(os.getpid(), signal.SIGKILL)
+            return path
+        checkpoint.save_checkpoint = dying_save
+
+        x = np.load({xpath!r}, mmap_mode="r")
+        cfg = DPMMConfig(component="gaussian", alpha=10.0, iters=8,
+                         k_max={K_MAX}, burnout=2, workers=2,
+                         tile_size={STATS_BLOCK},
+                         checkpoint_path={pref!r}, checkpoint_every=2)
+        DPMM(cfg).fit(x)
+        raise SystemExit("fit survived the SIGKILL - test is broken")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [p for p in ("src", env.get("PYTHONPATH", "")) if p])
+    if "host_platform_device_count" not in env.get("XLA_FLAGS", ""):
+        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                            + " --xla_force_host_platform_device_count=4"
+                            ).strip()
+    proc = subprocess.run([sys.executable, "-c", child], env=env,
+                          capture_output=True, text=True,
+                          cwd=os.path.dirname(os.path.dirname(
+                              os.path.abspath(__file__))))
+    assert proc.returncode == -signal.SIGKILL, (proc.returncode,
+                                                proc.stdout, proc.stderr)
+    members = ckpt.list_checkpoints(pref)
+    assert members and members[0][0] == 4    # died right after saving it=4
+    resumed = DPMM(_cfg("gaussian", workers=2, checkpoint_path=pref,
+                        checkpoint_every=2)).fit(x, iters=8, resume=True)
+    full = _single("gaussian", x, iters=8)
+    # resume contract (same as tests/test_resilience.py): labels + final
+    # state are bitwise the uninterrupted chain; the resumed history only
+    # covers the REMAINING iterations, so it must equal the clean tail
+    assert np.array_equal(resumed.labels, full.labels)
+    for key in full.history:
+        n_resumed = len(resumed.history[key])
+        assert np.array_equal(resumed.history[key],
+                              full.history[key][-n_resumed:]), (
+            f"resumed history[{key}] != clean tail")
+    for name in ("stats", "substats"):
+        for la, lb in zip(
+                jax.tree_util.tree_leaves(getattr(resumed.state, name)),
+                jax.tree_util.tree_leaves(getattr(full.state, name))):
+            assert np.array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# config + CLI plumbing
+# ---------------------------------------------------------------------------
+def test_workers_config_validation():
+    with pytest.raises(ValueError, match="workers"):
+        DPMMConfig(workers=0)
+    with pytest.raises(ValueError, match="k_max"):
+        DPMMConfig(workers=2, k_max="auto")
+    with pytest.raises(ValueError, match="shard_features"):
+        DPMMConfig(workers=2, shard_features=True)
+    with pytest.raises(ValueError, match="worker_deadline_s"):
+        DPMMConfig(workers=2, worker_deadline_s=0.0)
+    with pytest.raises(ValueError, match="max_worker_retries"):
+        DPMMConfig(workers=2, max_worker_retries=-1)
+
+
+def test_workers_rejects_multichain():
+    x, _ = _data("gaussian", n=1024)
+    with pytest.raises(ValueError, match="n_chains"):
+        DPMM(_cfg("gaussian", workers=2)).fit(x, n_chains=2)
+
+
+def test_cli_workers_end_to_end(tmp_path):
+    from repro.launch import sample_dpmm
+    xpath = str(tmp_path / "x.npy")
+    x, _ = _data("gaussian")
+    np.save(xpath, x)
+    params = str(tmp_path / "params.json")
+    with open(params, "w") as f:
+        json.dump({"k_max": K_MAX, "burnout": 2, "iters": 3,
+                   "alpha": 10.0}, f)
+    out = str(tmp_path / "result.json")
+    sample_dpmm.main(["--data-path", xpath, "--workers", "2",
+                      "--tile-size", str(STATS_BLOCK),
+                      "--params-path", params, "--result-path", out])
+    with open(out) as f:
+        res = json.load(f)
+    assert res["dist"]["workers"] == 2
+    assert res["dist"]["shard_ranges"][0][0] == 0
+    assert res["dist"]["shard_ranges"][-1][1] == N
+    assert res["recoveries"] == []
+    assert len(res["labels"]) == N

@@ -211,10 +211,16 @@ def test_read_block_checked_retries_and_reports():
                               RetryPolicy(max_retries=3, backoff_s=0.0),
                               on_event=events.append)
     assert rows.shape == (32, 2)
+    # two per-attempt fault events, then one recovered-read summary event
+    # (io_retry) with the total attempt count for the range
+    assert [e["kind"] for e in events] == ["tile_read_fault",
+                                           "tile_read_fault", "io_retry"]
     # IOError is an alias of OSError on py3 — the report says OSError
-    assert [e["detail"].split(":")[0] for e in events] == ["OSError",
-                                                           "short read"]
-    assert all(e["kind"] == "tile_read_fault" for e in events)
+    assert [e["detail"].split(":")[0]
+            for e in events
+            if e["kind"] == "tile_read_fault"] == ["OSError", "short read"]
+    assert events[-1]["rows"] == [0, 32]
+    assert events[-1]["attempts"] == 3
 
 
 def test_retry_exhaustion_has_tile_provenance(x):
@@ -241,8 +247,11 @@ def test_transient_faults_leave_tiled_chain_bitwise(x):
                                p_nan=0.05, p_short=0.05)
     faulted = DPMM(cfg).fit(src)
     assert src.injected, "schedule injected nothing — raise probabilities"
-    assert faulted.recoveries and all(
-        e["kind"] == "tile_read_fault" for e in faulted.recoveries)
+    kinds = {e["kind"] for e in faulted.recoveries}
+    assert faulted.recoveries and kinds <= {"tile_read_fault", "io_retry"}
+    # every recovered read logs an io_retry summary alongside the
+    # per-attempt events
+    assert "io_retry" in kinds
     _assert_same_chain(clean, faulted)
     assert clean.recoveries == []
 
