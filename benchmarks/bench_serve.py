@@ -1,22 +1,38 @@
-"""DPMM serving throughput: queries/sec through the precompiled engine.
+"""DPMM serving: throughput, per-request latency percentiles, hot swap.
 
 Fits a small DPGMM, round-trips it through the real checkpoint path
 (core/checkpoint.py — so the bench exercises exactly what production
-serving would load), then measures steady-state throughput of
-``DPMMEngine.query`` at several batch sizes, plus the sampled-assignment
-path. Persists BENCH_serve.json next to BENCH_gibbs.json /
-BENCH_scaling.json so CI's regression gate (benchmarks/check_regression.py)
-tracks serving perf per PR.
+serving would load), then measures:
 
-An accuracy invariant rides along: the engine's soft-assignment
-log-probs are recomputed directly from ``family.loglik`` + the
-renormalized log-weights and compared to f32 ULPs
-(``soft_matches_loglik`` in the JSON) — the serving path must never
-drift from the sampler's likelihood.
+ - **throughput** (queries/sec) of ``DPMMEngine.query`` through
+   single-size engines at several batch sizes, plus the
+   sampled-assignment path — the PR-5 rows, schema unchanged so the
+   committed baseline keeps pairing;
+ - **per-request latency percentiles** (p50/p95/p99) for request sizes
+   256/2048/8192 and a mixed-size trace, answered by (a) the ladder
+   engine (``batch_sizes=(256, 2048, 8192)`` — each request routes to
+   the smallest covering AOT step) and (b) the old-style single-8192
+   engine that pads every request to 8192. The ladder's whole point is
+   that a 256-row request stops paying the 8192 pad: the
+   ``ladder_p50_beats_padded`` invariant pins p50(ladder, 256) strictly
+   below p50(padded, 256) *within the same run* — machine class can't
+   mask it.
+
+Invariants in the JSON (gated by benchmarks/check_regression.py):
+
+ - ``soft_matches_loglik`` — engine soft-assignment log-probs recomputed
+   directly from ``family.loglik`` + renormalized log-weights agree to
+   f32 ULPs; serving never drifts from the sampler's likelihood.
+ - ``swap_staleness_bitwise`` — around ``engine.swap(ckpt_b)``, queries
+   before the flip are bitwise a fresh checkpoint-A engine and queries
+   after are bitwise a fresh checkpoint-B engine (and the epoch bumped):
+   hot swap is atomic, never a blend.
+ - ``ladder_p50_beats_padded`` — the acceptance criterion above.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import json
 import os
 import platform
@@ -28,9 +44,14 @@ import numpy as np
 SERVE_N, SERVE_D, SERVE_K = 20_000, 8, 8
 BATCH_SIZES = (256, 2048, 8192)
 N_QUERIES = 32_768
+# requests per latency-trace leg, keyed by request size (smaller
+# requests get more reps for stable percentiles)
+LATENCY_REQS = {256: 40, 2048: 12, 8192: 6}
+MIXED_TRACE = (256, 2048, 256, 256, 8192, 256, 2048, 256, 256, 2048,
+               256, 8192, 256, 2048, 256, 256)
 
 
-def _build_engine_ckpt(iters: int, tmpdir: str) -> str:
+def _build_ckpts(iters: int, tmpdir: str):
     from repro.configs import DPMMConfig
     from repro.core.checkpoint import save_model
     from repro.core.sampler import DPMM
@@ -39,9 +60,15 @@ def _build_engine_ckpt(iters: int, tmpdir: str) -> str:
     x, _ = generate_gmm(SERVE_N, SERVE_D, SERVE_K, seed=0, sep=8.0)
     cfg = DPMMConfig(alpha=10.0, iters=iters, k_max=32, burnout=5)
     result = DPMM(cfg).fit(x, n_chains=2).select_best()
-    path = os.path.join(tmpdir, "bench_serve_ckpt.npz")
-    save_model(path, result.state, "gaussian")
-    return path
+    path_a = os.path.join(tmpdir, "bench_serve_ckpt.npz")
+    save_model(path_a, result.state, "gaussian")
+    # a second, different model for the hot-swap leg (shorter fit — it
+    # only needs to be a valid state with different bits)
+    cfg_b = dataclasses.replace(cfg, seed=1, iters=max(4, iters // 3))
+    state_b = DPMM(cfg_b).fit(x).state
+    path_b = os.path.join(tmpdir, "bench_serve_ckpt_b.npz")
+    save_model(path_b, state_b, "gaussian")
+    return path_a, path_b
 
 
 def _soft_matches_loglik(engine, xq: np.ndarray) -> bool:
@@ -64,23 +91,94 @@ def _soft_matches_loglik(engine, xq: np.ndarray) -> bool:
         and np.array_equal(res.labels, np.asarray(logits).argmax(axis=1)))
 
 
+def _bitwise(r1, r2) -> bool:
+    return bool(np.array_equal(r1.labels, r2.labels)
+                and np.array_equal(r1.logprobs, r2.logprobs)
+                and np.array_equal(r1.log_predictive, r2.log_predictive))
+
+
+def _swap_staleness_bitwise(ckpt_a: str, ckpt_b: str,
+                            xq: np.ndarray) -> bool:
+    """Hot swap atomicity: pre-swap answers are bitwise a fresh engine
+    on checkpoint A, post-swap bitwise a fresh engine on B."""
+    from repro.serve.dpmm import DPMMEngine, ServeConfig
+
+    cfg = ServeConfig(batch_sizes=(256,))
+    eng = DPMMEngine.from_checkpoint(ckpt_a, cfg)
+    q = xq[:300]
+    pre = eng.query(q)
+    ref_a = DPMMEngine.from_checkpoint(ckpt_a, cfg).query(q)
+    eng.swap(ckpt_b)
+    post = eng.query(q)
+    ref_b = DPMMEngine.from_checkpoint(ckpt_b, cfg).query(q)
+    return (_bitwise(pre, ref_a) and _bitwise(post, ref_b)
+            and post.model_epoch == pre.model_epoch + 1
+            and not np.array_equal(pre.logprobs, post.logprobs))
+
+
+def _requests(xq: np.ndarray, size: int, count: int):
+    """``count`` consecutive ``size``-row slices, wrapping over xq."""
+    out = []
+    pos = 0
+    for _ in range(count):
+        if pos + size > xq.shape[0]:
+            pos = 0
+        out.append(xq[pos:pos + size])
+        pos += size
+    return out
+
+
+def _percentiles(lat_s) -> dict:
+    return {f"p{p}_ms": round(float(np.percentile(lat_s, p)) * 1e3, 3)
+            for p in (50, 95, 99)}
+
+
+def _latency_rows(engines: dict, xq: np.ndarray) -> list:
+    """Per-request latency percentiles per engine, per request size and
+    on the mixed trace — same request slices for every engine."""
+    rows = []
+    traces = [(size, _requests(xq, size, count))
+              for size, count in sorted(LATENCY_REQS.items())]
+    traces.append(("mixed", [q for size in MIXED_TRACE
+                             for q in _requests(xq, size, 1)]))
+    for name, engine in engines.items():
+        for size in sorted(LATENCY_REQS):
+            engine.query(xq[:size])                       # warm the route
+        for size, reqs in traces:
+            lat = []
+            for q in reqs:
+                t0 = time.perf_counter()
+                engine.query(q)
+                lat.append(time.perf_counter() - t0)
+            row = {"path": "latency", "engine": name,
+                   "request_rows": size, "n_requests": len(reqs),
+                   **_percentiles(lat)}
+            rows.append(row)
+            print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
+                  flush=True)
+    return rows
+
+
 def run(iters: int = 20, reps: int = 10,
         out_json: str = "BENCH_serve.json") -> dict:
     import jax
 
-    from repro.serve.dpmm import DPMMEngine
+    from repro.serve.dpmm import DPMMEngine, ServeConfig
 
     rng = np.random.default_rng(1)
     xq = rng.standard_normal((N_QUERIES, SERVE_D)).astype(np.float32)
 
     with tempfile.TemporaryDirectory() as tmpdir:
-        ckpt = _build_engine_ckpt(iters, tmpdir)
+        ckpt, ckpt_b = _build_ckpts(iters, tmpdir)
         rows = []
         invariant = None
+        engines = {}
         for batch in BATCH_SIZES:
             t0 = time.perf_counter()
-            engine = DPMMEngine.from_checkpoint(ckpt, batch_size=batch)
+            engine = DPMMEngine.from_checkpoint(
+                ckpt, ServeConfig(batch_sizes=(batch,)))
             build_s = time.perf_counter() - t0
+            engines[batch] = engine
             if invariant is None:        # once; batch-size independent
                 invariant = _soft_matches_loglik(engine, xq[:4096])
             engine.query(xq[:batch])                    # steady-state
@@ -105,16 +203,35 @@ def run(iters: int = 20, reps: int = 10,
             print("  " + "  ".join(f"{k}={v}" for k, v in row.items()),
                   flush=True)
 
+        # latency leg: the multi-size ladder vs the old-style engine
+        # that pads every request to its single 8192 step. The ladder
+        # shares its executables with the single-size engines above
+        # (process-wide step table), so building it here is cheap.
+        ladder = DPMMEngine.from_checkpoint(
+            ckpt, ServeConfig(batch_sizes=BATCH_SIZES))
+        rows += _latency_rows(
+            {"ladder": ladder, "padded_8192": engines[BATCH_SIZES[-1]]},
+            xq)
+        lat = {(r["engine"], r["request_rows"]): r
+               for r in rows if r.get("path") == "latency"}
+        ladder_wins = bool(lat[("ladder", 256)]["p50_ms"]
+                           < lat[("padded_8192", 256)]["p50_ms"])
+
+        swap_ok = _swap_staleness_bitwise(ckpt, ckpt_b, xq)
+
     payload = {
         "bench": "serve",
         "backend": jax.default_backend(),
         "host": platform.platform(),
         "config": {"component": "gaussian", "fit_N": SERVE_N,
                    "d": SERVE_D, "K_true": SERVE_K, "k_max": 32,
-                   "fit_iters": iters, "n_queries": N_QUERIES},
+                   "fit_iters": iters, "n_queries": N_QUERIES,
+                   "ladder": list(BATCH_SIZES)},
         "results": rows,
         "invariants": {"soft_matches_loglik": invariant,
-                       "engine_from_checkpoint": True},
+                       "engine_from_checkpoint": True,
+                       "swap_staleness_bitwise": swap_ok,
+                       "ladder_p50_beats_padded": ladder_wins},
     }
     with open(out_json, "w") as f:
         json.dump(payload, f, indent=2)

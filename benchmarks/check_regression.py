@@ -248,13 +248,49 @@ def check_scaling(gate: Gate, fresh: dict, base: dict) -> None:
                    f"got {fo.get('n_failover_events')}")
 
 
+def _latency_row(payload: dict, engine, request_rows) -> Optional[dict]:
+    for row in payload.get("results") or []:
+        if (row.get("path") == "latency" and row.get("engine") == engine
+                and row.get("request_rows") == request_rows):
+            return row
+    return None
+
+
 def check_serve(gate: Gate, fresh: dict, base: dict) -> None:
     print("BENCH_serve.json:")
     inv = fresh.get("invariants") or {}
     gate.invariant("serve soft_matches_loglik",
                    inv.get("soft_matches_loglik") is True,
                    f"got {inv.get('soft_matches_loglik')}")
+    # hot swap atomicity: always read from the FRESH payload — a stale
+    # baseline must never vouch for this run's swap path
+    gate.invariant("serve swap_staleness_bitwise",
+                   inv.get("swap_staleness_bitwise") is True,
+                   f"got {inv.get('swap_staleness_bitwise')}")
+    # the ladder's acceptance criterion, as a within-run sign pair
+    # (same machine, same run — runner class cannot mask or fake it):
+    # a 256-row request through the multi-size ladder must beat the
+    # old-style engine that pads it to 8192
+    lad = _latency_row(fresh, "ladder", 256)
+    pad = _latency_row(fresh, "padded_8192", 256)
+    if lad is None or pad is None:
+        gate.invariant("serve ladder vs padded latency rows present",
+                       False, f"ladder={lad}, padded={pad}")
+    else:
+        gate.invariant(
+            "serve ladder_p50_beats_padded (within-run, 256-row)",
+            lad.get("p50_ms", float("inf")) < pad.get("p50_ms", 0.0),
+            f"ladder p50 {lad.get('p50_ms')} ms vs padded "
+            f"{pad.get('p50_ms')} ms")
     for brow in base.get("results") or []:
+        if brow.get("path") == "latency":
+            frow = _latency_row(fresh, brow.get("engine"),
+                                brow.get("request_rows"))
+            gate.slower(
+                f"serve latency[{brow.get('engine')}, "
+                f"req={brow.get('request_rows')}] p50_ms",
+                (frow or {}).get("p50_ms"), brow.get("p50_ms"))
+            continue
         batch = brow.get("batch_size")
         frow = _row(fresh, "batch_size", batch)
         gate.faster(f"serve[batch={batch}] queries_per_s",

@@ -348,3 +348,32 @@ def latest_valid(prefix: str
             + "; ".join(corrupt))
     raise CheckpointNotFound(
         f"no checkpoint members matching {prefix!r}-########.npz")
+
+
+def resolve_model(path: str
+                  ) -> Tuple[ModelState, ComponentFamily, str, int]:
+    """Load a model from ``path`` interpreted as EITHER a single
+    checkpoint file or an auto-checkpoint rotation prefix — the one
+    resolution rule shared by the serving layer's ``from_checkpoint``
+    and ``engine.swap`` (serve/dpmm.py), so both accept exactly what a
+    fit writes (``checkpoint_path``) without the caller knowing which
+    flavor it was.
+
+    A plain file loads directly; otherwise the newest rotation member
+    that *verifies* is used (:func:`latest_valid` — a torn or corrupt
+    newest member falls back through the rotation). Returns
+    ``(model, family, resolved_path, it)`` where ``resolved_path`` is
+    the actual file served and ``it`` its iteration counter. Raises
+    :class:`CheckpointCorrupt` for a named file that fails verification
+    (refusing to serve garbage beats guessing) and
+    :class:`CheckpointNotFound` when neither interpretation matches.
+    """
+    try:
+        model, family = load_model(path)
+    except CheckpointNotFound:
+        if not list_checkpoints(path):
+            raise
+        return latest_valid(path)
+    it = int(np.max(np.asarray(jax.device_get(model.it))))
+    resolved = path if os.path.exists(path) else normalize_path(path)
+    return model, family, resolved, it

@@ -354,3 +354,53 @@ def sweep(model: ModelState, point: PointState, x: jax.Array, prior, family,
     plan = compaction_plan(model.active, k_compact)
     return jax.lax.cond(model.k_hat <= k_compact,
                         lambda: run(plan), lambda: run(None))
+
+
+def refine_sweep(model: ModelState, x: jax.Array, valid: jax.Array,
+                 prior, family, alpha: float, *, decay: float,
+                 use_pallas: bool = False,
+                 k_block: Optional[int] = None
+                 ) -> Tuple[ModelState, jax.Array]:
+    """One ONLINE micro-batch sweep: steps (a)-(f) on a batch of fresh
+    points, folded into the model as an exponentially decayed suff-stat
+    update — the serving layer's refinement body (serve/dpmm.py).
+
+    The fit's sweep recomputes stats from ALL points each iteration; at
+    serve time the training set is gone and the batch is a stream sample,
+    so instead of replacing the stats we blend:
+
+        stats <- decay * stats + batch_stats
+
+    i.e. the posterior tracks an exponentially weighted window of
+    traffic (effective mass ~ batch / (1 - decay)), and the model drifts
+    toward the live distribution instead of jumping to whatever the last
+    micro-batch looked like. Steps (a)-(d) are the standard O(K)
+    resample (so weights/params stay posterior draws under the blended
+    stats), steps (e)/(f) run the real ``sweep_tile`` body on the batch
+    (``valid`` masks padded rows out of the fold). The active set is
+    FIXED — no split/merge proposals on traffic; refinement tracks
+    drift within the discovered clusters, a swap installs new structure.
+
+    Per-point randomness is counter-based on the batch row index, and
+    the (key, it) pair drives the sweep keys exactly like a fit
+    iteration — ``it`` advances per refinement sweep, so successive
+    micro-batches draw fresh randomness.
+
+    Returns ``(model, labels)`` — labels in dense slot space.
+    """
+    model = sweep_model(model, prior, family, alpha)
+    k_max = model.active.shape[0]
+    gidx = jnp.arange(x.shape[0], dtype=jnp.uint32)
+    point = PointState(labels=jnp.zeros((x.shape[0],), jnp.int32),
+                       sublabels=jnp.zeros((x.shape[0],), jnp.int32),
+                       valid=valid.astype(jnp.float32))
+    acc = empty_substats(family, k_max, x.shape[-1])
+    point, acc = sweep_tile(model, x, point, gidx, acc, family,
+                            use_pallas=use_pallas, k_block=k_block)
+    batch_stats, batch_substats = finalize_substats(family, acc, ())
+    w = jnp.float32(decay)
+    blend = lambda old, new: jax.tree.map(
+        lambda o, b: (w * o + b).astype(o.dtype), old, new)
+    return model._replace(stats=blend(model.stats, batch_stats),
+                          substats=blend(model.substats, batch_substats),
+                          it=model.it + 1), point.labels

@@ -8,51 +8,82 @@
     PYTHONPATH=src python -m repro.launch.serve_dpmm \
         --checkpoint model.npz --queries q.npy --result-path out.json
 
-Answers per query row: hard cluster label, per-cluster log-probabilities
-(soft assignment), and the log predictive density (outlier score). With
-``--bench`` it instead reports steady-state throughput (queries/sec)
-through the engine's precompiled fixed-batch step. Without ``--queries``
-a synthetic batch matching the checkpoint's feature dim is drawn — a
-smoke mode for CI and demos.
+``--checkpoint`` accepts a single npz OR an auto-checkpoint rotation
+prefix (the newest verifying member serves). ``--batch-sizes`` is the
+AOT ladder — every size precompiles at startup and each request routes
+to the smallest covering step (serve/dpmm.py).
+
+The JSON written to ``--result-path`` is exactly
+``ServeResult.to_json()`` — the CLI and the Python API emit the same
+schema, field for field. With ``--bench`` it instead reports
+steady-state throughput plus per-request latency percentiles through
+the ladder. Without ``--queries`` a synthetic batch matching the
+checkpoint's feature dim is drawn — a smoke mode for CI and demos.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import time
+import warnings
 
 import numpy as np
+
+
+def _parse_sizes(text: str):
+    try:
+        return tuple(int(tok) for tok in text.split(",") if tok.strip())
+    except ValueError:
+        raise SystemExit(f"--batch-sizes expects comma-separated ints, "
+                         f"got {text!r}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--checkpoint", required=True,
-                    help="ModelState npz written by core/checkpoint.py "
-                         "(e.g. sample_dpmm --checkpoint-path)")
+                    help="ModelState npz (or rotation prefix) written by "
+                         "core/checkpoint.py")
     ap.add_argument("--queries", default="",
                     help=".npy (N, d) query rows; default: synthetic")
     ap.add_argument("--n", type=int, default=10_000,
                     help="synthetic query count when --queries is unset")
-    ap.add_argument("--batch-size", "--batch_size", type=int, default=2048)
+    ap.add_argument("--batch-sizes", "--batch_sizes", default="",
+                    help="comma-separated ascending AOT ladder, e.g. "
+                         "256,2048,8192 (ServeConfig default when unset)")
+    ap.add_argument("--batch-size", "--batch_size", type=int, default=None,
+                    help="DEPRECATED: single AOT size; use --batch-sizes")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--sample", action="store_true",
                     help="also draw a sampled (Gumbel) assignment per row")
+    ap.add_argument("--include-logprobs", action="store_true",
+                    help="include the (N, K_max) soft assignment in the "
+                         "result JSON")
     ap.add_argument("--result-path", "--result_path", default="")
     ap.add_argument("--bench", action="store_true",
-                    help="measure throughput instead of dumping answers")
+                    help="measure throughput/latency instead of dumping "
+                         "answers")
     ap.add_argument("--bench-reps", type=int, default=20)
     args = ap.parse_args(argv)
 
-    from repro.serve.dpmm import DPMMEngine
+    from repro.serve.dpmm import DPMMEngine, ServeConfig
+
+    fields = {"use_pallas": args.use_pallas, "seed": args.seed}
+    if args.batch_size is not None:
+        if args.batch_sizes:
+            raise SystemExit("pass --batch-sizes OR --batch-size, not both")
+        warnings.warn("--batch-size is deprecated; use --batch-sizes",
+                      DeprecationWarning)
+        fields["batch_sizes"] = (args.batch_size,)
+    elif args.batch_sizes:
+        fields["batch_sizes"] = _parse_sizes(args.batch_sizes)
+    cfg = ServeConfig(**fields)
 
     t0 = time.time()
-    engine = DPMMEngine.from_checkpoint(
-        args.checkpoint, batch_size=args.batch_size,
-        use_pallas=args.use_pallas, seed=args.seed)
-    print(f"engine up in {time.time() - t0:.2f}s: family={engine.family.name} "
-          f"d={engine.d} k_max={engine.k_max} batch={engine.batch_size} "
-          f"(step precompiled)")
+    engine = DPMMEngine.from_checkpoint(args.checkpoint, cfg)
+    print(f"engine up in {time.time() - t0:.2f}s: "
+          f"family={engine.family.name} d={engine.d} k_max={engine.k_max} "
+          f"ladder={engine.batch_sizes} (all steps precompiled)")
 
     if args.queries:
         xq = np.asarray(np.load(args.queries), np.float32)
@@ -62,36 +93,33 @@ def main(argv=None):
         print(f"no --queries: serving {args.n} synthetic rows")
 
     if args.bench:
-        engine.query(xq[: args.batch_size])          # warm (already AOT)
+        engine.query(xq[: engine.batch_sizes[0]])    # warm (already AOT)
+        lat = []
         t0 = time.perf_counter()
         for _ in range(args.bench_reps):
+            t1 = time.perf_counter()
             engine.query(xq)
+            lat.append(time.perf_counter() - t1)
         dt = (time.perf_counter() - t0) / args.bench_reps
         qps = xq.shape[0] / dt
+        p50, p95, p99 = (float(np.percentile(lat, p) * 1e3)
+                         for p in (50, 95, 99))
         print(f"throughput: {qps:,.0f} queries/s "
-              f"({dt * 1e3:.2f} ms per {xq.shape[0]}-row request)")
+              f"({dt * 1e3:.2f} ms per {xq.shape[0]}-row request; "
+              f"p50={p50:.2f} p95={p95:.2f} p99={p99:.2f} ms)")
         return
 
     t0 = time.perf_counter()
-    res = engine.query(xq)
+    res = engine.query(xq, sample=args.sample, seed=args.seed)
     dt = time.perf_counter() - t0
-    counts = np.bincount(res.labels, minlength=engine.k_max)
-    used = np.flatnonzero(counts)
     print(f"served {xq.shape[0]} queries in {dt * 1e3:.1f} ms "
-          f"({xq.shape[0] / dt:,.0f} q/s): {used.size} clusters hit, "
+          f"({xq.shape[0] / dt:,.0f} q/s): "
+          f"{len(res.cluster_counts())} clusters hit, "
           f"mean log p(x) = {res.log_predictive.mean():.3f}")
-    out = {
-        "labels": res.labels.tolist(),
-        "log_predictive": res.log_predictive.tolist(),
-        "cluster_counts": {int(k): int(counts[k]) for k in used},
-        "family": engine.family.name,
-        "k_max": engine.k_max,
-    }
-    if args.sample:
-        out["sampled_labels"] = engine.sample(xq, seed=args.seed).tolist()
     if args.result_path:
         with open(args.result_path, "w") as f:
-            json.dump(out, f)
+            json.dump(res.to_json(include_logprobs=args.include_logprobs),
+                      f)
         print(f"wrote {args.result_path}")
 
 

@@ -1,5 +1,20 @@
+"""Serving surfaces: the LM generator scaffold and the DPMM engine.
+
+``from repro.serve import DPMMEngine, ServeConfig`` works without
+eagerly importing the sampler stack into the LM serving path (and vice
+versa): the DPMM names resolve lazily via module ``__getattr__`` on
+first touch.
+"""
 from repro.serve.engine import Generator, make_serve_step, serve_step  # noqa: F401
 
-# DPMM serving lives in repro.serve.dpmm (DPMMEngine, ServeResult); it is
-# intentionally NOT imported here so `import repro.serve` for the LM path
-# does not pull in the sampler stack (and vice versa).
+_DPMM_EXPORTS = ("DPMMEngine", "ServeConfig", "ServeResult",
+                 "InvalidQueryError", "PublishRejected")
+
+__all__ = ["Generator", "make_serve_step", "serve_step", *_DPMM_EXPORTS]
+
+
+def __getattr__(name):
+    if name in _DPMM_EXPORTS:
+        from repro.serve import dpmm
+        return getattr(dpmm, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

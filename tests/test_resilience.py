@@ -44,7 +44,8 @@ from repro.core.resilience import (DivergenceError, RetryPolicy,
 from repro.core.sampler import DPMM
 from repro.data.faults import FaultInjectingSource
 from repro.data.source import HostTiledSource
-from repro.serve.dpmm import DPMMEngine, InvalidQueryError
+from repro.serve.dpmm import (DPMMEngine, InvalidQueryError,
+                              ServeConfig)
 
 N, D, K_MAX = 384, 4, 16
 
@@ -437,7 +438,7 @@ def test_sigkill_mid_fit_then_resume_is_bitwise(tmp_path, x):
 # ---------------------------------------------------------------------------
 def test_engine_validates_queries(tmp_path, x):
     r = DPMM(_cfg(iters=4)).fit(x)
-    eng = DPMMEngine(r.state, "gaussian", batch_size=64)
+    eng = DPMMEngine(r.state, "gaussian", ServeConfig(batch_sizes=(64,)))
     q = x[:8].copy()
     assert eng.predict(q).shape == (8,)
     q[3, 1] = np.nan
@@ -448,8 +449,9 @@ def test_engine_validates_queries(tmp_path, x):
     # InvalidQueryError is a ValueError: existing callers keep working
     assert issubclass(InvalidQueryError, ValueError)
     # opt-out for trusted pipelines
-    lax = DPMMEngine(r.state, "gaussian", batch_size=64,
-                     validate_queries=False)
+    lax = DPMMEngine(r.state, "gaussian",
+                     ServeConfig(batch_sizes=(64,),
+                                 validate_queries=False))
     assert np.isnan(lax.log_predictive(q)[3])
 
 
@@ -466,14 +468,14 @@ def test_engine_loads_from_rotation_prefix(tmp_path, x):
     pref = str(tmp_path / "serve")
     cfg = _cfg(checkpoint_path=pref, checkpoint_every=4)
     r = DPMM(cfg).fit(x, iters=8)
-    eng = DPMMEngine.from_checkpoint(pref, batch_size=64)
-    direct = DPMMEngine(r.state, "gaussian", batch_size=64)
+    eng = DPMMEngine.from_checkpoint(pref, ServeConfig(batch_sizes=(64,)))
+    direct = DPMMEngine(r.state, "gaussian", ServeConfig(batch_sizes=(64,)))
     np.testing.assert_array_equal(eng.predict(x[:32]),
                                   direct.predict(x[:32]))
     # newest member corrupt -> serves the previous one, not garbage
     newest = ckpt.list_checkpoints(pref)[0][1]
     open(newest, "wb").write(b"garbage")
-    eng2 = DPMMEngine.from_checkpoint(pref, batch_size=64)
+    eng2 = DPMMEngine.from_checkpoint(pref, ServeConfig(batch_sizes=(64,)))
     assert eng2.predict(x[:32]).shape == (32,)
     with pytest.raises(CheckpointNotFound):
         DPMMEngine.from_checkpoint(str(tmp_path / "missing"))

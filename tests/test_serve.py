@@ -17,7 +17,7 @@ from repro.core.family import NEG_INF, get_family
 from repro.core.sampler import DPMM
 from repro.data.synthetic import generate_gmm
 from repro.kernels import prng
-from repro.serve.dpmm import DPMMEngine
+from repro.serve import DPMMEngine, ServeConfig
 
 N, D, K = 3000, 4, 4
 
@@ -36,7 +36,7 @@ def test_soft_assignment_matches_family_loglik(fitted):
     """The acceptance contract: engine soft-assignment == the assignment
     log-probs computed straight from family.loglik, to f32 ULPs."""
     result, xq, _ = fitted
-    engine = DPMMEngine(result.state, "gaussian", batch_size=512)
+    engine = DPMMEngine(result.state, "gaussian", ServeConfig(batch_sizes=(512,)))
     res = engine.query(xq)
     fam = get_family("gaussian")
     ll = fam.loglik(jnp.asarray(xq), result.state.params)
@@ -61,7 +61,7 @@ def test_batching_is_invisible(fitted):
     """Ragged tails are padded to the fixed compiled batch shape; the
     padding must never leak — any batch size gives the same answers."""
     result, xq, _ = fitted
-    engines = [DPMMEngine(result.state, "gaussian", batch_size=b)
+    engines = [DPMMEngine(result.state, "gaussian", ServeConfig(batch_sizes=(b,)))
                for b in (256, 1200, 4096)]   # 1200 = exact, others ragged
     results = [e.query(xq) for e in engines]
     for other in results[1:]:
@@ -77,7 +77,7 @@ def test_predict_quality_and_outlier_scoring(fitted):
     """Served hard labels recover the generating clusters on held-out
     data; far-away points score lower predictive density."""
     result, xq, gtq = fitted
-    engine = DPMMEngine(result.state, "gaussian", batch_size=512)
+    engine = DPMMEngine(result.state, "gaussian", ServeConfig(batch_sizes=(512,)))
     from repro.core.metrics import nmi
     served_nmi = float(nmi(jnp.asarray(gtq),
                            jnp.asarray(engine.predict(xq)), K, 16))
@@ -93,8 +93,8 @@ def test_checkpoint_engine_identical(fitted, tmp_path):
     result, xq, _ = fitted
     path = str(tmp_path / "m.npz")
     save_model(path, result.state, "gaussian")
-    mem = DPMMEngine(result.state, "gaussian", batch_size=512)
-    ckpt = DPMMEngine.from_checkpoint(path, batch_size=512)
+    mem = DPMMEngine(result.state, "gaussian", ServeConfig(batch_sizes=(512,)))
+    ckpt = DPMMEngine.from_checkpoint(path, ServeConfig(batch_sizes=(512,)))
     a, b = mem.query(xq), ckpt.query(xq)
     assert np.array_equal(a.labels, b.labels)
     assert np.array_equal(a.logprobs, b.logprobs)
@@ -105,7 +105,8 @@ def test_sample_reuses_sweep_assignment(fitted):
     """engine.sample is the sweep's step (e) verbatim: counter-based
     Gumbel argmax through family.assign with gidx = query row index."""
     result, xq, _ = fitted
-    engine = DPMMEngine(result.state, "gaussian", batch_size=xq.shape[0])
+    engine = DPMMEngine(result.state, "gaussian",
+                        ServeConfig(batch_sizes=(int(xq.shape[0]),)))
     drawn = engine.sample(xq, seed=3)
     fam = get_family("gaussian")
     gidx = jnp.arange(xq.shape[0], dtype=jnp.uint32)
@@ -143,8 +144,9 @@ def test_engine_guardrails(fitted):
     with pytest.raises(ValueError, match="single-chain"):
         DPMMEngine(multi, "gaussian")
     with pytest.raises(ValueError, match="batch_size"):
-        DPMMEngine(result.state, "gaussian", batch_size=0)
-    engine = DPMMEngine(result.state, "gaussian", batch_size=64)
+        DPMMEngine(result.state, "gaussian",
+                   ServeConfig(batch_sizes=(0,)))
+    engine = DPMMEngine(result.state, "gaussian", ServeConfig(batch_sizes=(64,)))
     with pytest.raises(ValueError, match="queries must be"):
         engine.predict(np.zeros((10, D + 1), np.float32))
 
@@ -162,11 +164,11 @@ def test_serve_cli_roundtrip(fitted, tmp_path, capsys):
     np.save(qpath, xq[:200])
     out = str(tmp_path / "out.json")
     serve_dpmm.main(["--checkpoint", ckpt, "--queries", qpath,
-                     "--batch-size", "128", "--result-path", out])
+                     "--batch-sizes", "128", "--result-path", out])
     with open(out) as f:
         payload = json.load(f)
     assert len(payload["labels"]) == 200
     assert payload["family"] == "gaussian"
-    engine = DPMMEngine(result.state, "gaussian", batch_size=128)
+    engine = DPMMEngine(result.state, "gaussian", ServeConfig(batch_sizes=(128,)))
     assert np.array_equal(np.asarray(payload["labels"], np.int32),
                           engine.predict(xq[:200]))

@@ -1,0 +1,328 @@
+"""Live serving (ISSUE 10): the ladder/step-table engine, hot model
+swap, and online refinement.
+
+ - Ragged dispatch parity: a mixed-size request stream through the AOT
+   ladder is BITWISE the fixed-batch engine per routed segment — the
+   ladder engine and a ``batch_sizes=(b,)`` engine literally run the
+   same compiled executable.
+ - Swap atomicity/staleness: queries concurrent with a swap see exactly
+   the old model's bits or the new model's bits, never a blend.
+ - Refinement: disabled it is chain-neutral (bit-for-bit the static
+   engine); enabled it folds traffic through the real micro-batch sweep,
+   publishes through the swap path, and the ``model_health`` gate keeps
+   a poisoned batch out of production.
+ - The ServeConfig surface: validated construction, deprecation-shim
+   equivalence, CLI/API schema agreement.
+"""
+import dataclasses
+import json
+import threading
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs import DPMMConfig
+from repro.core.checkpoint import resolve_model, save_checkpoint, save_model
+from repro.core.sampler import DPMM
+from repro.data.synthetic import generate_gmm
+from repro.serve import (DPMMEngine, InvalidQueryError, PublishRejected,
+                         ServeConfig, ServeResult)
+
+N, D, K = 1800, 3, 3
+
+
+@pytest.fixture(scope="module")
+def models():
+    """Two different fitted models (A, B) over one mixture + held-out
+    query rows."""
+    x, _ = generate_gmm(N + 600, D, K, seed=0, sep=9.0)
+    cfg = DPMMConfig(alpha=10.0, iters=8, k_max=16, burnout=3)
+    a = DPMM(cfg).fit(x[:N]).state
+    b = DPMM(dataclasses.replace(cfg, seed=1)).fit(x[:N]).state
+    return a, b, np.asarray(x[N:], np.float32)
+
+
+def _same_bits(r1, r2):
+    return (np.array_equal(r1.labels, r2.labels)
+            and np.array_equal(r1.logprobs, r2.logprobs)
+            and np.array_equal(r1.log_predictive, r2.log_predictive))
+
+
+# ---------------------------------------------------------------------------
+# ragged dispatch through the AOT ladder
+# ---------------------------------------------------------------------------
+def test_ragged_dispatch_routes_to_smallest_covering_step(models):
+    a, _, _ = models
+    eng = DPMMEngine(a, "gaussian", ServeConfig(batch_sizes=(64, 256)))
+    # one dispatch at the smallest covering size for requests <= max
+    assert eng.plan_route(1) == [(0, 1, 64)]
+    assert eng.plan_route(64) == [(0, 64, 64)]
+    assert eng.plan_route(65) == [(0, 65, 256)]
+    assert eng.plan_route(256) == [(0, 256, 256)]
+    # oversize requests chunk at the largest step, covering tail
+    assert eng.plan_route(600) == [(0, 256, 256), (256, 256, 256),
+                                   (512, 88, 256)]
+    assert eng.plan_route(0) == []
+
+
+def test_mixed_size_stream_is_bitwise_the_fixed_batch_engine(models):
+    a, _, xq = models
+    ladder = DPMMEngine(a, "gaussian", ServeConfig(batch_sizes=(64, 256)))
+    fixed = {b: DPMMEngine(a, "gaussian", ServeConfig(batch_sizes=(b,)))
+             for b in (64, 256)}
+    for n in (1, 63, 64, 65, 200, 256, 300, 600):
+        q = xq[:n]
+        res = ladder.query(q)
+        segs = ladder.plan_route(n)
+        assert sum(u for _, u, _ in segs) == n
+        for s, u, b in segs:
+            ref = fixed[b].query(q[s:s + u])
+            assert np.array_equal(res.labels[s:s + u], ref.labels)
+            assert np.array_equal(res.logprobs[s:s + u], ref.logprobs)
+            assert np.array_equal(res.log_predictive[s:s + u],
+                                  ref.log_predictive)
+        # sampled draws are counter-based on the request row index, so
+        # they too are invariant to the ladder decomposition
+        assert np.array_equal(ladder.sample(q, seed=7),
+                              fixed[256].sample(q, seed=7))
+    empty = ladder.query(xq[:0])
+    assert empty.n == 0 and empty.logprobs.shape == (0, ladder.k_max)
+
+
+# ---------------------------------------------------------------------------
+# hot model swap
+# ---------------------------------------------------------------------------
+def test_swap_staleness_is_bitwise(models, tmp_path):
+    a, b, xq = models
+    pa = save_model(str(tmp_path / "a"), a, "gaussian")
+    pb = save_model(str(tmp_path / "b"), b, "gaussian")
+    cfg = ServeConfig(batch_sizes=(256,))
+    eng = DPMMEngine.from_checkpoint(pa, cfg)
+    refA = DPMMEngine(a, "gaussian", cfg)
+    refB = DPMMEngine(b, "gaussian", cfg)
+    q = xq[:300]
+    pre = eng.query(q)
+    assert _same_bits(pre, refA.query(q))
+    epoch = eng.swap(pb)
+    post = eng.query(q)
+    assert _same_bits(post, refB.query(q))
+    assert post.model_epoch == epoch == pre.model_epoch + 1
+    assert not np.array_equal(pre.logprobs, post.logprobs)
+    assert [e["kind"] for e in eng.events] == ["model_swap"]
+
+
+def test_concurrent_queries_see_old_or_new_never_a_blend(models, tmp_path):
+    a, b, xq = models
+    pa = save_model(str(tmp_path / "a"), a, "gaussian")
+    pb = save_model(str(tmp_path / "b"), b, "gaussian")
+    cfg = ServeConfig(batch_sizes=(64,))
+    eng = DPMMEngine.from_checkpoint(pa, cfg)
+    q = xq[:200]     # 4 ladder dispatches per request: a blend would show
+    A = DPMMEngine(a, "gaussian", cfg).query(q)
+    B = DPMMEngine(b, "gaussian", cfg).query(q)
+    results, errors, stop = [], [], threading.Event()
+
+    def hammer():
+        try:
+            while not stop.is_set():
+                results.append(eng.query(q))
+        except Exception as e:        # pragma: no cover - fail loudly
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer) for _ in range(2)]
+    for t in threads:
+        t.start()
+    eng.swap(pb)
+    # let some post-swap queries land before stopping
+    deadline = 200
+    while len(results) < 6 and not errors and deadline > 0:
+        threading.Event().wait(0.05)
+        deadline -= 1
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    results.append(eng.query(q))
+    whole = [("A" if _same_bits(r, A) else
+              "B" if _same_bits(r, B) else "blend") for r in results]
+    assert "blend" not in whole, whole
+    assert whole[-1] == "B"
+
+
+def test_swap_defaults_to_checkpoint_prefix_rotation(models, tmp_path):
+    a, b, xq = models
+    pref = str(tmp_path / "rot")
+    save_checkpoint(pref, a, "gaussian", it=4)
+    cfg = ServeConfig(batch_sizes=(256,))
+    eng = DPMMEngine.from_checkpoint(pref, cfg)
+    assert eng.cfg.checkpoint_prefix == pref
+    q = xq[:100]
+    assert _same_bits(eng.query(q), DPMMEngine(a, "gaussian", cfg).query(q))
+    # the fit keeps checkpointing; a bare swap() picks up the newest
+    save_checkpoint(pref, b, "gaussian", it=8)
+    eng.swap()
+    assert _same_bits(eng.query(q), DPMMEngine(b, "gaussian", cfg).query(q))
+    # resolve_model agrees on what was served
+    _, _, resolved, it = resolve_model(pref)
+    assert it == 8 and resolved.endswith("-00000008.npz")
+    with pytest.raises(ValueError, match="checkpoint_prefix"):
+        DPMMEngine(a, "gaussian", cfg).swap()
+
+
+def test_swap_health_gate_rejects_poisoned_checkpoint(models, tmp_path):
+    a, _, xq = models
+    bad = a._replace(logweights=a.logweights.at[0].set(np.nan))
+    pbad = save_model(str(tmp_path / "bad"), bad, "gaussian")
+    eng = DPMMEngine(a, "gaussian", ServeConfig(batch_sizes=(64,)))
+    before = eng.query(xq[:64])
+    with pytest.raises(PublishRejected):
+        eng.swap(pbad)
+    after = eng.query(xq[:64])
+    assert _same_bits(before, after) and after.model_epoch == 0
+    assert eng.events[-1]["kind"] == "model_swap_rejected"
+    # guardrails off: the operator owns the risk
+    lax = DPMMEngine(a, "gaussian",
+                     ServeConfig(batch_sizes=(64,), guardrails=False))
+    assert lax.swap(pbad) == 1
+
+
+# ---------------------------------------------------------------------------
+# online refinement
+# ---------------------------------------------------------------------------
+def test_refinement_disabled_is_chain_neutral(models):
+    a, _, xq = models
+    plain = DPMMEngine(a, "gaussian", ServeConfig(batch_sizes=(256,)))
+    armed = DPMMEngine(a, "gaussian",
+                       ServeConfig(batch_sizes=(256,), refine=True))
+    q = xq[:400]
+    # an armed-but-never-refined engine serves bit-for-bit the static one
+    assert _same_bits(plain.query(q), armed.query(q))
+    assert _same_bits(plain.query(q), armed.query(q))   # and stays put
+    with pytest.raises(ValueError, match="refine=True"):
+        plain.refine()
+
+
+def test_refinement_publishes_through_the_swap_path(models):
+    a, _, xq = models
+    cfg = ServeConfig(batch_sizes=(256,), refine=True, refine_batch=256,
+                      refine_publish_every=1)
+    eng = DPMMEngine(a, "gaussian", cfg)
+    r0 = eng.query(xq[:512])       # also buffers the traffic
+    out = eng.refine()
+    assert out["sweeps"] == 2 and out["rows"] == 512
+    assert out["published"] == 2 and out["rejected"] == 0
+    r1 = eng.query(xq[:512])
+    assert r1.model_epoch == r0.model_epoch + 2
+    assert not np.array_equal(r0.logprobs, r1.logprobs)
+    # the refined model is still a proper mixture over the active set
+    np.testing.assert_allclose(np.exp(r1.logprobs).sum(axis=1), 1.0,
+                               rtol=1e-4)
+    assert set(np.unique(r1.labels)).issubset(set(eng.slots.tolist()))
+    # r1 re-buffered its own traffic; after draining it the buffer is
+    # empty and a further refine is a no-op
+    assert eng.refine()["sweeps"] == 2
+    assert eng.refine()["sweeps"] == 0
+
+
+def test_refinement_health_gate_blocks_poisoned_traffic(models):
+    a, _, xq = models
+    cfg = ServeConfig(batch_sizes=(64,), refine=True, refine_batch=64)
+    eng = DPMMEngine(a, "gaussian", cfg)
+    before = eng.query(xq[:64])
+    # 1e30^2 overflows the f32 sxx stat -> model_health fails the sweep
+    out = eng.refine(x=np.full((64, D), 1e30, np.float32))
+    assert out == {"sweeps": 0, "rows": 0, "rejected": 1, "published": 0,
+                   "epoch": 0}
+    assert eng.events[-1]["kind"] == "refine_rejected"
+    after = eng.query(xq[:64])
+    assert _same_bits(before, after) and after.model_epoch == 0
+    # and the engine still refines cleanly afterwards
+    assert eng.refine(x=xq[:64])["published"] == 1
+
+
+def test_refine_buffer_is_bounded(models):
+    a, _, xq = models
+    cfg = ServeConfig(batch_sizes=(64,), refine=True, refine_batch=64,
+                      refine_buffer=128)
+    eng = DPMMEngine(a, "gaussian", cfg)
+    for i in range(8):
+        eng.query(xq[i * 64:(i + 1) * 64])
+    out = eng.refine(publish=False)
+    assert out["rows"] <= 128 and out["sweeps"] <= 2
+
+
+# ---------------------------------------------------------------------------
+# the ServeConfig surface
+# ---------------------------------------------------------------------------
+def test_serve_config_validates_at_construction():
+    assert ServeConfig(batch_sizes=[64, 256]).batch_sizes == (64, 256)
+    with pytest.raises(ValueError, match="ascending"):
+        ServeConfig(batch_sizes=(256, 64))
+    with pytest.raises(ValueError, match="ascending"):
+        ServeConfig(batch_sizes=(64, 64))
+    with pytest.raises(ValueError, match="at least one"):
+        ServeConfig(batch_sizes=())
+    with pytest.raises(ValueError, match="positive"):
+        ServeConfig(batch_sizes=(0,))
+    with pytest.raises(ValueError, match="positive"):
+        ServeConfig(batch_sizes=(True, 4))
+    with pytest.raises(ValueError, match="refine_decay"):
+        ServeConfig(refine_decay=1.0)
+    with pytest.raises(ValueError, match="refine_batch"):
+        ServeConfig(refine_batch=0)
+    with pytest.raises(ValueError, match="refine_buffer"):
+        ServeConfig(refine_batch=64, refine_buffer=32)
+    with pytest.raises(ValueError, match="checkpoint_prefix"):
+        ServeConfig(checkpoint_prefix=7)
+
+
+def test_deprecation_shims_map_onto_serve_config(models, tmp_path):
+    a, _, xq = models
+    q = xq[:100]
+    new = DPMMEngine(a, "gaussian",
+                     ServeConfig(batch_sizes=(128,), seed=0))
+    with pytest.warns(DeprecationWarning, match="batch_size"):
+        old = DPMMEngine(a, "gaussian", batch_size=128, seed=0)
+    assert old.cfg == new.cfg
+    assert _same_bits(old.query(q), new.query(q))
+    assert np.array_equal(old.sample(q, seed=3), new.sample(q, seed=3))
+    path = save_model(str(tmp_path / "m"), a, "gaussian")
+    with pytest.warns(DeprecationWarning):
+        oldc = DPMMEngine.from_checkpoint(path, batch_size=128)
+    assert _same_bits(oldc.query(q), new.query(q))
+    with pytest.raises(TypeError, match="both"):
+        DPMMEngine(a, "gaussian", ServeConfig(), batch_size=128)
+    with pytest.raises(TypeError, match="unexpected"):
+        DPMMEngine(a, "gaussian", nonsense=1)
+
+
+def test_cli_and_api_agree_on_the_result_schema(models, tmp_path):
+    from repro.launch import serve_dpmm
+
+    a, _, xq = models
+    ckpt = save_model(str(tmp_path / "cli"), a, "gaussian")
+    np.save(str(tmp_path / "q.npy"), xq[:150])
+    out = str(tmp_path / "out.json")
+    serve_dpmm.main(["--checkpoint", ckpt, "--queries",
+                     str(tmp_path / "q.npy"), "--batch-sizes", "64,256",
+                     "--sample", "--seed", "5", "--result-path", out])
+    with open(out) as f:
+        payload = json.load(f)
+    eng = DPMMEngine(a, "gaussian",
+                     ServeConfig(batch_sizes=(64, 256), seed=5))
+    res = eng.query(xq[:150], sample=True, seed=5)
+    assert isinstance(res, ServeResult)
+    api = json.loads(json.dumps(res.to_json()))   # same wire round-trip
+    assert payload == api
+    assert sorted(payload) == ["cluster_counts", "family", "k_max",
+                               "labels", "log_predictive", "model_epoch",
+                               "n", "sampled_labels"]
+
+
+def test_multi_chain_state_still_rejected(models):
+    a, _, _ = models
+    multi = jax.tree.map(lambda v: v[None], a)
+    with pytest.raises(ValueError, match="single-chain"):
+        DPMMEngine(multi, "gaussian", ServeConfig())

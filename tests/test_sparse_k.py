@@ -285,11 +285,11 @@ def test_auto_k_max_rejected_on_tiled_source(tmp_path):
 # ---------------------------------------------------------------------------
 def test_serve_engine_compacts_and_matches_dense_math():
     from repro.core.family import NEG_INF
-    from repro.serve.dpmm import DPMMEngine
+    from repro.serve.dpmm import DPMMEngine, ServeConfig
 
     x, _ = generate_gmm(2048, 3, 4, seed=2, sep=10.0)
     st = DPMM(_cfg("gaussian")).fit(x).state
-    eng = DPMMEngine(st, "gaussian", batch_size=128)
+    eng = DPMMEngine(st, "gaussian", ServeConfig(batch_sizes=(128,)))
     assert eng.k_active == int(np.asarray(st.active).sum())
     assert eng.k_active < eng.k_max       # compaction actually engaged
     q = np.asarray(x[:300])
